@@ -1,0 +1,138 @@
+"""Shared machinery for the paper-figure benchmarks.
+
+``scheme_experiment`` reproduces the motivating experiment of Section
+II-B / Figure 2 and the hybrid-scan comparison of Figure 8: a fixed
+index is populated under FULL / VBP / VAP (plus the paper's
+spike-free decoupled-VBP variant) while a scan workload runs, isolating
+the *population scheme* from any decision logic.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+from repro.bench_db import QueryGen, RunConfig, make_tuner_db
+from repro.bench_db.workloads import Workload
+from repro.core import Database, IndexDescriptor, Query
+
+DEFAULT_ROWS = 20_000
+DEFAULT_PAGE = 256
+TIME_PER_UNIT_MS = 1e-4
+
+
+@dataclass
+class SchemeResult:
+    scheme: str
+    latencies_ms: List[float] = field(default_factory=list)
+    cumulative_ms: float = 0.0
+    built_fraction: List[float] = field(default_factory=list)
+    wall_s: float = 0.0
+
+    def summary(self) -> Dict[str, float]:
+        lat = np.asarray(self.latencies_ms)
+        return {"scheme": self.scheme,
+                "cumulative_ms": round(self.cumulative_ms, 2),
+                "mean_ms": round(float(lat.mean()), 5),
+                "p99_ms": round(float(np.percentile(lat, 99)), 5),
+                "final_ms": round(float(lat[-20:].mean()), 5),
+                "built": round(self.built_fraction[-1], 3),
+                "wall_s": round(self.wall_s, 2)}
+
+
+def scheme_experiment(scheme: str, workload: Workload, db_src,
+                      key_attrs=(1,), units_per_cycle: int = 1024,
+                      tuning_interval_ms: float = 50.0,
+                      time_per_unit_ms: float = TIME_PER_UNIT_MS,
+                      arrival_ms: float = 0.0) -> SchemeResult:
+    """Run ``workload`` while populating one ad-hoc index under the
+    given scheme ('full' | 'vap' | 'vbp' | 'vbp_decoupled' | 'none').
+
+    Every scheme gets the SAME background construction bandwidth
+    (``units_per_cycle`` tuple-touches per tuning cycle) so the
+    comparison isolates *when the index becomes usable*:
+
+    * FULL accrues the budget silently; the index flips usable only
+      once the whole build is paid for (online indexing).
+    * VAP applies the budget page-by-page; the hybrid scan exploits the
+      indexed prefix immediately.
+    * VBP populates the queried sub-domain synchronously inside the
+      triggering query (latency spike); background budget unused.
+    * VBP-decoupled queues sub-domains and populates them with the
+      background budget (the spike-free variant of Section VI-B).
+    """
+    db = Database(dict(db_src.tables), time_per_unit_ms=time_per_unit_ms)
+    table = workload.items[0][1].table
+    t_tbl = db.tables[table]
+    res = SchemeResult(scheme)
+    bi = None
+    if scheme in ("full", "vap"):
+        bi = db.create_index(IndexDescriptor(table, tuple(key_attrs)),
+                             scheme="full" if scheme == "full" else "vap")
+    elif scheme in ("vbp", "vbp_decoupled"):
+        bi = db.create_index(IndexDescriptor(table, tuple(key_attrs)),
+                             scheme="vbp")
+    next_cycle = tuning_interval_ms
+    pending: List = []             # decoupled-VBP population queue
+    full_units_accrued = 0.0
+    full_units_needed = float(int(t_tbl.n_rows))
+    page_size = t_tbl.page_size
+    idle_ms_accum = 0.0
+    # the tuner converts idle time into extra build budget (Section V:
+    # "characterizes the tuner's ability to leverage idle resources");
+    # half a core's worth of tuple-touches per idle millisecond.
+    idle_units_per_ms = 0.5 / time_per_unit_ms
+
+    t0 = time.perf_counter()
+    for _, q in workload:
+        # background tuning cycles: base budget + idle-time boost
+        while db.clock_ms >= next_cycle:
+            budget = units_per_cycle + idle_ms_accum * idle_units_per_ms
+            idle_ms_accum = 0.0
+            if scheme == "vap" and bi.building:
+                pages = max(int(budget) // page_size, 1)
+                db.vap_build_step(bi, pages)
+            elif scheme == "full" and bi.building:
+                full_units_accrued += budget
+                if full_units_accrued >= full_units_needed:
+                    db.vap_build_step(bi, t_tbl.n_pages)  # flip complete
+            elif scheme == "vbp_decoupled" and pending:
+                probe = pending[0]
+                db.vbp_populate(bi, probe, max_add=max(int(budget), 1))
+                lo, hi = db._vbp_host_bounds(bi, probe)
+                if bi.cov_union.covers(lo, hi):
+                    pending.pop(0)
+            next_cycle += tuning_interval_ms
+
+        stats = db.execute(q)
+        lat = stats.latency_ms
+        if scheme == "vbp" and q.kind == "scan" and not stats.used_index:
+            # immediate value-based population: charged to this query
+            work = db.vbp_populate(bi, q, max_add=t_tbl.capacity)
+            lat += work * time_per_unit_ms
+            db.clock_ms += work * time_per_unit_ms
+        elif scheme == "vbp_decoupled" and q.kind == "scan" \
+                and not stats.used_index:
+            lo, hi = db._vbp_host_bounds(bi, q)
+            if not bi.cov_union.covers(lo, hi) and q not in pending:
+                pending.append(q)
+        res.latencies_ms.append(lat)
+        res.cumulative_ms += lat
+        res.built_fraction.append(
+            bi.built_fraction(db.tables[table]) if bi else 0.0)
+        if arrival_ms > 0.0 and lat < arrival_ms:
+            # open-loop client: the next request arrives on a fixed
+            # cadence; the gap is idle time the background tuner rides.
+            db.clock_ms += arrival_ms - lat
+            idle_ms_accum += arrival_ms - lat
+    res.wall_s = time.perf_counter() - t0
+    return res
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The run.py CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+    sys.stdout.flush()

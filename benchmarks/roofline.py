@@ -1,0 +1,131 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Reads benchmarks/dryrun/*.json (written by repro.launch.dryrun) and
+derives, per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs      [s]
+    memory term     = HLO_bytes_per_device / HBM_bw          [s]
+    collective term = collective_bytes_per_device / link_bw  [s]
+
+plus the dominant bottleneck, MODEL_FLOPS / HLO_FLOPs (useful-compute
+ratio; catches remat/redundancy waste) and the roofline fraction
+(ideal compute time / dominant term) -- the number the perf loop
+drives up.
+
+Hardware model: TPU v5e-class chip -- 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (constants from the assignment).
+
+Caveats recorded with the numbers:
+* cost_analysis bytes come from the CPU-backend compile, i.e. WITHOUT
+  TPU fusion; the memory term is therefore an upper bound and is used
+  RELATIVELY (before/after an optimisation), not absolutely.
+* collective bytes sum the RESULT shapes of partitioned collective
+  ops (exact for all-reduce; post-gather size for all-gather).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s
+LINK_BW = 50e9          # bytes/s/link
+
+DIR = pathlib.Path(__file__).resolve().parent / "dryrun"
+
+
+def load(mesh: str = "16x16"):
+    recs = []
+    for p in sorted(DIR.glob(f"*_{mesh}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def _ideal_bytes(rec) -> float:
+    """Lower-bound memory traffic for the step: weights in bf16 once
+    (+ KV cache read for decode, + grads/opt traffic for train)."""
+    n_active = rec["params_active"]
+    if rec["kind"] == "train":
+        # read bf16 weights, read+write grads, touch opt moments
+        return 2 * n_active + 3 * 4 * n_active
+    base = 2 * n_active
+    if rec["kind"] == "decode":
+        try:
+            from repro.configs import SHAPES, get_config
+            cfg = get_config(rec["arch"])
+            seq, gbatch, _ = SHAPES[rec["shape"]]
+            s_ctx = min(seq, cfg.sliding_window) if cfg.sliding_window \
+                else seq
+            if cfg.family != "ssm":
+                base += (2 * cfg.n_layers * gbatch * s_ctx
+                         * cfg.n_kv_heads * cfg.hd * 2)
+        except Exception:
+            pass
+    return base
+
+
+def terms(rec):
+    n = rec["n_chips"]
+    compute = rec["hlo_flops"] / PEAK_FLOPS          # per-device program
+    memory = rec["hlo_bytes"] / HBM_BW
+    coll = rec["collective_total"] / LINK_BW
+    # bound-aware ideal: decode is legitimately memory-bound (the cache
+    # must be read per token), so the roofline reference is
+    # max(compute bound, minimal-bytes bound)
+    ideal_c = rec["model_flops"] / n / PEAK_FLOPS
+    ideal_m = _ideal_bytes(rec) / n / HBM_BW
+    ideal = max(ideal_c, ideal_m)
+    dom_name, dom = max(
+        (("compute", compute), ("memory", memory), ("collective", coll)),
+        key=lambda kv: kv[1])
+    return {
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": dom_name, "dominant_s": dom,
+        "ideal_s": ideal,
+        "useful_ratio": rec["model_flops"] / max(rec["hlo_flops"] * n, 1.0),
+        "roofline_fraction": ideal / max(dom, 1e-30),
+        "peak_gib": rec["peak_bytes_per_device"] / 2**30,
+    }
+
+
+def table(mesh: str = "16x16", out=sys.stdout):
+    recs = load(mesh)
+    hdr = (f"{'arch':22s} {'shape':12s} {'comp_s':>9s} {'mem_s':>9s} "
+           f"{'coll_s':>9s} {'dom':>10s} {'useful':>7s} {'roofl%':>7s} "
+           f"{'GiB/dev':>8s}")
+    print(hdr, file=out)
+    rows = []
+    for rec in recs:
+        if rec.get("skipped"):
+            continue
+        t = terms(rec)
+        rows.append((rec, t))
+        print(f"{rec['arch']:22s} {rec['shape']:12s} "
+              f"{t['compute_s']:9.4f} {t['memory_s']:9.4f} "
+              f"{t['collective_s']:9.4f} {t['dominant']:>10s} "
+              f"{t['useful_ratio']:7.2f} "
+              f"{100 * t['roofline_fraction']:6.1f}% "
+              f"{t['peak_gib']:8.2f}", file=out)
+    return rows
+
+
+def markdown(mesh: str = "16x16") -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | useful FLOP ratio | roofline | peak GiB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for rec in load(mesh):
+        if rec.get("skipped"):
+            continue
+        t = terms(rec)
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{t['dominant']} | {t['useful_ratio']:.2f} | "
+            f"{100 * t['roofline_fraction']:.1f}% | {t['peak_gib']:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    table(mesh)

@@ -1,0 +1,117 @@
+"""Benchmark driver: one function per paper figure/table + the kernel
+microbenchmark + the roofline summary.  Prints ``name,us_per_call,
+derived`` CSV lines (the ``emit`` contract in common.py).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def bench_kernels():
+    """Pallas filter_agg vs pure-jnp reference (interpret mode on this
+    container -- the comparison point is correctness + call overhead;
+    TPU timings come from real deployments)."""
+    import numpy as np
+    from benchmarks.common import emit
+    from repro.bench_db.schema import make_tuner_db
+    from repro.kernels import ops
+    from repro.kernels.ref import filter_agg_ref
+
+    db = make_tuner_db(n_rows=40_000, page_size=256)
+    t = db.tables["narrow"]
+    lo, hi = db.quantile_bounds("narrow", 0.01, 0.3)
+
+    def timed(fn, n=5):
+        fn()  # compile
+        t0 = time.perf_counter()
+        for _ in range(n):
+            fn()
+        return (time.perf_counter() - t0) / n * 1e6
+
+    us_ref = timed(lambda: filter_agg_ref(
+        t.data[:, :, 1], t.data[:, :, 1], t.data[:, :, 2], t.begin_ts,
+        t.end_ts, lo, hi, ops.I32_MIN, ops.I32_MAX, 0)[0].block_until_ready())
+    us_pal = timed(lambda: ops.scan_table(
+        t, (1,), (lo,), (hi,), ts=0, agg_attr=2)[0].block_until_ready())
+    emit("kernel.filter_agg_ref_jnp", us_ref, "pure-jnp oracle")
+    emit("kernel.filter_agg_pallas_interpret", us_pal,
+         "pl.pallas_call interpret=True (CPU correctness mode)")
+
+
+def bench_roofline():
+    from benchmarks.common import emit
+    from benchmarks import roofline
+    rows = []
+    try:
+        rows = roofline.table(out=open("/dev/null", "w"))
+    except Exception:
+        pass
+    if not rows:
+        emit("roofline.table", 0.0, "no dryrun artifacts yet "
+             "(run python -m repro.launch.dryrun --all)")
+        return
+    worst = min(rows, key=lambda rt: rt[1]["roofline_fraction"])
+    collb = max(rows, key=lambda rt: rt[1]["collective_s"])
+    for rec, t in rows:
+        emit(f"roofline.{rec['arch']}.{rec['shape']}",
+             t["dominant_s"] * 1e6,
+             f"dom={t['dominant']} roofline={100*t['roofline_fraction']:.1f}% "
+             f"useful={t['useful_ratio']:.2f} peak={t['peak_gib']:.1f}GiB")
+    emit("roofline.worst_cell", worst[1]["dominant_s"] * 1e6,
+         f"{worst[0]['arch']}/{worst[0]['shape']} "
+         f"{100*worst[1]['roofline_fraction']:.1f}%")
+    emit("roofline.most_collective_bound", collb[1]["collective_s"] * 1e6,
+         f"{collb[0]['arch']}/{collb[0]['shape']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workloads (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_schemes, fig6_decision_logic, fig7_holistic,
+                            fig8_affinity, fig9_layout, fig10_adaptability)
+
+    quick = args.quick
+    jobs = [
+        ("fig2", lambda: fig2_schemes.run(
+            total=600 if quick else 1500, quiet=True)),
+        ("fig6", lambda: fig6_decision_logic.run(
+            total=1200 if quick else 3000,
+            phase_len=150 if quick else 300, quiet=True)),
+        ("fig7", lambda: fig7_holistic.run(
+            seg_len=150 if quick else 400, quiet=True)),
+        ("fig8", lambda: fig8_affinity.run(
+            total=500 if quick else 1200, quiet=True)),
+        ("fig9", lambda: fig9_layout.run(
+            total=250 if quick else 500, quiet=True)),
+        ("fig10", lambda: fig10_adaptability.run(
+            total=600 if quick else 1500, quiet=True)),
+        ("kernels", bench_kernels),
+        ("roofline", bench_roofline),
+    ]
+    failures = []
+    for name, fn in jobs:
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
+        except Exception as e:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"{name}.FAILED,0.0,{e!r}")
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

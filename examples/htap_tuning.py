@@ -1,0 +1,39 @@
+"""HTAP scenario (paper Figs. 6/7 in miniature): a diurnal workload
+where scans recur each "day", indexes are dropped overnight, and the
+predictive tuner learns to rebuild them AHEAD of the morning traffic
+-- contrast with a retrospective tuner that only reacts.
+
+    PYTHONPATH=src python examples/htap_tuning.py
+"""
+import numpy as np
+
+from repro.bench_db import QueryGen, RunConfig, make_tuner_db, run_workload
+from repro.bench_db.workloads import affinity_workload
+from repro.core import Database, TunerConfig, make_dl_tuner
+
+db_src = make_tuner_db(n_rows=20_000, page_size=256)
+gen = QueryGen(db_src, selectivity=0.01)
+
+wl = affinity_workload(gen, total=1500, phase_len=300, n_subdomains=6,
+                       template="mod_s", noise_frac=0.01)
+cfg = RunConfig(tuning_interval_ms=25.0, idle_at_phase_start_ms=120.0,
+                drop_indexes_at_phase_end=True)
+
+for dl in ("retrospective", "predictive"):
+    db = Database(dict(db_src.tables), monitor_max_age_ms=60.0)
+    tuner = make_dl_tuner(db, dl, TunerConfig(
+        storage_budget_bytes=50e6, pages_per_cycle=16,
+        max_build_pages_per_cycle=48, candidate_min_count=3,
+        season_len=24))
+    res = run_workload(db, tuner, wl, cfg)
+    bf = np.asarray(res.built_fraction)
+    ph = np.asarray(res.phases)
+    early = float(np.mean([bf[ph == p][:60].mean()
+                           for p in range(2, wl.n_phases)]))
+    print(f"{dl:>14s}: cumulative={res.cumulative_ms:8.1f}ms  "
+          f"mean={res.mean_latency_ms:.3f}ms  "
+          f"index-built-at-phase-start={early:.2f}")
+
+print("\npredictive DL rebuilds the index during the idle window before "
+      "each phase (built~1.0 at phase start); retrospective DL waits "
+      "until queries arrive (paper Fig. 6).")

@@ -1,0 +1,41 @@
+"""Quickstart: the paper's system in ~60 lines.
+
+Loads a table, runs range-aggregate queries while the predictive index
+tuner watches the workload, builds a value-agnostic partial index in
+the background, and the hybrid scan speeds queries up *before* the
+index is complete.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.bench_db import QueryGen, make_tuner_db
+from repro.core import Database, PredictiveTuner, TunerConfig
+
+# 1. a 20k-row table of Zipf-distributed integer attributes
+db_src = make_tuner_db(n_rows=20_000, page_size=256)
+db = Database(dict(db_src.tables))
+gen = QueryGen(db_src, selectivity=0.01)
+
+# 2. the predictive tuner: CART workload classifier + Holt-Winters
+#    utility forecaster + 0-1 knapsack under a storage budget
+tuner = PredictiveTuner(db, TunerConfig(
+    storage_budget_bytes=50e6, pages_per_cycle=16,
+    max_build_pages_per_cycle=48, candidate_min_count=2))
+
+print(f"{'query':>6s} {'latency(ms)':>12s} {'index built':>12s} "
+      f"{'access path':>12s}")
+for i in range(60):
+    q = gen.low_s(attr=3)          # SELECT ..., SUM(a_2) WHERE a_3 in [x,y]
+    stats = db.execute(q)
+    if i % 4 == 3:                 # background tuning cycle
+        tuner.tuning_cycle()
+    built = max((b.built_fraction(db.tables["narrow"])
+                 for b in db.indexes.values()), default=0.0)
+    if i % 6 == 0 or i == 59:
+        path = "hybrid-scan" if stats.used_index else "table-scan"
+        print(f"{i:6d} {stats.latency_ms:12.4f} {built:12.2f} {path:>12s}")
+
+print(f"\nindexes: {sorted(db.indexes)}")
+print("the latency drops gradually as the value-agnostic partial index "
+      "grows -- no spikes, usable before complete (paper Fig. 2).")

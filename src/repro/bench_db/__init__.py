@@ -1,0 +1,18 @@
+"""TUNER: the paper's index-tuning benchmark suite (Section V).
+
+A narrow (p=20) and a wide (p=200) table of Zipf-distributed integer
+attributes; six query templates (LOW-S / MOD-S / HIGH-S scans, LOW-U /
+HIGH-U updates, INS inserts); workload generators for shifting phases,
+scan/update mixtures, sub-domain affinity levels and the four tuning
+frequencies (FAST / MOD / SLOW / DIS); and a runner that drives any
+tuner implementation over a workload on a simulated clock.
+"""
+from repro.bench_db.schema import TunerDB, make_tuner_db
+from repro.bench_db.queries import QueryGen
+from repro.bench_db.workloads import (Workload, hybrid_workload,
+                                      shifting_workload, affinity_workload)
+from repro.bench_db.runner import RunConfig, RunResult, run_workload
+
+__all__ = ["QueryGen", "RunConfig", "RunResult", "TunerDB", "Workload",
+           "affinity_workload", "hybrid_workload", "make_tuner_db",
+           "run_workload", "shifting_workload"]

@@ -1,0 +1,156 @@
+"""Workload runner: drives a tuner over a workload on a simulated clock.
+
+Timing model
+------------
+Latency is accounted in the engine's tuple-touch units converted at
+``time_per_unit_ms``.  A query's latency is its execution cost plus
+any in-query physical-design work its tuner performs (immediate-DL
+population -- the latency-spike mechanism of Figures 2 and 7).
+
+Background tuning cycles fire on a simulated-time schedule (the FAST /
+MOD / SLOW frequencies of Section V-B).  Cycle work is charged to the
+cumulative execution time *unless* the system is inside an idle window
+(phase starts can be configured to throttle the client, Figure 6), in
+which case the work rides on idle resources for free -- this is what
+lets always-on tuners exploit idleness.
+
+Phase boundaries can optionally drop every ad-hoc index ("diurnal"
+mode, Figure 6: indexes have to be rebuilt every morning) -- tuner
+*models* survive drops, which is exactly the predictive advantage.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.bench_db.workloads import Workload
+from repro.core.executor import Database
+
+TUNING_FREQ_MS = {"fast": 100.0, "mod": 1000.0, "slow": 10000.0, "dis": None}
+
+
+@dataclass
+class RunConfig:
+    tuning_interval_ms: Optional[float] = 100.0   # None = disabled
+    idle_at_phase_start_ms: float = 0.0           # throttled client window
+    drop_indexes_at_phase_end: bool = False       # diurnal mode
+    time_per_unit_ms: float = 1e-4
+    max_cycles_per_gap: int = 50                  # clamp catch-up storms
+    arrival_ms: float = 0.0                       # open-loop client cadence
+                                                  # (0 = closed loop)
+
+
+@dataclass
+class RunResult:
+    latencies_ms: List[float] = field(default_factory=list)
+    phases: List[int] = field(default_factory=list)
+    cumulative_ms: float = 0.0        # queries + charged tuner work
+    tuner_work_units: float = 0.0
+    tuner_charged_ms: float = 0.0
+    wall_s: float = 0.0
+    index_counts: List[int] = field(default_factory=list)
+    built_fraction: List[float] = field(default_factory=list)
+
+    @property
+    def mean_latency_ms(self) -> float:
+        return float(np.mean(self.latencies_ms)) if self.latencies_ms else 0.0
+
+    @property
+    def p99_latency_ms(self) -> float:
+        return float(np.percentile(self.latencies_ms, 99)) \
+            if self.latencies_ms else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "queries": len(self.latencies_ms),
+            "cumulative_ms": round(self.cumulative_ms, 3),
+            "mean_latency_ms": round(self.mean_latency_ms, 5),
+            "p99_latency_ms": round(self.p99_latency_ms, 5),
+            "tuner_work_units": round(self.tuner_work_units, 1),
+            "tuner_charged_ms": round(self.tuner_charged_ms, 3),
+            "wall_s": round(self.wall_s, 2),
+        }
+
+
+def run_workload(db: Database, tuner, workload: Workload,
+                 cfg: RunConfig) -> RunResult:
+    """Single-core timing model.
+
+    Background cycle work first consumes accumulated *idle credit*
+    (open-loop arrival gaps + explicit phase-start throttle windows);
+    any overflow is non-preemptible and BLOCKS the next query -- that
+    is the latency-spike mechanism of unbounded (holistic/value-based)
+    population, while bounded VAP cycles typically fit in the credit.
+    """
+    res = RunResult()
+    next_cycle_ms = (db.clock_ms + cfg.tuning_interval_ms
+                     if cfg.tuning_interval_ms else float("inf"))
+    idle_until_ms = db.clock_ms + cfg.idle_at_phase_start_ms
+    idle_credit_ms = cfg.idle_at_phase_start_ms
+    blocking_ms = 0.0   # carried into the next query's latency
+    prev_phase = 0
+
+    def run_due_cycles():
+        nonlocal next_cycle_ms, idle_credit_ms, blocking_ms
+        if cfg.tuning_interval_ms is None:
+            return
+        fired = 0
+        while db.clock_ms >= next_cycle_ms and fired < cfg.max_cycles_per_gap:
+            idle = (db.clock_ms < idle_until_ms) or idle_credit_ms > 0.0
+            work = tuner.tuning_cycle(idle=idle)
+            work_ms = work * cfg.time_per_unit_ms
+            res.tuner_work_units += work
+            absorbed = min(idle_credit_ms, work_ms)
+            idle_credit_ms -= absorbed
+            charged = work_ms - absorbed
+            res.tuner_charged_ms += charged
+            blocking_ms += charged
+            db.clock_ms += max(charged, 1e-9)
+            next_cycle_ms += cfg.tuning_interval_ms
+            fired += 1
+        if db.clock_ms >= next_cycle_ms:  # drop missed slots
+            k = int((db.clock_ms - next_cycle_ms) // cfg.tuning_interval_ms) + 1
+            next_cycle_ms += k * cfg.tuning_interval_ms
+
+    import time as _time
+    t_start = _time.perf_counter()
+    for phase, q in workload:
+        if phase != prev_phase:
+            if cfg.drop_indexes_at_phase_end:
+                for name in list(db.indexes):
+                    db.drop_index(name)
+            idle_until_ms = db.clock_ms + cfg.idle_at_phase_start_ms
+            idle_credit_ms += cfg.idle_at_phase_start_ms
+            if cfg.idle_at_phase_start_ms > 0:
+                # traverse the idle window so due cycles fire inside it
+                end = idle_until_ms
+                while db.clock_ms < end and cfg.tuning_interval_ms:
+                    db.clock_ms = min(end, max(next_cycle_ms, db.clock_ms))
+                    run_due_cycles()
+                    if next_cycle_ms > end:
+                        break
+                db.clock_ms = max(db.clock_ms, end)
+            prev_phase = phase
+
+        run_due_cycles()
+        stats = db.execute(q)
+        extra_units = tuner.on_query(q, stats)
+        extra_ms = extra_units * cfg.time_per_unit_ms
+        db.clock_ms += extra_ms
+        lat = stats.latency_ms + extra_ms + blocking_ms
+        blocking_ms = 0.0
+        res.latencies_ms.append(lat)
+        res.phases.append(phase)
+        res.cumulative_ms += lat
+        res.index_counts.append(len(db.indexes))
+        fracs = [b.built_fraction(db.tables[b.desc.table])
+                 for b in db.indexes.values()]
+        res.built_fraction.append(float(np.mean(fracs)) if fracs else 0.0)
+        if cfg.arrival_ms > 0.0 and lat < cfg.arrival_ms:
+            gap = cfg.arrival_ms - lat
+            db.clock_ms += gap
+            idle_credit_ms += gap
+    res.wall_s = _time.perf_counter() - t_start
+    return res

@@ -1,0 +1,15 @@
+"""yi-34b [arXiv:2403.04652; hf] -- llama-arch dense GQA."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="yi-34b", family="dense", n_layers=60, d_model=7168,
+        n_heads=56, n_kv_heads=8, d_ff=20480, vocab_size=64000,
+        head_dim=128, rope_theta=5e6, tie_embeddings=False).validate()
+
+
+def smoke_config() -> ModelConfig:
+    return config().scaled(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                           head_dim=16, d_ff=160, vocab_size=512,
+                           loss_chunk=16)

@@ -1,0 +1,31 @@
+"""Predictive Indexing core (Arulraj et al., "Predictive Indexing").
+
+The paper's contribution as composable pieces:
+
+* ``table`` / ``index`` / ``hybrid_scan`` -- the storage engine: paged
+  MVCC column store, partially-built ad-hoc indexes (FULL/VBP/VAP
+  population schemes) and the value-agnostic hybrid scan operator.
+* ``classifier`` / ``forecaster`` / ``knapsack`` / ``cost_model`` --
+  the ML decision-logic components of Algorithm 1.
+* ``monitor`` / ``executor`` -- workload monitoring and the query
+  execution engine with optimizer-style access-path selection.
+* ``tuner`` / ``baselines`` -- the predictive tuner plus the online /
+  adaptive / self-managing / holistic baselines on the same substrate.
+* ``layout`` -- the storage-layout tuner it cooperates with (Fig. 9).
+"""
+from repro.core.cost_model import IndexDescriptor
+from repro.core.executor import Database, ExecStats, Query
+from repro.core.hybrid_scan import (ScanResult, full_table_scan, hybrid_scan,
+                                    pure_index_scan)
+from repro.core.index import (AdHocIndex, VbpState, build_full,
+                              build_pages_vap, make_index, make_vbp)
+from repro.core.table import Table, load_table, make_table
+from repro.core.tuner import PredictiveTuner, TunerConfig, make_dl_tuner
+
+__all__ = [
+    "AdHocIndex", "Database", "ExecStats", "IndexDescriptor",
+    "PredictiveTuner", "Query", "ScanResult", "Table", "TunerConfig",
+    "VbpState", "build_full", "build_pages_vap", "full_table_scan",
+    "hybrid_scan", "load_table", "make_dl_tuner", "make_index", "make_table",
+    "make_vbp", "pure_index_scan",
+]

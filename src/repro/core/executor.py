@@ -1,0 +1,465 @@
+"""Query execution engine with optimizer-style access-path selection.
+
+Owns the tables, built indexes and layout state of one database, and
+executes benchmark statements, returning *measured* statistics in the
+same tuple-touch units the what-if cost model estimates in (see
+``cost_model``).  This is the substrate every indexing approach runs
+on -- only the decision logic and population scheme differ between
+tuners, exactly as in the paper's DBMS-X integration.
+
+Access-path selection (Section III, "Query Optimization"): for a scan,
+the optimizer considers each built index whose leading key attribute
+is constrained by the predicate, estimates selectivity, and picks a
+hybrid scan for selective queries -- falling back to a table scan when
+the predicate is not selective or no index matches.  FULL-scheme
+indexes are usable only when complete; VBP indexes only when the query
+sub-domain is covered.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core.cost_model import IndexDescriptor
+from repro.core.hybrid_scan import (ScanResult, full_table_scan, hybrid_scan,
+                                    pure_index_scan)
+from repro.core.index import (AdHocIndex, VbpState, build_pages_vap,
+                              index_range_scan, key_range, make_index,
+                              make_vbp, vbp_invalidate_coverage,
+                              vbp_is_covered, vbp_populate_subdomain)
+from repro.core.layout import LayoutState, scan_width_factor
+from repro.core.monitor import QueryRecord, WorkloadMonitor
+from repro.core.table import Table, insert_rows, update_rows
+
+HYBRID_SELECTIVITY_CUTOFF = 0.20  # optimizer switches to table scan above this
+
+
+class IntervalUnion:
+    """Host-side merged interval set over composite keys.
+
+    The jnp-side VbpState tracks exact-interval coverage (enough for
+    the jitted kernels); real cracking additionally benefits from the
+    *union* of overlapping populated sub-domains -- two overlapping
+    cracks jointly cover their union.  The executor keeps this merged
+    view per VBP index and uses it for access-path decisions.
+    """
+
+    def __init__(self):
+        self.ivs: list = []   # sorted disjoint [(lo, hi)] of key tuples
+
+    def add(self, lo, hi) -> None:
+        ivs = self.ivs + [(lo, hi)]
+        ivs.sort()
+        merged = [ivs[0]]
+        for a, b in ivs[1:]:
+            la, lb = merged[-1]
+            if a <= lb or a == lb:   # touching/overlapping (tuple compare)
+                if b > lb:
+                    merged[-1] = (la, b)
+            else:
+                merged.append((a, b))
+        self.ivs = merged
+
+    def covers(self, lo, hi) -> bool:
+        for a, b in self.ivs:
+            if a <= lo and hi <= b:
+                return True
+            if a > lo:
+                break
+        return False
+
+    def clear(self) -> None:
+        self.ivs = []
+
+
+@dataclass
+class Query:
+    kind: str                      # 'scan' | 'update' | 'insert'
+    table: str
+    attrs: Tuple[int, ...] = ()
+    los: Tuple[int, ...] = ()
+    his: Tuple[int, ...] = ()
+    agg_attr: int = 2
+    proj_attrs: Tuple[int, ...] = ()
+    set_attrs: Tuple[int, ...] = ()
+    set_vals: Tuple[int, ...] = ()
+    rows: Optional[np.ndarray] = None   # INSERT payload
+    # HIGH-S equi-join: R.join_attr == S.join_inner_attr
+    join_table: Optional[str] = None
+    join_attr: int = 0
+    join_inner_attr: int = 0
+    template: str = ""
+
+    @property
+    def accessed_attrs(self) -> Tuple[int, ...]:
+        return tuple(sorted(set(self.attrs) | set(self.proj_attrs)
+                            | ({self.agg_attr} if self.kind == "scan" else set())
+                            | set(self.set_attrs)))
+
+
+@dataclass
+class BuiltIndex:
+    desc: IndexDescriptor
+    scheme: str                     # 'vap' | 'vbp' | 'full'
+    vap: Optional[AdHocIndex] = None
+    vbp: Optional[VbpState] = None
+    cov_union: Optional[IntervalUnion] = None   # VBP merged coverage
+    complete: bool = False          # FULL usable flag
+    building: bool = True           # under construction (VAP/FULL)
+    created_ms: float = 0.0
+    last_used_ms: float = 0.0
+
+    def built_fraction(self, table: Table) -> float:
+        if self.scheme == "vap" or self.scheme == "full":
+            full_pages = max(int(table.n_rows) // table.page_size, 1)
+            return min(int(self.vap.built_pages) / full_pages, 1.0)
+        n = max(int(table.n_rows), 1)
+        return min(int(self.vbp.index.n_entries) / n, 1.0)
+
+    def size_bytes(self) -> float:
+        if self.scheme in ("vap", "full"):
+            return 12.0 * float(int(self.vap.n_entries))
+        return 12.0 * float(int(self.vbp.index.n_entries))
+
+
+@dataclass
+class ExecStats:
+    cost_units: float               # tuple-touch units (simulated work)
+    latency_ms: float               # simulated latency
+    wall_s: float                   # measured wall time of the jitted ops
+    used_index: bool
+    agg_sum: int = 0
+    count: int = 0
+    rows_modified: int = 0
+    populate_units: float = 0.0     # in-query VBP population work (spikes)
+
+
+class Database:
+    """Tables + index configuration + layout + monitor + simulated clock."""
+
+    def __init__(self, tables: Dict[str, Table], time_per_unit_ms: float = 1e-4,
+                 monitor_window: int = 256,
+                 monitor_max_age_ms: float | None = None):
+        self.tables: Dict[str, Table] = dict(tables)
+        self.indexes: Dict[str, BuiltIndex] = {}
+        self.layouts: Dict[str, LayoutState] = {
+            name: LayoutState(n_attrs=t.n_attrs, n_pages=t.n_pages)
+            for name, t in tables.items()}
+        self.monitor = WorkloadMonitor(window=monitor_window,
+                                       max_age_ms=monitor_max_age_ms)
+        self.clock_ms: float = 0.0
+        self.time_per_unit_ms = time_per_unit_ms
+        self.update_cap = 512       # max rows materialised per UPDATE
+
+    # ------------------------------------------------------------------
+    # Index configuration actions (used by tuners)
+    # ------------------------------------------------------------------
+    def create_index(self, desc: IndexDescriptor, scheme: str) -> BuiltIndex:
+        t = self.tables[desc.table]
+        if desc.name in self.indexes:
+            return self.indexes[desc.name]
+        bi = BuiltIndex(desc=desc, scheme=scheme, created_ms=self.clock_ms)
+        if scheme in ("vap", "full"):
+            bi.vap = make_index(t.capacity)
+        else:
+            bi.vbp = make_vbp(t.capacity)
+            bi.cov_union = IntervalUnion()
+        self.indexes[desc.name] = bi
+        return bi
+
+    def drop_index(self, name: str) -> None:
+        self.indexes.pop(name, None)
+
+    def indexes_on(self, table: str):
+        return [b for b in self.indexes.values() if b.desc.table == table]
+
+    def total_index_bytes(self) -> float:
+        return sum(b.size_bytes() for b in self.indexes.values())
+
+    # ------------------------------------------------------------------
+    # Optimizer: choose the access path for a scan
+    # ------------------------------------------------------------------
+    def _estimate_selectivity(self, q: Query) -> float:
+        """Cheap uniform-assumption estimate from predicate ranges over
+        the TUNER attribute domain [1, 1m]; used only for plan choice
+        (measured selectivity feeds the monitor afterwards)."""
+        sel = 1.0
+        for lo, hi in zip(q.los, q.his):
+            width = max(float(hi) - float(lo) + 1.0, 0.0)
+            sel *= min(width / 1_000_000.0, 1.0)
+        return sel
+
+    def _choose_index(self, q: Query) -> Optional[BuiltIndex]:
+        best, best_key = None, (-1, -1.0)
+        for bi in self.indexes.values():
+            if not cm.index_matches(bi.desc, q.table, q.attrs):
+                continue
+            if bi.scheme == "full" and not bi.complete:
+                continue
+            covered = len(set(bi.desc.key_attrs) & set(q.attrs))
+            frac = bi.built_fraction(self.tables[q.table])
+            if bi.scheme == "vbp":
+                lo, hi = self._vbp_host_bounds(bi, q)
+                if not bi.cov_union.covers(lo, hi):
+                    continue
+            key = (covered, frac)
+            if key > best_key:
+                best, best_key = bi, key
+        return best
+
+    @staticmethod
+    def _vbp_host_key_bounds(bi: BuiltIndex, q: Query):
+        """Host-side composite-key bounds ((hi,lo) int tuples)."""
+        pmap = {a: k for k, a in enumerate(q.attrs)}
+        ka = bi.desc.key_attrs
+        lo0, hi0 = int(q.los[pmap[ka[0]]]), int(q.his[pmap[ka[0]]])
+        if len(ka) == 2 and ka[1] in pmap:
+            lo1, hi1 = int(q.los[pmap[ka[1]]]), int(q.his[pmap[ka[1]]])
+        elif len(ka) == 2:
+            lo1, hi1 = -(2**31) + 1, 2**31 - 2
+        else:
+            lo1, hi1 = 0, 0
+        return (lo0, lo1), (hi0, hi1)
+
+    def _vbp_host_bounds(self, bi: BuiltIndex, q: Query):
+        return self._vbp_host_key_bounds(bi, q)
+
+    @staticmethod
+    def _vbp_bounds(bi: BuiltIndex, q: Query):
+        (lo0, lo1), (hi0, hi1) = Database._vbp_host_key_bounds(bi, q)
+        if len(bi.desc.key_attrs) == 2:
+            return key_range(lo0, hi0, lo1, hi1)
+        return key_range(lo0, hi0)
+
+    # ------------------------------------------------------------------
+    # Execution
+    # ------------------------------------------------------------------
+    def execute(self, q: Query, observe: bool = True) -> ExecStats:
+        if q.kind == "scan":
+            stats = self._exec_scan(q)
+        elif q.kind == "update":
+            stats = self._exec_update(q)
+        elif q.kind == "insert":
+            stats = self._exec_insert(q)
+        else:
+            raise ValueError(q.kind)
+        self.clock_ms += stats.latency_ms
+        if observe:
+            n_rows = int(self.tables[q.table].n_rows)
+            self.monitor.observe(QueryRecord(
+                kind=q.kind, table=q.table, pred_attrs=tuple(q.attrs),
+                accessed_attrs=q.accessed_attrs,
+                selectivity=(stats.count / max(n_rows, 1)) if q.kind == "scan"
+                            else (stats.rows_modified / max(n_rows, 1)),
+                tuples_scanned=int(stats.cost_units),
+                used_index=stats.used_index,
+                rows_modified=stats.rows_modified,
+                ts_ms=self.clock_ms, template=q.template))
+            if q.join_table is not None:
+                # The inner side of an equi-join is an indexable access
+                # path too (HIGH-S benefits from join-attribute indexes).
+                n_inner = int(self.tables[q.join_table].n_rows)
+                self.monitor.observe(QueryRecord(
+                    kind="scan", table=q.join_table,
+                    pred_attrs=(q.join_inner_attr,),
+                    selectivity=min(stats.count / max(n_inner, 1), 1.0),
+                    tuples_scanned=n_inner,
+                    used_index=stats.used_index,
+                    rows_modified=0, ts_ms=self.clock_ms,
+                    template=q.template + ":join"))
+        return stats
+
+    def _exec_scan(self, q: Query) -> ExecStats:
+        t = self.tables[q.table]
+        layout = self.layouts[q.table]
+        los = jnp.asarray(q.los, jnp.int32)
+        his = jnp.asarray(q.his, jnp.int32)
+        est_sel = self._estimate_selectivity(q)
+        bi = None
+        if est_sel <= HYBRID_SELECTIVITY_CUTOFF:
+            bi = self._choose_index(q)
+
+        t0 = time.perf_counter()
+        if bi is None:
+            r: ScanResult = full_table_scan(t, tuple(q.attrs), los, his,
+                                            self.clock_ms_i32(), q.agg_attr)
+            start_page = 0
+            entries = 0.0
+        elif bi.scheme == "vbp":
+            r = pure_index_scan(t, bi.vbp.index, bi.desc.key_attrs,
+                                tuple(q.attrs), los, his,
+                                self.clock_ms_i32(), q.agg_attr)
+            start_page = t.n_pages
+            entries = float(int(r.entries_probed))
+        elif bi.scheme == "full" and bi.complete:
+            r = pure_index_scan(t, bi.vap, bi.desc.key_attrs, tuple(q.attrs),
+                                los, his, self.clock_ms_i32(), q.agg_attr)
+            start_page = t.n_pages
+            entries = float(int(r.entries_probed))
+        else:  # VAP hybrid scan (or FULL still building -> table scan part)
+            idx = bi.vap
+            r = hybrid_scan(t, idx, bi.desc.key_attrs, tuple(q.attrs), los,
+                            his, self.clock_ms_i32(), q.agg_attr)
+            start_page = int(r.start_page)
+            entries = float(int(r.entries_probed))
+        wall = time.perf_counter() - t0
+
+        # Table-scan units scale with the layout's effective width
+        # (width/n_attrs == 1 for untuned NSM pages); index probes are
+        # narrow and layout-independent.
+        width = scan_width_factor(layout, q.accessed_attrs, from_page=start_page)
+        cost = float(int(r.pages_scanned)) * t.page_size * (width / layout.n_attrs)
+        cost += entries * cm.INDEX_PROBE_COST
+        used = bi is not None
+        if used:
+            bi.last_used_ms = self.clock_ms
+
+        count = int(r.count)
+        if q.join_table is not None:
+            count, join_cost, join_used = self._exec_join(q, r)
+            cost += join_cost
+            used = used or join_used
+        return ExecStats(cost_units=cost,
+                         latency_ms=cost * self.time_per_unit_ms,
+                         wall_s=wall, used_index=used,
+                         agg_sum=int(r.agg_sum), count=count)
+
+    def _exec_join(self, q: Query, outer: ScanResult):
+        """HIGH-S equi-join: count pairs between the outer matches and
+        the inner table on join_attr == join_inner_attr.  Cost model:
+        index-nested-loop when an index exists on the inner join
+        attribute, hash join (one inner pass) otherwise."""
+        inner_t = self.tables[q.join_table]
+        # exact pair count (host-side sorted merge; correctness path)
+        om = np.asarray(outer.contrib) > 0
+        outer_vals = np.asarray(
+            self.tables[q.table].data[:, :, q.join_attr])[om]
+        ib = np.asarray(inner_t.begin_ts).reshape(-1)
+        ie = np.asarray(inner_t.end_ts).reshape(-1)
+        ts = int(self.clock_ms) + 1
+        ivis = (ib <= ts) & (ts < ie)
+        inner_vals = np.sort(
+            np.asarray(inner_t.data[:, :, q.join_inner_attr]).reshape(-1)[ivis])
+        lo = np.searchsorted(inner_vals, outer_vals, side="left")
+        hi = np.searchsorted(inner_vals, outer_vals, side="right")
+        pairs = int((hi - lo).sum())
+
+        n_outer = int(om.sum())
+        n_inner = int(inner_t.n_rows)
+        inner_idx = None
+        for bi in self.indexes_on(q.join_table):
+            if bi.desc.key_attrs and bi.desc.key_attrs[0] == q.join_inner_attr \
+                    and bi.scheme in ("vap", "full"):
+                inner_idx = bi
+                break
+        if inner_idx is not None:
+            frac = inner_idx.built_fraction(inner_t)
+            probes = n_outer * (np.log2(max(n_inner, 2))
+                                * cm.INDEX_PROBE_COST)
+            cost = probes + (1.0 - frac) * n_inner
+            inner_idx.last_used_ms = self.clock_ms
+            return pairs, float(cost), True
+        return pairs, float(n_inner), False
+
+    def _exec_update(self, q: Query) -> ExecStats:
+        t = self.tables[q.table]
+        layout = self.layouts[q.table]
+        los = jnp.asarray(q.los, jnp.int32)
+        his = jnp.asarray(q.his, jnp.int32)
+        t0 = time.perf_counter()
+        new_t, n_upd = update_rows(t, tuple(q.attrs), los, his,
+                                   tuple(q.set_attrs),
+                                   jnp.asarray(q.set_vals, jnp.int32),
+                                   self.clock_ms_i32(), max_new=self.update_cap)
+        wall = time.perf_counter() - t0
+        self.tables[q.table] = new_t
+        n_upd = int(n_upd)
+        # Row lookup: table scan unless an index matches the predicate.
+        bi = self._choose_index(q)
+        if bi is not None and bi.scheme in ("vap",):
+            frac = bi.built_fraction(t)
+            lookup = (1.0 - frac) * float(int(t.n_rows)) + \
+                cm.INDEX_PROBE_COST * n_upd
+            bi.last_used_ms = self.clock_ms
+        else:
+            width = scan_width_factor(layout, tuple(q.attrs), 0)
+            lookup = float(int(t.n_rows)) * (width / layout.n_attrs)
+        maint = cm.tau_maintenance(n_upd) * max(len(self.indexes_on(q.table)), 0)
+        cost = lookup + maint + float(n_upd)
+        self._after_mutation(q.table)
+        return ExecStats(cost_units=cost, latency_ms=cost * self.time_per_unit_ms,
+                         wall_s=wall, used_index=bi is not None,
+                         rows_modified=n_upd)
+
+    def _exec_insert(self, q: Query) -> ExecStats:
+        t = self.tables[q.table]
+        rows = np.asarray(q.rows, np.int32)
+        t0 = time.perf_counter()
+        new_t = insert_rows(t, jnp.asarray(rows), self.clock_ms_i32(),
+                            rows.shape[0], max_new=rows.shape[0])
+        wall = time.perf_counter() - t0
+        self.tables[q.table] = new_t
+        n = rows.shape[0]
+        maint = cm.tau_maintenance(n) * max(len(self.indexes_on(q.table)), 0)
+        cost = float(n) + maint
+        self._after_mutation(q.table)
+        return ExecStats(cost_units=cost, latency_ms=cost * self.time_per_unit_ms,
+                         wall_s=wall, used_index=False, rows_modified=n)
+
+    def _after_mutation(self, table: str) -> None:
+        """Inserted rows are unknown to VBP covering intervals; drop
+        coverage claims (entries stay; scans re-check visibility)."""
+        for bi in self.indexes_on(table):
+            if bi.scheme == "vbp":
+                bi.vbp = vbp_invalidate_coverage(bi.vbp)
+                bi.cov_union.clear()
+
+    # ------------------------------------------------------------------
+    # Tuner-side physical work, charged by the caller
+    # ------------------------------------------------------------------
+    def vap_build_step(self, bi: BuiltIndex, pages: int) -> float:
+        """Advance a VAP/FULL index by ``pages`` pages; returns work units."""
+        t = self.tables[bi.desc.table]
+        before = int(bi.vap.built_pages)
+        bi.vap = build_pages_vap(bi.vap, t, bi.desc.key_attrs,
+                                 pages_per_cycle=pages)
+        done = int(bi.vap.built_pages) - before
+        full_pages = int(t.n_rows) // t.page_size
+        if int(bi.vap.built_pages) >= full_pages:
+            bi.complete = True
+            bi.building = False
+        return float(done * t.page_size)
+
+    def vbp_populate(self, bi: BuiltIndex, q: Query, max_add: int) -> float:
+        """Populate the sub-domain touched by ``q``; returns work units
+        (charged to the query by immediate-DL tuners -> latency spike).
+
+        Cost model: population piggybacks on the triggering query's own
+        table scan (so no extra scan term), but every harvested entry
+        pays a sorted-structure insertion (the cracking/SMIX per-entry
+        work), plus covering-metadata bookkeeping.
+        """
+        t = self.tables[bi.desc.table]
+        max_add = min(int(max_add), t.capacity)
+        entries_before = int(bi.vbp.index.n_entries)
+        lo, hi = self._vbp_bounds(bi, q)
+        bi.vbp, n_added = vbp_populate_subdomain(
+            bi.vbp, t, bi.desc.key_attrs, lo, hi, self.clock_ms_i32(),
+            max_add=max_add)
+        n_added = int(n_added)
+        if n_added < max_add:  # the whole sub-domain fit -> now covered
+            hlo, hhi = self._vbp_host_bounds(bi, q)
+            bi.cov_union.add(hlo, hhi)
+        # Cracking-style cost: partitioning the still-uncracked region
+        # (early cracks touch nearly the whole column; later ones are
+        # cheap) plus sorted insertion per harvested entry.
+        uncracked = max(int(t.n_rows) - entries_before, 0)
+        return float(n_added) * 8.0 + 0.5 * float(uncracked)
+
+    def clock_ms_i32(self):
+        return jnp.asarray(min(int(self.clock_ms) + 1, 2**31 - 2), jnp.int32)

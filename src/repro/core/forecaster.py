@@ -1,0 +1,131 @@
+"""Holt-Winters index-utility forecaster (paper Section IV-C).
+
+Implements the seasonal exponential-smoothing forecaster that the
+predictive tuner uses as its reinforcement-signal estimator.  The
+multiplicative-seasonality equations from the paper:
+
+    forecast:  y_hat(t+h|t) = (l_t + h * b_t) * s_{t - m + h_m}
+    level:     l_t = alpha * (y_t / s_{t-m}) + (1-alpha) * (l_{t-1} + b_{t-1})
+    trend:     b_t = beta  * (l_t - l_{t-1}) + (1-beta)  * b_{t-1}
+    season:    s_t = gamma * (y_t / (l_{t-1} + b_{t-1})) + (1-gamma) * s_{t-m}
+
+The forecaster is maintained *per index* (keyed by the index's
+attribute set) and its state is retained after an index is dropped, so
+the tuner can still predict that index's future utility (Section
+IV-C).  State is a flat pytree so a whole population of forecasters
+batches under ``jax.vmap`` -- the tuner updates every tracked index's
+model in one fused step per tuning cycle.
+
+Utilities are non-negative; observations are floored at ``EPS`` so the
+multiplicative seasonal ratios stay finite.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EPS = 1e-6
+
+
+class HWState(NamedTuple):
+    """Holt-Winters state for one (or, batched, many) time series."""
+
+    level: jax.Array    # ()  or (n,)
+    trend: jax.Array    # ()  or (n,)
+    season: jax.Array   # (m,) or (n, m) multiplicative seasonal factors
+    t: jax.Array        # () or (n,) int32 -- observations consumed
+
+
+def init_state(season_len: int, batch: int | None = None) -> HWState:
+    """Fresh state: level/trend unset (bootstrapped on first obs),
+    seasonal factors start at 1 (no seasonality assumed)."""
+    if batch is None:
+        return HWState(jnp.zeros(()), jnp.zeros(()),
+                       jnp.ones((season_len,)), jnp.zeros((), jnp.int32))
+    return HWState(jnp.zeros((batch,)), jnp.zeros((batch,)),
+                   jnp.ones((batch, season_len)),
+                   jnp.zeros((batch,), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def update(state: HWState, y, alpha=0.5, beta=0.3, gamma=0.4) -> HWState:
+    """Consume one observation ``y`` (scalar state).
+
+    The first observation bootstraps the level (the paper bootstraps
+    new indexes' models with their overall utility).
+    """
+    m = state.season.shape[-1]
+    y = jnp.maximum(jnp.asarray(y, jnp.float32), EPS)
+    pos = state.t % m
+    s_tm = jnp.take(state.season, pos, axis=-1)
+
+    first = state.t == 0
+    prev = state.level + state.trend
+    prev = jnp.maximum(prev, EPS)
+
+    l_new = alpha * (y / jnp.maximum(s_tm, EPS)) + (1 - alpha) * prev
+    b_new = beta * (l_new - state.level) + (1 - beta) * state.trend
+    s_new = gamma * (y / prev) + (1 - gamma) * s_tm
+
+    level = jnp.where(first, y, l_new)
+    trend = jnp.where(first, 0.0, b_new)
+    s_val = jnp.where(first, 1.0, s_new)
+    season = state.season.at[..., pos].set(
+        jnp.clip(s_val, 0.05, 20.0))  # keep factors sane on noisy series
+    return HWState(level, trend, season, state.t + 1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def forecast(state: HWState, h=1):
+    """h-step-ahead forecast y_hat(t+h|t); non-negative."""
+    m = state.season.shape[-1]
+    pos = (state.t + jnp.asarray(h, jnp.int32) - 1) % m
+    s = jnp.take(state.season, pos, axis=-1)
+    # Until one full season has been observed the seasonal factors are
+    # uninformative (== 1), so this degrades to damped Holt smoothing.
+    raw = (state.level + h * state.trend) * s
+    return jnp.maximum(raw, 0.0)
+
+
+# Batched variants: the tuner tracks one forecaster per candidate
+# index; vmapping the update keeps the per-cycle cost at one kernel.
+update_batch = jax.jit(jax.vmap(update, in_axes=(0, 0, None, None, None)),
+                       static_argnums=())
+forecast_batch = jax.jit(jax.vmap(forecast, in_axes=(0, None)))
+
+
+# ---------------------------------------------------------------------------
+# Pure-numpy reference (oracle for property tests)
+# ---------------------------------------------------------------------------
+
+def ref_holt_winters(ys: np.ndarray, season_len: int, alpha=0.5, beta=0.3,
+                     gamma=0.4, h: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+    """Reference: consume ``ys`` one at a time; return (levels, forecasts)
+    where forecasts[i] is the h-step forecast after observing ys[:i+1].
+    Mirrors ``update``/``forecast`` exactly (including the bootstrap
+    and the clipping of seasonal factors)."""
+    m = season_len
+    season = np.ones(m)
+    level, trend = 0.0, 0.0
+    levels, fcs = [], []
+    for t, y in enumerate(ys):
+        y = max(float(y), EPS)
+        pos = t % m
+        if t == 0:
+            level, trend = y, 0.0
+            season[pos] = 1.0
+        else:
+            prev = max(level + trend, EPS)
+            l_new = alpha * (y / max(season[pos], EPS)) + (1 - alpha) * prev
+            trend = beta * (l_new - level) + (1 - beta) * trend
+            season[pos] = min(max(gamma * (y / prev) + (1 - gamma) * season[pos],
+                                  0.05), 20.0)
+            level = l_new
+        levels.append(level)
+        fpos = (t + 1 + h - 1) % m
+        fcs.append(max((level + h * trend) * season[fpos], 0.0))
+    return np.asarray(levels), np.asarray(fcs)

@@ -1,0 +1,151 @@
+"""The value-agnostic hybrid scan operator (paper Section III).
+
+A hybrid scan is an index scan over the fully-indexed page prefix
+stitched to a table scan over the remainder:
+
+1. Range-scan the partial index; re-check the full predicate and MVCC
+   visibility on the fetched rows (index keys may be stale after
+   updates -- the table is the source of truth).
+2. Track rho_m = largest page id containing an index-scan match, and
+   rho_i = largest fully indexed page id (= built_pages - 1).
+3. Start the table scan at  start_page = max(rho_m, rho_i + 1).
+4. Deduplicate the overlapping page: index matches on pages
+   >= start_page are dropped (they are re-discovered by the table
+   scan).  This realises the paper's sorted-structure dedup with a
+   single vectorised mask.
+
+Exactly-once correctness relies on the in-order build invariant of
+``index.build_pages_vap``: entries beyond the built prefix exist only
+for the single in-progress page, so rho_m <= rho_i + 1 and every page
+is covered by exactly one of the two sub-scans (modulo the dedup on
+the overlapping page).  Property tests (tests/test_hybrid_scan.py)
+verify completeness and exactly-once against a brute-force oracle,
+including mid-build states, updates, and inserts.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.table import (Table, conj_predicate_mask, visible_mask)
+from repro.core.index import AdHocIndex, index_range_scan, key_range
+
+
+class ScanResult(NamedTuple):
+    """Aggregates + accounting from one scan execution."""
+
+    agg_sum: jax.Array        # () int64 SUM(a_k) over matches
+    count: jax.Array          # () int32 number of matching rows
+    contrib: jax.Array        # (n_pages, page_size) int32 -- times each row
+                              # was returned (must be 0/1; tested)
+    pages_scanned: jax.Array  # () int32 table pages touched
+    entries_probed: jax.Array # () int32 index entries touched
+    start_page: jax.Array     # () int32 where the table scan began
+
+
+def _predicate_key_bounds(key_attrs: tuple, attrs: tuple, los, his):
+    """Packed-key range implied by a conjunctive predicate for an index
+    keyed on ``key_attrs``.  Requires the index's leading attribute to
+    appear in the predicate; missing trailing attributes widen to the
+    full domain."""
+    pmap = {a: k for k, a in enumerate(attrs)}
+    if key_attrs[0] not in pmap:
+        raise ValueError("index leading attribute not constrained by predicate")
+    lo0, hi0 = los[pmap[key_attrs[0]]], his[pmap[key_attrs[0]]]
+    if len(key_attrs) == 1:
+        return key_range(lo0, hi0)
+    if key_attrs[1] in pmap:
+        lo1, hi1 = los[pmap[key_attrs[1]]], his[pmap[key_attrs[1]]]
+    else:
+        lo1, hi1 = -(2**31), 2**31 - 1
+    return key_range(lo0, hi0, lo1, hi1)
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def hybrid_scan(table: Table, index: AdHocIndex, key_attrs: tuple,
+                attrs: tuple, los, his, ts, agg_attr: int) -> ScanResult:
+    """Value-agnostic hybrid scan: index prefix + table suffix."""
+    psz = table.page_size
+    lo_key, hi_key = _predicate_key_bounds(key_attrs, attrs, los, his)
+
+    # ---- 1. index scan -------------------------------------------------
+    entry_mask, rids = index_range_scan(index, lo_key, hi_key)
+    pg = rids // psz
+    sl = rids % psz
+    rows_ok = conj_predicate_mask(table, attrs, los, his)[pg, sl]
+    rows_ok &= visible_mask(table, ts)[pg, sl]
+    idx_match = entry_mask & rows_ok                       # (capacity,)
+
+    # ---- 2. rho_m / rho_i ----------------------------------------------
+    rho_m = jnp.max(jnp.where(idx_match, pg, -1))
+    rho_i = index.built_pages - 1
+
+    # ---- 3. stitch point -----------------------------------------------
+    start_page = jnp.maximum(rho_m, rho_i + 1)
+
+    # ---- 4. dedup + combine --------------------------------------------
+    idx_keep = idx_match & (pg < start_page)
+    contrib = jnp.zeros((table.n_pages, table.page_size), jnp.int32)
+    contrib = contrib.at[pg, sl].add(idx_keep.astype(jnp.int32))
+
+    page_ids = jnp.arange(table.n_pages, dtype=jnp.int32)[:, None]
+    tbl_mask = conj_predicate_mask(table, attrs, los, his) & visible_mask(table, ts)
+    tbl_mask &= page_ids >= start_page
+    contrib = contrib + tbl_mask.astype(jnp.int32)
+
+    vals = table.data[:, :, agg_attr]
+    idx_sum = jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32)
+    tbl_sum = jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
+    count = (jnp.sum(idx_keep, dtype=jnp.int32)
+             + jnp.sum(tbl_mask, dtype=jnp.int32))
+
+    # Cost accounting: only pages up to the append watermark are real;
+    # reserved headroom pages beyond it hold no tuples and a real
+    # engine would never read them.
+    used_pages = (table.n_rows + psz - 1) // psz
+    pages_scanned = jnp.clip(used_pages - start_page, 0, None).astype(jnp.int32)
+    entries_probed = jnp.sum(entry_mask, dtype=jnp.int32)
+    return ScanResult(idx_sum + tbl_sum, count, contrib,
+                      pages_scanned, entries_probed,
+                      start_page.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def pure_index_scan(table: Table, index: AdHocIndex, key_attrs: tuple,
+                    attrs: tuple, los, his, ts, agg_attr: int) -> ScanResult:
+    """Index-only scan -- legal only when the index covers the predicate
+    (FULL scheme with a complete index, or VBP with a covered
+    sub-domain)."""
+    psz = table.page_size
+    lo_key, hi_key = _predicate_key_bounds(key_attrs, attrs, los, his)
+    entry_mask, rids = index_range_scan(index, lo_key, hi_key)
+    pg, sl = rids // psz, rids % psz
+    rows_ok = conj_predicate_mask(table, attrs, los, his)[pg, sl]
+    rows_ok &= visible_mask(table, ts)[pg, sl]
+    idx_match = entry_mask & rows_ok
+    contrib = jnp.zeros((table.n_pages, table.page_size), jnp.int32)
+    contrib = contrib.at[pg, sl].add(idx_match.astype(jnp.int32))
+    vals = table.data[:, :, agg_attr]
+    s = jnp.sum(jnp.where(idx_match, vals[pg, sl], 0), dtype=jnp.int32)
+    c = jnp.sum(idx_match, dtype=jnp.int32)
+    return ScanResult(s, c, contrib, jnp.zeros((), jnp.int32),
+                      jnp.sum(entry_mask, dtype=jnp.int32),
+                      jnp.asarray(table.n_pages, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("attrs", "agg_attr"))
+def full_table_scan(table: Table, attrs: tuple, los, his, ts,
+                    agg_attr: int) -> ScanResult:
+    """Plain table scan (no usable index)."""
+    tbl_mask = conj_predicate_mask(table, attrs, los, his) & visible_mask(table, ts)
+    vals = table.data[:, :, agg_attr]
+    s = jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
+    c = jnp.sum(tbl_mask, dtype=jnp.int32)
+    used_pages = ((table.n_rows + table.page_size - 1)
+                  // table.page_size).astype(jnp.int32)
+    return ScanResult(s, c, tbl_mask.astype(jnp.int32),
+                      used_pages,
+                      jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))

@@ -1,0 +1,289 @@
+"""Ad-hoc secondary indexes with partial, incremental construction.
+
+Implements the three index-population schemes compared in Section II-B
+of the paper:
+
+* ``FULL`` -- the index is only usable once every page is indexed
+  (online indexing a la DB2/SQL-Server advisors).
+* ``VBP``  -- value-based partial: entries are added for the value
+  sub-domain touched by each query (database cracking / SMIX /
+  holistic indexing).  Requires per-index sub-domain metadata (the
+  "covering tree"); population is driven by query predicates and can
+  cause latency spikes proportional to the sub-domain population.
+* ``VAP``  -- value-agnostic partial (the paper's proposal): entries
+  are added for a fixed number of *pages* per tuning cycle, in
+  ascending page order, independent of any attribute value
+  distribution.  The only metadata needed is ``built_pages``.
+
+The index is a lexicographically sorted (key, rid) array with fixed
+capacity.  Multi-attribute indexes (up to two attributes -- the
+paper's TUNER benchmark uses one- and two-attribute predicates) keep a
+composite int32 key pair ``(key_hi, key_lo)``; JAX's default int32
+regime forbids a packed int64 key, so comparisons are explicit
+lexicographic pair compares.  Invalid slots hold (INT32_MAX,
+INT32_MAX) which sorts after any real key (attribute values are
+assumed < INT32_MAX; the TUNER domain is [1, 1m]).
+
+In-order build invariant (relied on by the hybrid scan, Section III):
+VAP entries for page p are only inserted after pages < p are fully
+indexed, except for pages being built in the current cycle, hence
+rho_m <= rho_i + pages_per_cycle and every non-prefix page is table
+scanned.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.table import Table, INF_TS
+
+I32_MAX = jnp.int32(2**31 - 1)
+I32_MIN = jnp.int32(-(2**31))
+
+KeyPair = Tuple[jax.Array, jax.Array]  # (hi, lo) component arrays/scalars
+
+
+class AdHocIndex(NamedTuple):
+    """Sorted partial index over one or two attributes of a Table."""
+
+    key_hi: jax.Array       # (capacity,) int32 leading key component
+    key_lo: jax.Array       # (capacity,) int32 secondary component (0 if 1-attr)
+    rids: jax.Array         # (capacity,) int32
+    n_entries: jax.Array    # () int32
+    built_pages: jax.Array  # () int32  == rho_i + 1 (fully indexed prefix)
+
+    @property
+    def capacity(self) -> int:
+        return self.key_hi.shape[0]
+
+
+def make_index(capacity: int) -> AdHocIndex:
+    return AdHocIndex(
+        key_hi=jnp.full((capacity,), I32_MAX, jnp.int32),
+        key_lo=jnp.full((capacity,), I32_MAX, jnp.int32),
+        rids=jnp.zeros((capacity,), jnp.int32),
+        n_entries=jnp.zeros((), jnp.int32),
+        built_pages=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_keys(cols: Sequence[jax.Array]) -> KeyPair:
+    """Composite key components from 1 or 2 int32 columns."""
+    if len(cols) == 1:
+        return cols[0].astype(jnp.int32), jnp.zeros_like(cols[0], jnp.int32)
+    if len(cols) == 2:
+        return cols[0].astype(jnp.int32), cols[1].astype(jnp.int32)
+    raise ValueError("indexes support 1 or 2 key attributes")
+
+
+def key_range(lo0, hi0, lo1=None, hi1=None) -> Tuple[KeyPair, KeyPair]:
+    """Inclusive lexicographic key range for a range predicate.
+
+    For 2-attribute indexes the range covers the leading attribute's
+    interval; rows matching the leading bound but outside the second
+    attribute's interval are post-filtered by the scan's predicate
+    re-check.
+    """
+    lo0 = jnp.asarray(lo0, jnp.int32)
+    hi0 = jnp.asarray(hi0, jnp.int32)
+    if lo1 is None:
+        return (lo0, jnp.asarray(0, jnp.int32)), (hi0, jnp.asarray(0, jnp.int32))
+    return ((lo0, jnp.asarray(lo1, jnp.int32)),
+            (hi0, jnp.asarray(hi1, jnp.int32)))
+
+
+def keys_geq(kh, kl, b: KeyPair) -> jax.Array:
+    return (kh > b[0]) | ((kh == b[0]) & (kl >= b[1]))
+
+
+def keys_leq(kh, kl, b: KeyPair) -> jax.Array:
+    return (kh < b[0]) | ((kh == b[0]) & (kl <= b[1]))
+
+
+def keys_in_range(kh, kl, lo: KeyPair, hi: KeyPair) -> jax.Array:
+    return keys_geq(kh, kl, lo) & keys_leq(kh, kl, hi)
+
+
+def _lexsort_merge(kh, kl, rids, capacity: int):
+    """Sort (key_hi, key_lo, rid) triples lexicographically, keep first
+    ``capacity`` (padding keys sort last)."""
+    order = jnp.lexsort((kl, kh))[:capacity]
+    return kh[order], kl[order], rids[order]
+
+
+# ---------------------------------------------------------------------------
+# VAP: value-agnostic page-wise population (the paper's scheme)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("key_attrs", "pages_per_cycle"))
+def build_pages_vap(index: AdHocIndex, table: Table, key_attrs: tuple,
+                    pages_per_cycle: int) -> AdHocIndex:
+    """One VAP tuning-cycle step: index the next ``pages_per_cycle`` pages.
+
+    Cost is O(pages_per_cycle * page_size) extraction + one merge of
+    the key arrays -- independent of attribute value distribution,
+    which is precisely the property Section III-A argues for.
+    """
+    psz = table.page_size
+    start = index.built_pages
+    page_off = jnp.arange(pages_per_cycle, dtype=jnp.int32)
+    pages = start + page_off
+    # Only *fully populated* pages may be indexed and counted as built:
+    # a partially filled watermark page must stay inside the table-scan
+    # region, otherwise later appends to it would be invisible.
+    full_pages = (table.n_rows // psz).astype(jnp.int32)
+    in_range = pages < full_pages
+    pages_c = jnp.clip(pages, 0, table.n_pages - 1)
+
+    rows = table.data[pages_c]                      # (P, psz, n_attrs)
+    cols = [rows[:, :, a] for a in key_attrs]
+    kh, kl = make_keys(cols)
+    kh, kl = kh.reshape(-1), kl.reshape(-1)
+    slot = jnp.arange(psz, dtype=jnp.int32)[None, :]
+    new_rids = (pages_c[:, None] * psz + slot).reshape(-1)
+    # Only slots that ever held a row are indexed; dead versions stay
+    # indexed (the scan re-checks MVCC visibility).
+    occupied = (table.begin_ts[pages_c] < INF_TS).reshape(-1)
+    valid = occupied & jnp.repeat(in_range, psz)
+    kh = jnp.where(valid, kh, I32_MAX)
+    kl = jnp.where(valid, kl, I32_MAX)
+
+    mh = jnp.concatenate([index.key_hi, kh])
+    ml = jnp.concatenate([index.key_lo, kl])
+    mr = jnp.concatenate([index.rids, new_rids.astype(jnp.int32)])
+    mh, ml, mr = _lexsort_merge(mh, ml, mr, index.capacity)
+    n_entries = index.n_entries + jnp.sum(valid, dtype=jnp.int32)
+    built = jnp.minimum(start + pages_per_cycle, full_pages)
+    built = jnp.maximum(built, start)  # never regress
+    return AdHocIndex(mh, ml, mr, n_entries, built)
+
+
+def build_full(index: AdHocIndex, table: Table, key_attrs: tuple) -> AdHocIndex:
+    """FULL scheme: index every page in one (expensive) shot."""
+    return build_pages_vap(index, table, key_attrs,
+                           pages_per_cycle=table.n_pages)
+
+
+# ---------------------------------------------------------------------------
+# VBP: value-based partial population (cracking / SMIX / holistic style)
+# ---------------------------------------------------------------------------
+
+class VbpState(NamedTuple):
+    """VBP index + covering metadata.
+
+    ``cov_*`` is a fixed-capacity interval set over the composite key
+    domain -- the "covering tree" of SMIX.  An interval means every
+    tuple whose key falls inside it is present in the index.
+    ``in_index`` marks rids already indexed so overlapping sub-domain
+    populations never create duplicate entries.
+    """
+    index: AdHocIndex
+    cov_lo_hi: jax.Array  # (max_intervals,) int32 -- lower bound, hi comp
+    cov_lo_lo: jax.Array  # (max_intervals,) int32 -- lower bound, lo comp
+    cov_hi_hi: jax.Array  # (max_intervals,) int32 -- upper bound, hi comp
+    cov_hi_lo: jax.Array  # (max_intervals,) int32 -- upper bound, lo comp
+    n_cov: jax.Array      # () int32
+    in_index: jax.Array   # (row_capacity,) bool
+
+
+def make_vbp(capacity: int, max_intervals: int = 64) -> VbpState:
+    return VbpState(
+        index=make_index(capacity),
+        cov_lo_hi=jnp.full((max_intervals,), I32_MAX, jnp.int32),
+        cov_lo_lo=jnp.full((max_intervals,), I32_MAX, jnp.int32),
+        cov_hi_hi=jnp.full((max_intervals,), I32_MIN, jnp.int32),
+        cov_hi_lo=jnp.full((max_intervals,), I32_MIN, jnp.int32),
+        n_cov=jnp.zeros((), jnp.int32),
+        in_index=jnp.zeros((capacity,), bool),
+    )
+
+
+def vbp_is_covered(state: VbpState, lo: KeyPair, hi: KeyPair) -> jax.Array:
+    """True iff [lo, hi] lies inside one covered interval."""
+    cov_leq_lo = keys_leq(state.cov_lo_hi, state.cov_lo_lo, lo)   # cov_lo <= lo
+    hi_leq_cov = keys_geq(state.cov_hi_hi, state.cov_hi_lo, hi)   # hi <= cov_hi
+    inside = cov_leq_lo & hi_leq_cov
+    inside &= jnp.arange(state.cov_lo_hi.shape[0]) < state.n_cov
+    return jnp.any(inside)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("key_attrs", "max_add"))
+def vbp_populate_subdomain(state: VbpState, table: Table, key_attrs: tuple,
+                           lo: KeyPair, hi: KeyPair, ts,
+                           max_add: int) -> Tuple[VbpState, jax.Array]:
+    """Add index entries for every tuple whose key is in [lo, hi].
+
+    This is the value-based population step: its cost is proportional
+    to the number of tuples in the sub-domain (hence the latency
+    spikes of Figures 2 and 7).  Returns (state, n_added); n_added is
+    the work performed, which the benchmark runner charges to the
+    query that triggered the population.
+    """
+    cols = [table.data[:, :, a] for a in key_attrs]
+    kh, kl = make_keys(cols)
+    kh, kl = kh.reshape(-1), kl.reshape(-1)
+    occupied = (table.begin_ts < INF_TS).reshape(-1)
+    already = vbp_is_covered(state, lo, hi)
+    want = (occupied & keys_in_range(kh, kl, lo, hi)
+            & ~already & ~state.in_index)
+    n_want = jnp.sum(want, dtype=jnp.int32)
+
+    order = jnp.argsort(~want, stable=True)
+    take = order[:max_add].astype(jnp.int32)
+    ok = jnp.arange(max_add) < jnp.minimum(n_want, max_add)
+    nk_hi = jnp.where(ok, kh[take], I32_MAX)
+    nk_lo = jnp.where(ok, kl[take], I32_MAX)
+
+    idx = state.index
+    mh = jnp.concatenate([idx.key_hi, nk_hi])
+    ml = jnp.concatenate([idx.key_lo, nk_lo])
+    mr = jnp.concatenate([idx.rids, take])
+    mh, ml, mr = _lexsort_merge(mh, ml, mr, idx.capacity)
+    new_index = AdHocIndex(mh, ml, mr,
+                           idx.n_entries + jnp.minimum(n_want, max_add),
+                           idx.built_pages)
+    in_index = state.in_index.at[take].set(state.in_index[take] | ok)
+    # Record coverage only if the whole sub-domain fit this cycle.
+    fits = (n_want <= max_add) & ~already
+    slot = jnp.minimum(state.n_cov, state.cov_lo_hi.shape[0] - 1)
+    def upd(arr, val, sentinel):
+        return arr.at[slot].set(jnp.where(fits, val, arr[slot]))
+    cov_lo_hi = upd(state.cov_lo_hi, lo[0], I32_MAX)
+    cov_lo_lo = upd(state.cov_lo_lo, lo[1], I32_MAX)
+    cov_hi_hi = upd(state.cov_hi_hi, hi[0], I32_MIN)
+    cov_hi_lo = upd(state.cov_hi_lo, hi[1], I32_MIN)
+    n_cov = state.n_cov + jnp.where(fits, 1, 0).astype(jnp.int32)
+    return (VbpState(new_index, cov_lo_hi, cov_lo_lo, cov_hi_hi, cov_hi_lo,
+                     n_cov, in_index),
+            jnp.minimum(n_want, max_add))
+
+
+def vbp_invalidate_coverage(state: VbpState) -> VbpState:
+    """Drop coverage claims after table mutations (inserts create rows
+    the covering intervals do not know about).  Index entries stay --
+    the scan re-checks visibility -- but pure index scans are no
+    longer legal until sub-domains are re-populated."""
+    return state._replace(n_cov=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Index range scan (shared by all schemes)
+# ---------------------------------------------------------------------------
+
+def index_range_scan(index: AdHocIndex, lo: KeyPair, hi: KeyPair):
+    """Return (entry_mask, rids) for composite keys in [lo, hi].
+
+    ``entry_mask`` is (capacity,) bool over the sorted entry array;
+    callers gather rows via ``rids`` and must re-check the predicate
+    and MVCC visibility against the table (stored keys can be stale
+    for updated rows; see hybrid_scan).
+    """
+    ar = jnp.arange(index.capacity, dtype=jnp.int32)
+    mask = keys_in_range(index.key_hi, index.key_lo, lo, hi)
+    mask &= ar < index.n_entries
+    return mask, index.rids

@@ -1,0 +1,226 @@
+"""Paged, in-memory columnar table with lightweight multi-versioning.
+
+This is the storage substrate the paper's index tuner operates on
+(Section III of the paper).  The table is a fixed-capacity, paged
+column store held in JAX arrays so that scans, predicate evaluation
+and aggregation are jit-compiled vectorised programs.
+
+Layout
+------
+``data``      (n_pages, page_size, n_attrs) int32   -- attribute values
+``begin_ts``  (n_pages, page_size) int32            -- MVCC begin timestamp
+``end_ts``    (n_pages, page_size) int32            -- MVCC end timestamp
+``n_rows``    ()                  int32             -- append watermark
+
+A *rid* (row identifier) is ``page_id * page_size + slot``.  Pages are
+filled in rid order; inserts and MVCC update-versions are appended at
+the ``n_rows`` watermark, exactly like the append-only version chains
+of DBMS-X described in the paper (Section III, "Concurrency Control &
+Updates").  Old versions are terminated by setting ``end_ts``.
+
+A row version is *visible* to a snapshot timestamp ``ts`` iff::
+
+    begin_ts <= ts < end_ts
+
+Unoccupied slots have ``begin_ts == INT32_MAX`` so they are never
+visible.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF_TS = np.int32(2**31 - 1)  # "infinity" end timestamp (live version)
+NEVER_TS = np.int32(2**31 - 1)  # begin_ts for unoccupied slots
+
+
+class Table(NamedTuple):
+    """Immutable paged column store (a pytree; all ops are functional)."""
+
+    data: jax.Array      # (n_pages, page_size, n_attrs) int32
+    begin_ts: jax.Array  # (n_pages, page_size) int32
+    end_ts: jax.Array    # (n_pages, page_size) int32
+    n_rows: jax.Array    # () int32 append watermark
+
+    # ---- static geometry helpers -------------------------------------
+    @property
+    def n_pages(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def page_size(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def n_attrs(self) -> int:
+        return self.data.shape[2]
+
+    @property
+    def capacity(self) -> int:
+        return self.n_pages * self.page_size
+
+
+def make_table(n_pages: int, page_size: int, n_attrs: int) -> Table:
+    """An empty table with fixed capacity."""
+    return Table(
+        data=jnp.zeros((n_pages, page_size, n_attrs), jnp.int32),
+        begin_ts=jnp.full((n_pages, page_size), NEVER_TS, jnp.int32),
+        end_ts=jnp.full((n_pages, page_size), INF_TS, jnp.int32),
+        n_rows=jnp.zeros((), jnp.int32),
+    )
+
+
+def load_table(values: np.ndarray, page_size: int, n_pages: int | None = None,
+               ts: int = 0) -> Table:
+    """Bulk-load ``values`` (n, n_attrs) into a fresh table at timestamp ts.
+
+    ``n_pages`` may reserve extra append room for inserts/updates; it
+    defaults to exactly fitting the data.
+    """
+    values = np.asarray(values, np.int32)
+    n, n_attrs = values.shape
+    min_pages = -(-n // page_size)
+    if n_pages is None:
+        n_pages = min_pages
+    if n_pages < min_pages:
+        raise ValueError(f"n_pages={n_pages} cannot hold {n} rows")
+    data = np.zeros((n_pages, page_size, n_attrs), np.int32)
+    begin = np.full((n_pages, page_size), NEVER_TS, np.int32)
+    end = np.full((n_pages, page_size), INF_TS, np.int32)
+    flat = data.reshape(-1, n_attrs)
+    flat[:n] = values
+    begin.reshape(-1)[:n] = ts
+    return Table(jnp.asarray(data), jnp.asarray(begin), jnp.asarray(end),
+                 jnp.asarray(n, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Visibility & predicates
+# ---------------------------------------------------------------------------
+
+def visible_mask(table: Table, ts) -> jax.Array:
+    """(n_pages, page_size) bool -- versions visible at snapshot ``ts``."""
+    ts = jnp.asarray(ts, jnp.int32)
+    return (table.begin_ts <= ts) & (ts < table.end_ts)
+
+
+def range_predicate_mask(table: Table, attr: int, lo, hi) -> jax.Array:
+    """(n_pages, page_size) bool -- rows with lo <= a_attr <= hi (inclusive)."""
+    col = table.data[:, :, attr]
+    return (col >= jnp.asarray(lo, jnp.int32)) & (col <= jnp.asarray(hi, jnp.int32))
+
+
+def conj_predicate_mask(table: Table, attrs, los, his) -> jax.Array:
+    """Conjunctive multi-attribute range predicate.
+
+    ``attrs`` is a static tuple of column indices; ``los``/``his`` are
+    (possibly traced) per-attribute inclusive bounds.
+    """
+    mask = jnp.ones(table.data.shape[:2], bool)
+    for k, attr in enumerate(attrs):
+        mask &= range_predicate_mask(table, attr, los[k], his[k])
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# Mutators (INSERT / UPDATE) -- functional, jit-friendly, fixed shapes
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("max_new",))
+def insert_rows(table: Table, rows: jax.Array, ts, n_new, max_new: int) -> Table:
+    """Append ``n_new`` of the first ``max_new`` rows at timestamp ts.
+
+    ``rows`` is (max_new, n_attrs); only the first n_new are live.
+    Appends past capacity are dropped (callers size tables to avoid it).
+    """
+    del max_new  # shape is static via rows
+    ts = jnp.asarray(ts, jnp.int32)
+    base = table.n_rows
+    idx = base + jnp.arange(rows.shape[0], dtype=jnp.int32)
+    ok = (jnp.arange(rows.shape[0]) < n_new) & (idx < table.capacity)
+    idx = jnp.where(ok, idx, table.capacity - 1)  # parked writes are masked off
+    pg, sl = idx // table.page_size, idx % table.page_size
+    data = table.data.at[pg, sl].set(
+        jnp.where(ok[:, None], rows.astype(jnp.int32), table.data[pg, sl]))
+    begin = table.begin_ts.at[pg, sl].set(
+        jnp.where(ok, ts, table.begin_ts[pg, sl]))
+    end = table.end_ts.at[pg, sl].set(
+        jnp.where(ok, INF_TS, table.end_ts[pg, sl]))
+    n_rows = jnp.minimum(base + jnp.asarray(n_new, jnp.int32),
+                         jnp.asarray(table.capacity, jnp.int32))
+    return Table(data, begin, end, n_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("attrs", "max_new"))
+def update_rows(table: Table, attrs: tuple, los, his, set_attrs,
+                set_vals, ts, max_new: int) -> Tuple[Table, jax.Array]:
+    """MVCC UPDATE: terminate matching visible versions and append new ones.
+
+    Matches rows where the conjunctive range predicate over ``attrs``
+    holds, sets columns ``set_attrs`` (a *dynamic* int32 index array,
+    so randomised SET lists do not trigger recompilation) to
+    ``set_vals`` in the new versions.  At most ``max_new`` new versions
+    are materialised per call (the paper's update templates touch small
+    row counts; the cap keeps shapes static).  Returns
+    (new_table, n_updated).
+    """
+    ts = jnp.asarray(ts, jnp.int32)
+    set_attrs = jnp.asarray(set_attrs, jnp.int32)
+    set_vals = jnp.asarray(set_vals, jnp.int32)
+    match = conj_predicate_mask(table, attrs, los, his) & visible_mask(table, ts)
+    flat_match = match.reshape(-1)
+    n_match = jnp.sum(flat_match, dtype=jnp.int32)
+
+    # Select up to max_new matching rids (in rid order).
+    order = jnp.argsort(~flat_match, stable=True)  # matches first
+    rids = order[:max_new].astype(jnp.int32)
+    sel_ok = jnp.arange(max_new) < jnp.minimum(n_match, max_new)
+    pg, sl = rids // table.page_size, rids % table.page_size
+
+    # Terminate old versions.
+    end = table.end_ts.at[pg, sl].set(
+        jnp.where(sel_ok, ts, table.end_ts[pg, sl]))
+    old_rows = table.data[pg, sl]  # (max_new, n_attrs)
+    new_rows = old_rows.at[:, set_attrs].set(
+        jnp.broadcast_to(set_vals, (old_rows.shape[0], set_vals.shape[0])))
+    table = Table(table.data, table.begin_ts, end, table.n_rows)
+    n_upd = jnp.minimum(n_match, max_new)
+    table = insert_rows(table, new_rows, ts, n_upd, max_new=max_new)
+    return table, n_upd
+
+
+# ---------------------------------------------------------------------------
+# Full table scan (the fallback access path)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("attrs", "agg_attr", "from_page_static"))
+def table_scan(table: Table, attrs: tuple, los, his, ts, agg_attr: int,
+               from_page=0, from_page_static: bool = False):
+    """Scan pages >= from_page, returning (match_mask, sum, count).
+
+    ``match_mask`` is (n_pages, page_size) and already accounts for
+    MVCC visibility.  ``from_page`` supports the hybrid scan's partial
+    table scan.
+    """
+    del from_page_static
+    mask = conj_predicate_mask(table, attrs, los, his) & visible_mask(table, ts)
+    page_ids = jnp.arange(table.n_pages, dtype=jnp.int32)[:, None]
+    mask = mask & (page_ids >= jnp.asarray(from_page, jnp.int32))
+    vals = table.data[:, :, agg_attr]
+    # int32 accumulation with wraparound semantics (x64 is disabled in
+    # this deployment; oracles in tests use matching np.int32 math).
+    s = jnp.sum(jnp.where(mask, vals, 0), dtype=jnp.int32)
+    c = jnp.sum(mask, dtype=jnp.int32)
+    return mask, s, c
+
+
+def rid_page(rid, page_size: int):
+    return rid // page_size
+
+
+def rid_slot(rid, page_size: int):
+    return rid % page_size

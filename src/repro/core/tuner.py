@@ -1,0 +1,235 @@
+"""Predictive index tuner -- Algorithm 1 of the paper.
+
+Every tuning cycle runs the observe-react-learn template:
+
+  Stage I   workload classification (CART decision tree, Section IV-A)
+  Stage II  action generation: candidate enumeration, what-if utility,
+            0-1 knapsack under the storage budget, amortised state
+            transition using lightweight VAP changes (Section IV-B)
+  Stage III index-utility forecasting: Holt-Winters update with the
+            observed overall utility; the forecast feeds the next
+            cycle's knapsack as the reinforcement signal (Section IV-C)
+
+The tuner retains forecaster state for dropped indexes so their future
+utility remains predictable, which is what enables the ahead-of-time
+builds on recurring (e.g. diurnal) workloads in Figure 6.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core import knapsack
+from repro.core.classifier import (READ_INTENSIVE, UNKNOWN, WRITE_INTENSIVE,
+                                   CartClassifier, default_classifier)
+from repro.core.cost_model import IndexDescriptor
+from repro.core.executor import Database, ExecStats, Query
+from repro.core import forecaster as hw
+
+
+@dataclass
+class TunerConfig:
+    storage_budget_bytes: float = 256e6
+    pages_per_cycle: int = 32          # VAP lightweight build step
+    max_build_pages_per_cycle: int = 64  # total across all building indexes
+    season_len: int = 16               # Holt-Winters seasonality period (cycles)
+    alpha: float = 0.5
+    beta: float = 0.3
+    gamma: float = 0.4
+    u_min_read: float = 0.0            # min forecast utility to keep an index
+    u_min_write: float = 0.25          # scaled-up threshold in write phases
+    candidate_min_count: int = 3       # appearances in window before considering
+    max_candidates: int = 16
+    redundancy_dampening: float = 0.5  # utility factor for correlated candidates
+
+
+def enumerate_candidates(db: Database, min_count: int, max_candidates: int
+                         ) -> List[Tuple[IndexDescriptor, int]]:
+    """Candidate single- and two-attribute indexes from the monitor's
+    predicate statistics (Section IV-B): attribute sets seen at least
+    ``min_count`` times in the window, most frequent first."""
+    out: List[Tuple[IndexDescriptor, int]] = []
+    for table in db.monitor.tables():
+        for attrs, count in db.monitor.attr_set_counts(table).most_common():
+            if count < min_count:
+                continue
+            key = tuple(attrs[:2])  # engine supports 1- and 2-attr keys
+            out.append((IndexDescriptor(table, key), count))
+            if len(key) > 1:  # the single-attr prefix is also a candidate
+                out.append((IndexDescriptor(table, key[:1]), count))
+    # dedupe, keep best counts, cap
+    seen: Dict[str, Tuple[IndexDescriptor, int]] = {}
+    for desc, count in out:
+        if desc.name not in seen or seen[desc.name][1] < count:
+            seen[desc.name] = (desc, count)
+    ranked = sorted(seen.values(), key=lambda dc: -dc[1])
+    return ranked[:max_candidates]
+
+
+class PredictiveTuner:
+    """The paper's tuner: predictive DL + VAP scheme.
+
+    ``use_forecaster=False`` degrades the decision logic to the purely
+    retrospective variant (utility = last-k window only, no look-ahead)
+    and ``immediate=True`` to the immediate variant (k=1: candidates
+    and utilities from the most recent query only) -- the two DL
+    baselines of Figure 6, sharing the identical VAP substrate so the
+    comparison isolates the decision logic.
+    """
+
+    name = "predictive"
+    scheme = "vap"
+
+    def __init__(self, db: Database, config: TunerConfig | None = None,
+                 classifier: Optional[CartClassifier] = None,
+                 use_forecaster: bool = True, immediate: bool = False):
+        self.db = db
+        self.cfg = config or TunerConfig()
+        self.classifier = classifier or default_classifier()
+        self.use_forecaster = use_forecaster
+        self.immediate = immediate
+        self.models: Dict[str, hw.HWState] = {}       # per-index forecaster
+        self.descs: Dict[str, IndexDescriptor] = {}   # every desc ever seen
+        self.forecasts: Dict[str, float] = {}         # U from last Stage III
+        self.last_label: int = UNKNOWN
+        self.cycles: int = 0
+
+    # ---- immediate hook: predictive DL does no in-query work ----------
+    def on_query(self, q: Query, stats: ExecStats) -> float:
+        return 0.0
+
+    # ---- Algorithm 1 ---------------------------------------------------
+    def tuning_cycle(self, idle: bool = False) -> float:
+        db, cfg = self.db, self.cfg
+        work = 0.0
+        db.monitor.prune(db.clock_ms)
+
+        # Stage I: workload classification
+        feats, n = db.monitor.snapshot_features()
+        label = self.classifier.predict(feats, n_samples=n)
+        if label != UNKNOWN:
+            self.last_label = label
+
+        # Stage II: action generation ---------------------------------
+        min_count = 1 if self.immediate else cfg.candidate_min_count
+        for desc, _count in enumerate_candidates(db, min_count,
+                                                 cfg.max_candidates):
+            self.descs.setdefault(desc.name, desc)
+
+        if self.immediate:
+            # k=1: only the most recent statement informs the decision.
+            recs = list(db.monitor.records)[-1:]
+            scans = {}
+            muts = {}
+            for r in recs:
+                (scans if r.kind == "scan" else muts).setdefault(
+                    r.table, []).append(r)
+                if r.pred_attrs:
+                    d = IndexDescriptor(r.table, tuple(r.pred_attrs[:2]))
+                    self.descs.setdefault(d.name, d)
+        else:
+            scans = {t: list(db.monitor.scan_records(t))
+                     for t in db.monitor.tables()}
+            muts = {t: list(db.monitor.mutator_records(t))
+                    for t in db.monitor.tables()}
+
+        names = list(self.descs)
+        utilities, sizes, force = [], [], []
+        observed: Dict[str, float] = {}
+        for name in names:
+            desc = self.descs[name]
+            t = db.tables[desc.table]
+            n_rows = int(t.n_rows)
+            o = cm.overall_utility(desc, scans.get(desc.table, ()),
+                                   muts.get(desc.table, ()), n_rows)
+            upd_u = cm.update_lookup_utility(desc, muts.get(desc.table, ()),
+                                             n_rows)
+            o = max(o, 0.0) + upd_u
+            observed[name] = o
+            # knapsack utility: forecast if a model exists, else bootstrap
+            # with the observed overall utility (Algorithm 1).  The
+            # retrospective/immediate DL variants always use the
+            # window-observed utility (no look-ahead).
+            if self.use_forecaster and name in self.models:
+                u = max(self.forecasts.get(name, o), o)
+            else:
+                u = o
+            utilities.append(u)
+            sizes.append(cm.index_size_bytes(n_rows))
+            force.append(name in db.indexes and upd_u > 0.0)
+
+        # Redundancy dampening: correlated candidates (same leading
+        # attribute as an already-built index) get discounted.
+        built_leading = {(b.desc.table, b.desc.key_attrs[0])
+                         for b in db.indexes.values()}
+        for i, name in enumerate(names):
+            d = self.descs[name]
+            if name not in db.indexes and \
+                    (d.table, d.key_attrs[0]) in built_leading:
+                utilities[i] *= cfg.redundancy_dampening
+
+        # Minimum-utility pruning threshold scales with workload type.
+        u_min = {WRITE_INTENSIVE: cfg.u_min_write,
+                 READ_INTENSIVE: cfg.u_min_read}.get(
+                     self.last_label, cfg.u_min_read)
+        u_arr = np.asarray(utilities, np.float64)
+        scale = max(u_arr.max(), 1.0)
+        eligible = (u_arr / scale) > u_min
+
+        keep = knapsack.solve(np.where(eligible, u_arr, 0.0),
+                              np.asarray(sizes), cfg.storage_budget_bytes,
+                              force_keep=np.asarray(force, bool))
+
+        # State transition (amortised): drops now, builds via VAP steps.
+        chosen = {names[i] for i in range(len(names)) if keep[i]}
+        for name in list(db.indexes):
+            if name not in chosen:
+                db.drop_index(name)
+        for name in chosen:
+            if name not in db.indexes:
+                db.create_index(self.descs[name], scheme=self.scheme)
+
+        # Lightweight build work, bounded per cycle (prevents spikes).
+        budget_pages = cfg.max_build_pages_per_cycle
+        building = [b for b in db.indexes.values()
+                    if b.scheme in ("vap",) and b.building]
+        for b in building:
+            if budget_pages <= 0:
+                break
+            step = min(cfg.pages_per_cycle, budget_pages)
+            work += db.vap_build_step(b, step)
+            budget_pages -= step
+
+        # Stage III: index utility forecasting ------------------------
+        if self.use_forecaster:
+            for name in names:
+                st = self.models.get(name)
+                if st is None:
+                    st = hw.init_state(self.cfg.season_len)
+                st = hw.update(st, observed[name], cfg.alpha, cfg.beta,
+                               cfg.gamma)
+                self.models[name] = st
+                self.forecasts[name] = float(hw.forecast(st, 1))
+        self.cycles += 1
+        return work
+
+
+def make_dl_tuner(db: Database, dl: str, config: TunerConfig | None = None,
+                  classifier: Optional[CartClassifier] = None
+                  ) -> "PredictiveTuner":
+    """Figure 6 factory: the three decision logics on identical VAP
+    substrate.  dl in {'predictive', 'retrospective', 'immediate'}."""
+    if dl == "predictive":
+        t = PredictiveTuner(db, config, classifier)
+    elif dl == "retrospective":
+        t = PredictiveTuner(db, config, classifier, use_forecaster=False)
+    elif dl == "immediate":
+        t = PredictiveTuner(db, config, classifier, use_forecaster=False,
+                            immediate=True)
+    else:
+        raise ValueError(dl)
+    t.name = dl
+    return t

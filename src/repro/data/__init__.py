@@ -1,0 +1,4 @@
+"""Data substrate: deterministic sharded token pipeline."""
+from repro.data.pipeline import TokenPipeline
+
+__all__ = ["TokenPipeline"]

@@ -1,0 +1,72 @@
+"""Jit'd public wrappers around the Pallas scan kernels.
+
+``scan_table`` / ``scan_table_hybrid`` adapt the engine's Table layout
+(columns stacked in one (n_pages, page_size, n_attrs) array) to the
+kernels' column-plane interface and pick hardware-aligned block shapes.
+On this CPU container the kernels run in interpret mode by default;
+on TPU pass ``interpret=False`` (the default flips via
+``repro.kernels.INTERPRET``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import filter_agg as _fa
+
+I32_MIN = _fa.I32_MIN
+I32_MAX = _fa.I32_MAX
+
+# Flip to False on real TPU deployments.
+INTERPRET = True
+
+
+def _pick_block_pages(n_pages: int) -> int:
+    for bp in (64, 32, 16, 8):
+        if n_pages >= bp:
+            return bp
+    return 8
+
+
+def scan_table(table, attrs, los, his, ts, agg_attr,
+               interpret: bool | None = None):
+    """Full-table filter+aggregate via the Pallas kernel.
+
+    ``table`` is a repro.core.table.Table; ``attrs`` constrains 1 or 2
+    columns with inclusive bounds los/his.
+    """
+    interpret = INTERPRET if interpret is None else interpret
+    pred0 = table.data[:, :, attrs[0]]
+    lo0, hi0 = los[0], his[0]
+    if len(attrs) == 2:
+        pred1 = table.data[:, :, attrs[1]]
+        lo1, hi1 = los[1], his[1]
+    else:
+        pred1 = pred0
+        lo1, hi1 = I32_MIN, I32_MAX
+    agg = table.data[:, :, agg_attr]
+    return _fa.filter_agg(pred0, pred1, agg, table.begin_ts, table.end_ts,
+                          lo0, hi0, lo1, hi1, ts,
+                          block_pages=_pick_block_pages(table.n_pages),
+                          interpret=interpret)
+
+
+def scan_table_hybrid(table, attrs, los, his, ts, agg_attr, start_page,
+                      interpret: bool | None = None):
+    """The hybrid scan's table-scan suffix: pages >= start_page only.
+    Blocks fully inside the indexed prefix are skipped pre-DMA via the
+    scalar-prefetched ``start_page``."""
+    interpret = INTERPRET if interpret is None else interpret
+    pred0 = table.data[:, :, attrs[0]]
+    lo0, hi0 = los[0], his[0]
+    if len(attrs) == 2:
+        pred1 = table.data[:, :, attrs[1]]
+        lo1, hi1 = los[1], his[1]
+    else:
+        pred1 = pred0
+        lo1, hi1 = I32_MIN, I32_MAX
+    agg = table.data[:, :, agg_attr]
+    return _fa.filter_agg(pred0, pred1, agg, table.begin_ts, table.end_ts,
+                          lo0, hi0, lo1, hi1, ts,
+                          start_page=jnp.asarray(start_page, jnp.int32),
+                          block_pages=_pick_block_pages(table.n_pages),
+                          interpret=interpret)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas scan kernels.
+
+These are the semantics contracts: every kernel in this package must
+``assert_allclose`` (exact, integer) against these across the shape /
+dtype sweep in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def filter_agg_ref(pred0, pred1, agg, begin_ts, end_ts, lo0, hi0, lo1, hi1, ts):
+    """Predicate-filter + aggregate over a paged column layout.
+
+    pred0/pred1/agg/begin_ts/end_ts : (n_pages, page_size) int32
+    bounds, ts                      : scalars (int32)
+
+    Returns (sum, count) int32 -- SUM(agg) and COUNT(*) over rows with
+    lo0 <= pred0 <= hi0  AND  lo1 <= pred1 <= hi1  visible at ``ts``.
+    Single-attribute predicates pass lo1 = INT32_MIN, hi1 = INT32_MAX.
+    """
+    mask = (pred0 >= lo0) & (pred0 <= hi0) & (pred1 >= lo1) & (pred1 <= hi1)
+    mask &= (begin_ts <= ts) & (ts < end_ts)
+    s = jnp.sum(jnp.where(mask, agg, 0), dtype=jnp.int32)
+    c = jnp.sum(mask, dtype=jnp.int32)
+    return s, c
+
+
+def masked_filter_agg_ref(pred0, pred1, agg, begin_ts, end_ts,
+                          lo0, hi0, lo1, hi1, ts, start_page):
+    """The hybrid scan's table-scan suffix: same as ``filter_agg_ref``
+    but only pages >= start_page contribute (the indexed prefix is
+    served by the index scan)."""
+    n_pages = pred0.shape[0]
+    page_ids = jnp.arange(n_pages, dtype=jnp.int32)[:, None]
+    mask = (pred0 >= lo0) & (pred0 <= hi0) & (pred1 >= lo1) & (pred1 <= hi1)
+    mask &= (begin_ts <= ts) & (ts < end_ts)
+    mask &= page_ids >= start_page
+    s = jnp.sum(jnp.where(mask, agg, 0), dtype=jnp.int32)
+    c = jnp.sum(mask, dtype=jnp.int32)
+    return s, c

@@ -1,0 +1,2 @@
+"""Launchers: production mesh, shape specs, multi-pod dry-run, train
+and serve entry points."""

@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first initialisation).  Do not move them.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input
+shape) cell on the production meshes and extract the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k [--multi-pod] [--bits8]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Results (memory analysis, HLO flops/bytes, per-collective bytes,
+compile time) are appended as JSON lines under benchmarks/dryrun/.
+A cell FAILING to lower/compile here is a bug in the distribution
+config, not an environment limitation.
+"""
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import decode_step, prefill
+from repro.models.config import active_param_count, param_count
+from repro.parallel import sharding as shardlib
+from repro.train.optimizer import cosine_schedule
+from repro.train.steps import make_train_step
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "dryrun"
+
+COLLECTIVE_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\(")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+               "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
+               "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in the partitioned
+    HLO (result bytes approximate payload; for all-reduce they equal
+    it, for all-gather they are the post-gather size -- documented in
+    EXPERIMENTS.md)."""
+    out: Dict[str, float] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        dt, dims, kind = m.group(2), m.group(3), m.group(4)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[kind] = out.get(kind, 0.0) + n * DTYPE_BYTES.get(dt, 4)
+    return out
+
+
+def _train_lowered(cfg, shape_name, mesh, bits8=False, opt=False):
+    if opt:
+        # beyond-paper optimised train variant: bf16 weights (f32
+        # master moments in AdamW), head-padded attention
+        cfg = cfg.scaled(param_dtype="bfloat16", pad_attn_heads=True)
+    seq, gbatch, _ = SHAPES[shape_name]
+    lr = cosine_schedule(3e-4, 100, 10_000)
+    step = make_train_step(cfg, lr, bits8=bits8)
+    state = S.abstract_train_state(cfg, bits8=bits8)
+    batch = S.input_specs(cfg, shape_name)
+
+    state_sh = shardlib.tree_shardings(mesh, state)
+    batch_sh = S.batch_shardings(mesh, batch)
+    jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     donate_argnums=(0,))
+    return jitted.lower(state, batch)
+
+
+def _serve_lowered(cfg, shape_name, mesh, opt=False):
+    if opt:
+        # serving: stationary bf16 weights, head-padded attention, and
+        # (for cheap q_rep) a GQA-repeated head-sharded KV cache so the
+        # decode cache update/read stays shard-local
+        cfg = cfg.scaled(param_dtype="bfloat16", pad_attn_heads=True,
+                         cache_repeated_kv=cfg.q_rep <= 2)
+    seq, gbatch, kind = SHAPES[shape_name]
+    params = S.abstract_params(cfg)
+    params_sh = shardlib.tree_shardings(mesh, params)
+    if kind == "prefill":
+        batch = S.input_specs(cfg, shape_name)
+        batch.pop("labels", None)
+        batch_sh = S.batch_shardings(mesh, batch)
+
+        def prefill_step(p, b):
+            logits, cache = prefill(p, cfg, b, s_max=seq)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        jitted = jax.jit(prefill_step, in_shardings=(params_sh, batch_sh))
+        return jitted.lower(params, batch)
+
+    specs = S.decode_specs(cfg, shape_name)
+    tok_sh = S.batch_shardings(mesh, {"tokens": specs["tokens"]})["tokens"]
+    cache_sh = S.cache_shardings(mesh, cfg, specs["cache"])
+    pos_sh = NamedSharding(mesh, P())
+
+    def decode_one(p, tok, cache, pos):
+        logits, cache = decode_step(p, cfg, tok, cache, pos)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    jitted = jax.jit(decode_one,
+                     in_shardings=(params_sh, tok_sh, cache_sh, pos_sh),
+                     donate_argnums=(2,))
+    return jitted.lower(params, specs["tokens"], specs["cache"],
+                        specs["pos"])
+
+
+def _measure(cfg, shape_name, mesh, kind, bits8, opt=False):
+    t0 = time.time()
+    if kind == "train":
+        lowered = _train_lowered(cfg, shape_name, mesh, bits8=bits8, opt=opt)
+    else:
+        lowered = _serve_lowered(cfg, shape_name, mesh, opt=opt)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    return {"cost": cost, "mem": mem, "coll": collective_bytes(hlo),
+            "t_lower": t_lower, "t_compile": t_compile}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             bits8: bool = False, save: bool = True,
+             measure: bool = True, opt: bool = False) -> Dict:
+    cfg = get_config(arch)
+    ok, note = shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "note": note}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    seq, gbatch, kind = SHAPES[shape_name]
+    rules = (shardlib.SERVE_RULES if (opt and kind != "train")
+             else shardlib.DEFAULT_RULES)
+    with shardlib.activate(mesh, rules):
+        full = _measure(cfg, shape_name, mesh, kind, bits8, opt=opt)
+        if not measure:
+            # compile-success pass only (multi-pod feasibility)
+            small1 = small2 = {"cost": full["cost"], "coll": full["coll"]}
+        # XLA cost_analysis counts while-loop (lax.scan) bodies ONCE,
+        # so FLOPs/bytes/collectives inside the layer scan are under-
+        # counted by ~n_layers.  Correct by compiling the SAME config
+        # at two small layer counts and extrapolating linearly; the
+        # full compile above remains the memory/feasibility artifact.
+        L = cfg.n_layers
+        l1, l2 = (2, 4) if cfg.family == "ssm" else (1, 2)
+        if measure:
+            small1 = _measure(cfg.scaled(n_layers=l1, unroll_layers=True),
+                              shape_name, mesh, kind, bits8, opt=opt)
+            small2 = _measure(cfg.scaled(n_layers=l2, unroll_layers=True),
+                              shape_name, mesh, kind, bits8, opt=opt)
+        else:
+            l1, l2, L = 1, 2, 1  # identity extrapolation
+
+    def corrected(key):
+        f1 = float(small1["cost"].get(key, 0.0))
+        f2 = float(small2["cost"].get(key, 0.0))
+        per_layer = (f2 - f1) / (l2 - l1)
+        return f1 + (L - l1) * per_layer
+
+    def corrected_coll():
+        out = {}
+        kinds = set(small1["coll"]) | set(small2["coll"])
+        for k in kinds:
+            f1 = small1["coll"].get(k, 0.0)
+            f2 = small2["coll"].get(k, 0.0)
+            per_layer = (f2 - f1) / (l2 - l1)
+            out[k] = f1 + (L - l1) * per_layer
+        return out
+
+    cost = full["cost"]
+    mem = full["mem"]
+    coll = corrected_coll()
+    t_lower, t_compile = full["t_lower"], full["t_compile"]
+
+    n_chips = mesh.size
+    tokens = gbatch * (seq if kind != "decode" else 1)
+    n_active = active_param_count(cfg)
+    model_flops = (6 if kind == "train" else 2) * n_active * tokens
+    if kind == "decode":
+        s_ctx = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+        if cfg.family not in ("ssm",):
+            model_flops += 4 * cfg.n_layers * s_ctx * \
+                (cfg.n_heads * cfg.hd) * gbatch
+
+    rec = {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips, "bits8": bits8, "opt": opt,
+        "hlo_flops": corrected("flops"),
+        "hlo_bytes": corrected("bytes accessed"),
+        "hlo_flops_raw": float(cost.get("flops", -1.0)),
+        "hlo_bytes_raw": float(cost.get("bytes accessed", -1.0)),
+        "collective_bytes": coll,
+        "collective_total": float(sum(coll.values())),
+        "argument_bytes_per_device": getattr(
+            mem, "argument_size_in_bytes", 0),
+        "output_bytes_per_device": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes_per_device": (
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)),
+        "params_total": param_count(cfg),
+        "params_active": n_active,
+        "model_flops": float(model_flops),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    if save:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{rec['mesh']}" \
+            + ("_8bit" if bits8 else "") + ("_opt" if opt else "")
+        (OUT_DIR / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--bits8", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="beyond-paper optimised variant (bf16 weights, "
+                         "head padding, serve-mode sharding)")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-measure", action="store_true",
+                    help="single compile per cell (feasibility pass; "
+                         "raw cost numbers, no layer extrapolation)")
+    args = ap.parse_args()
+
+    cells = []
+    for arch in ([args.arch] if args.arch else ARCH_IDS):
+        arch = arch.replace("-", "_").replace(".", "_")
+        for shape in ([args.shape] if args.shape else SHAPES):
+            cells.append((arch, shape))
+
+    failures = []
+    for arch, shape in cells:
+        mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+        tag = f"{arch}_{shape}_{mesh_tag}" \
+            + ("_8bit" if args.bits8 else "") \
+            + ("_opt" if args.opt else "")
+        if args.skip_existing and (OUT_DIR / f"{tag}.json").exists():
+            print(f"[skip existing] {tag}")
+            continue
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                           bits8=args.bits8, opt=args.opt,
+                           measure=not args.no_measure)
+            if rec.get("skipped"):
+                print(f"[skipped] {arch} {shape}: {rec['note']}")
+            else:
+                print(f"[ok] {arch} {shape} {rec['mesh']}: "
+                      f"flops={rec['hlo_flops']:.3e} "
+                      f"peak/dev={rec['peak_bytes_per_device']/2**30:.2f}GiB "
+                      f"coll={rec['collective_total']:.3e}B "
+                      f"compile={rec['compile_s']}s")
+        except Exception as e:
+            failures.append((arch, shape, repr(e)))
+            print(f"[FAIL] {arch} {shape}: {e!r}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: "
+                         + ", ".join(f"{a}/{s}" for a, s, _ in failures))
+    print("all requested cells lowered + compiled")
+
+
+if __name__ == "__main__":
+    main()

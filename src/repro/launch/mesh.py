@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module
+never touches jax device state.  The single-pod production mesh is
+16 x 16 = 256 chips (data x model); the multi-pod mesh prepends a
+2-way 'pod' axis (512 chips).  Batch parallelism spans ('pod', 'data');
+tensor/expert parallelism lives on 'model'.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, *,
+                    multi_pod: bool = False):
+    """Small mesh for CI-scale sharding tests (run under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8)."""
+    if multi_pod:
+        return jax.make_mesh((2, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def batch_spec_axes(mesh) -> tuple:
+    """Physical axes the global batch shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -1,0 +1,92 @@
+"""Serving launcher: batched decode with the predictive prefix cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+        --smoke --requests 24
+
+Demonstrates the paper's technique in the serving stack: recurring
+prompt prefixes are detected, their utility forecast, and their KV
+spans materialised incrementally ahead of the traffic that needs them.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import init_cache
+from repro.serving import BatchScheduler, PredictivePrefixCache
+from repro.train.steps import make_serve_steps
+from repro.models import init_params
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.input_kind == "embeds":
+        cfg = cfg.scaled(input_kind="tokens")
+    s_max = args.prompt_len + args.new_tokens
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prefill_step, decode_one = make_serve_steps(cfg, s_max)
+    prefill_step = jax.jit(prefill_step)
+    decode_one = jax.jit(decode_one)
+
+    rng = np.random.default_rng(0)
+    # two recurring system prefixes + random tails
+    prefixes = {f"sys{i}": rng.integers(
+        1, cfg.vocab_size, args.prompt_len // 2).astype(np.int32)
+        for i in range(2)}
+    sched = BatchScheduler(max_batch=args.batch)
+    cache_mgr = PredictivePrefixCache(
+        hbm_budget_bytes=50e6,
+        bytes_per_token=2.0 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * 2,
+        tokens_per_cycle=args.prompt_len)
+
+    for i in range(args.requests):
+        pid = f"sys{i % 2}"
+        tail = rng.integers(1, cfg.vocab_size,
+                            args.prompt_len - len(prefixes[pid]))
+        prompt = np.concatenate([prefixes[pid], tail]).astype(np.int32)
+        sched.submit(prompt, max_new_tokens=args.new_tokens, prefix_id=pid)
+
+    served, covered_tokens = 0, 0
+    t0 = time.time()
+    while not sched.idle:
+        newly = sched.admit()
+        for r in newly:
+            covered = cache_mgr.lookup(r.prefix_id, len(prefixes[r.prefix_id]))
+            covered_tokens += covered
+            batch = {"tokens": jnp.asarray(r.prompt[None, :]),
+                     "labels": jnp.zeros((1, len(r.prompt)), jnp.int32)}
+            tok, cache = prefill_step(params, batch)
+            pos = len(r.prompt)
+            t = tok
+            for _ in range(r.max_new_tokens):
+                sched.record_tokens({r.rid: int(t[0])})
+                if r.done:
+                    break
+                t, cache = decode_one(params, t[:, None], cache,
+                                      jnp.asarray(pos, jnp.int32))
+                pos += 1
+            served += 1
+        cache_mgr.cycle()
+    dt = time.time() - t0
+    print(f"served {served} requests in {dt:.1f}s; prefix cache covered "
+          f"{covered_tokens} prompt tokens across admissions; "
+          f"cache entries={len(cache_mgr.entries)}")
+    return served, covered_tokens
+
+
+if __name__ == "__main__":
+    main()

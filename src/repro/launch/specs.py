@@ -1,0 +1,120 @@
+"""ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+``input_specs(cfg, shape_name)`` returns the abstract batch for the
+cell's step function; ``abstract_state`` / ``abstract_cache`` build
+the weight/optimizer/cache stand-ins.  Nothing here allocates device
+memory -- everything is jax.eval_shape + ShapeDtypeStruct, which is
+what lets 140B-parameter cells lower and compile on a CPU host.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES
+from repro.models import init_cache, init_params
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import param_specs
+from repro.train.optimizer import adamw_init
+from repro.train.steps import TrainState
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict:
+    """Abstract batch for one (arch x shape) cell."""
+    seq, gbatch, kind = SHAPES[shape_name]
+    if kind == "decode":
+        return decode_specs(cfg, shape_name)
+    batch: Dict = {}
+    if cfg.input_kind == "embeds":
+        batch["embeds"] = sds((gbatch, seq, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = sds((gbatch, seq), jnp.int32)
+    batch["labels"] = sds((gbatch, seq), jnp.int32)
+    if cfg.family == "vlm":
+        batch["mrope_positions"] = sds((3, gbatch, seq), jnp.int32)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape_name: str) -> Dict:
+    seq, gbatch, _ = SHAPES[shape_name]
+    if cfg.input_kind == "embeds":
+        tokens = sds((gbatch, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        tokens = sds((gbatch, 1), jnp.int32)
+    cache = jax.eval_shape(lambda: init_cache(cfg, gbatch, seq))
+    return {"tokens": tokens, "cache": cache,
+            "pos": sds((), jnp.int32)}
+
+
+def batch_shardings(mesh, batch: Dict):
+    """NamedShardings for a batch pytree: leading batch dim over
+    ('pod','data'); mrope positions batch dim is axis 1."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    def shard(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "mrope_positions":
+            return NamedSharding(mesh, P(None, dp, None))
+        if leaf.ndim >= 1 and leaf.shape[0] % _dp_size(mesh) == 0 \
+                and leaf.shape[0] > 1:
+            return NamedSharding(mesh, P(dp) if leaf.ndim == 1
+                                 else P(dp, *([None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(shard, batch)
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def cache_shardings(mesh, cfg: ModelConfig, cache) -> Dict:
+    """KV caches: batch dim over dp; prefer sharding KV heads over
+    'model' when divisible, else shard the sequence dim (context
+    parallelism for the cache)."""
+    tp = mesh.shape.get("model", 1)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    def shard(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v"):                 # (L, B, S, KV, hd)
+            _, B, S, KV, _ = leaf.shape
+            spec = [None, dp if B % _dp_size(mesh) == 0 else None,
+                    None, None, None]
+            if KV % tp == 0:
+                spec[3] = "model"
+            elif S % tp == 0:
+                spec[2] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if name == "pos_ids":                  # (L, S)
+            return NamedSharding(mesh, P())
+        # recurrent states: (L|L/2, B, ...) -- shard batch, then the
+        # widest state dim over model if divisible
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 2 and leaf.shape[1] % _dp_size(mesh) == 0:
+            spec[1] = dp
+        if leaf.ndim >= 3 and leaf.shape[2] % tp == 0:
+            spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(shard, cache)
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_train_state(cfg: ModelConfig, bits8: bool = False):
+    params = abstract_params(cfg)
+    opt = jax.eval_shape(lambda p: adamw_init(p, bits8=bits8), params)
+    return TrainState(params, opt, None)

@@ -1,0 +1,11 @@
+"""Model zoo: decoder-only LM backbones for the ten assigned
+architectures (dense GQA, MoE, attention+SSM hybrid, xLSTM, VLM and
+audio backbones) built as pure-functional JAX with scan-over-layers,
+remat policies and mesh-aware sharding constraints.
+"""
+from repro.models.config import ModelConfig
+from repro.models.model import (decode_step, forward, init_cache,
+                                init_params, loss_fn, prefill)
+
+__all__ = ["ModelConfig", "decode_step", "forward", "init_cache",
+           "init_params", "loss_fn", "prefill"]

@@ -1,0 +1,576 @@
+"""Shared neural building blocks (pure functions over param pytrees).
+
+Everything here is written to be shard_map/pjit friendly: no Python
+control flow over traced values, explicit einsums, and sharding hints
+applied by the caller via ``sharding.constrain``.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import axis_size, constrain
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * weight
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: broadcastable (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: Tuple[int, int, int]):
+    """Multimodal RoPE (Qwen2-VL): the rotary dimension is split into
+    three sections rotated by temporal / height / width position
+    streams.  positions3: (3, batch, seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = rope_freqs(hd, theta)                       # (half,)
+    # section id per frequency
+    sec = jnp.concatenate([
+        jnp.full((sections[0],), 0, jnp.int32),
+        jnp.full((sections[1],), 1, jnp.int32),
+        jnp.full((sections[2],), 2, jnp.int32)])
+    sec = sec[:half] if sec.shape[0] >= half else jnp.pad(
+        sec, (0, half - sec.shape[0]), constant_values=2)
+    # pos per (batch, seq, half)
+    pos_sel = jnp.take(positions3, sec, axis=0)          # (half, B, S) -> via take axis0
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1)               # (B, S, half)
+    ang = pos_sel.astype(jnp.float32) * freqs            # (B, S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, qk-norm, bias, sliding window, KV cache)
+# ---------------------------------------------------------------------------
+
+class AttnParams(NamedTuple):
+    wq: jax.Array            # (d, n_heads*hd)
+    wk: jax.Array            # (d, n_kv*hd)
+    wv: jax.Array            # (d, n_kv*hd)
+    wo: jax.Array            # (n_heads*hd, d)
+    bq: Optional[jax.Array]  # (n_heads*hd,) or None
+    bk: Optional[jax.Array]
+    bv: Optional[jax.Array]
+    q_norm: Optional[jax.Array]  # (hd,) qk-norm scales or None
+    k_norm: Optional[jax.Array]
+
+
+def _qkv(x, p: AttnParams, cfg, positions, mrope_positions=None):
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p.wq)
+    k = jnp.einsum("bsd,dh->bsh", x, p.wk)
+    v = jnp.einsum("bsd,dh->bsh", x, p.wv)
+    if p.bq is not None:
+        q, k, v = q + p.bq, k + p.bk, v + p.bv
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if p.q_norm is not None:
+        q = rms_norm(q, p.q_norm, cfg.norm_eps)
+        k = rms_norm(k, p.k_norm, cfg.norm_eps)
+    if mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.rope_theta,
+                        cfg.mrope_sections)
+        k = apply_mrope(k, mrope_positions, cfg.rope_theta,
+                        cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+
+def _maybe_pad_heads(q, k, v, cfg):
+    """Pad the (already GQA-repeated) head dim to a multiple of the
+    model axis so attention can head-shard even when n_heads does not
+    divide it (56/28/25-head archs on a 16-way axis).  Padded heads
+    produce zeros and are sliced away by the caller; the ~(Hp-H)/H
+    extra FLOPs buy away the full q/k/v replication collectives."""
+    tp = max(axis_size("tp"), 1)
+    H = q.shape[2]
+    if not getattr(cfg, "pad_attn_heads", False) or tp <= 1 or H % tp == 0:
+        return q, k, v, H
+    Hp = -(-H // tp) * tp
+    pad = ((0, 0), (0, 0), (0, Hp - H), (0, 0))
+    return jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad), H
+
+
+def attention(x, p: AttnParams, cfg, positions, mask_mode: str = "causal",
+              mrope_positions=None):
+    """Full-sequence attention (training / prefill).
+
+    mask_mode: 'causal' or 'causal_window' (sliding window).
+    Activations are constrained to (data, None, model) sharding by the
+    caller; heads shard over the model axis.
+    """
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q, k, v = _qkv(x, p, cfg, positions, mrope_positions)
+    # grouped-query: repeat kv heads
+    k = jnp.repeat(k, cfg.q_rep, axis=2)
+    v = jnp.repeat(v, cfg.q_rep, axis=2)
+    q, k, v, H_real = _maybe_pad_heads(q, k, v, cfg)
+    if q.shape[2] % max(axis_size("tp"), 1) == 0:
+        q = constrain(q, ("dp", None, "tp", None))
+        k = constrain(k, ("dp", None, "tp", None))
+        v = constrain(v, ("dp", None, "tp", None))
+    else:   # heads don't divide: shard the query sequence instead
+        q = constrain(q, ("dp", "sp", None, None))
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    qi = jax.lax.broadcasted_iota(jnp.int32, (S, S), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (S, S), 1)
+    mask = ki <= qi
+    if mask_mode == "causal_window" and cfg.sliding_window > 0:
+        mask &= (qi - ki) < cfg.sliding_window
+    logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    probs = probs.astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    out = out[:, :, :H_real]                 # drop padded heads
+    out = out.reshape(B, S, H_real * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p.wo)
+
+
+def attention_decode(x, p: AttnParams, cfg, cache_k, cache_v, pos,
+                     mrope_positions=None, cache_pos=None):
+    """One-token decode against a KV cache.
+
+    x: (B, 1, d); cache_k/v: (B, S_cache, KV, hd); pos: () int32
+    absolute position of the new token.
+
+    Two cache modes:
+    * linear (cache_pos is None): S_cache covers the whole sequence;
+      the new entry lands at index ``pos``.
+    * ring (cache_pos: (S_cache,) int32 of absolute positions, -1 =
+      empty): used for sliding-window configs with contexts longer
+      than the window -- the entry lands at ``pos % S_cache`` and
+      validity/windowing is checked against the stored positions.
+      This is what makes long_500k decode O(window) for SWA archs.
+
+    Returns (out (B,1,d), new_cache_k, new_cache_v, new_cache_pos).
+    """
+    B, _, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    S_cache = cache_k.shape[1]
+    H_cache = cache_k.shape[2]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(x, p, cfg, positions, mrope_positions)
+    repeated = H_cache != KV
+    if repeated:
+        # cache stores GQA-repeated (+ padded) heads: head-shardable,
+        # so the update and the attention reads stay shard-local
+        k = jnp.repeat(k, cfg.q_rep, axis=2)
+        v = jnp.repeat(v, cfg.q_rep, axis=2)
+        q, k, v, H_real = _maybe_pad_heads(q, k, v, cfg)
+        q = constrain(q, ("dp", None, "tp", None))
+        k = constrain(k, ("dp", None, "tp", None))
+        v = constrain(v, ("dp", None, "tp", None))
+    slot = pos % S_cache if cache_pos is not None else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    if cache_pos is not None:
+        cache_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache_pos, jnp.full((1,), pos, jnp.int32), slot, axis=0)
+        abs_pos = cache_pos
+    else:
+        abs_pos = jnp.arange(S_cache, dtype=jnp.int32)
+    if repeated:
+        kk, vv = cache_k, cache_v
+    else:
+        kk = jnp.repeat(cache_k, cfg.q_rep, axis=2)
+        vv = jnp.repeat(cache_v, cfg.q_rep, axis=2)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk) * scale   # (B,H,1,S_cache)
+    valid = (abs_pos >= 0) & (abs_pos <= pos)
+    if cfg.sliding_window > 0:
+        valid &= (pos - abs_pos) < cfg.sliding_window
+    logits = jnp.where(valid[None, None, None, :], logits,
+                       jnp.finfo(logits.dtype).min)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(x.dtype), vv)
+    out = out[:, :, :H]                       # drop padded heads
+    out = out.reshape(B, 1, H * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p.wo), cache_k, cache_v, cache_pos
+
+
+# ---------------------------------------------------------------------------
+# FFN: SwiGLU
+# ---------------------------------------------------------------------------
+
+class MlpParams(NamedTuple):
+    w_gate: jax.Array   # (d, ff)
+    w_up: jax.Array     # (d, ff)
+    w_down: jax.Array   # (ff, d)
+
+
+def swiglu(x, p: MlpParams):
+    g = jnp.einsum("bsd,df->bsf", x, p.w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, p.w_up)
+    h = jax.nn.silu(g) * u
+    h = constrain(h, ("dp", None, "tp"))
+    return jnp.einsum("bsf,fd->bsd", h, p.w_down)
+
+
+# ---------------------------------------------------------------------------
+# MoE: top-k routed experts, GShard-style capacity dispatch
+# ---------------------------------------------------------------------------
+
+class MoeParams(NamedTuple):
+    router: jax.Array    # (d, E)
+    w_gate: jax.Array    # (E, d, ff)
+    w_up: jax.Array      # (E, d, ff)
+    w_down: jax.Array    # (E, ff, d)
+
+
+def _pick_groups(T: int, target: int = 8192) -> int:
+    g = max(T // target, 1)
+    while T % g:
+        g -= 1
+    return g
+
+
+def moe_ffn(x, p: MoeParams, cfg):
+    """Top-k routing with grouped, capacity-bounded scatter/gather
+    dispatch (GShard groups).
+
+    Tokens are split into G groups (sharded over the batch axes); each
+    group routes independently with capacity C = S_g*K*cf/E per
+    expert.  Dispatch is a per-group scatter of token indices followed
+    by a per-group gather -- data movement O(T*d + G*E*C*d), no dense
+    one-hot einsum, and every index operation stays LOCAL to its
+    dp shard, so SPMD never replicates the token stream.  Tokens
+    beyond capacity are dropped (combine weight 0), standard
+    GShard/Switch semantics.  Expert weights shard 'ep' over the model
+    axis when E divides it (intra-expert 'tp' otherwise).
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    G = _pick_groups(T)
+    Sg = T // G
+    xg = constrain(x.reshape(G, Sg, d), ("dp", None, None))
+    gates = jax.nn.softmax(
+        jnp.einsum("gsd,de->gse", xg, p.router).astype(jnp.float32), -1)
+    topv, topi = jax.lax.top_k(gates, K)                   # (G, Sg, K)
+    topv = (topv / jnp.clip(topv.sum(-1, keepdims=True), 1e-9)
+            ).astype(x.dtype)
+
+    C = int(max(cfg.moe_capacity_factor * Sg * K / E, K))
+    C = -(-C // 128) * 128                                 # MXU-aligned
+    flat_e = topi.reshape(G, Sg * K)
+    onehot = (flat_e[..., None] ==
+              jnp.arange(E, dtype=flat_e.dtype)).astype(jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=1) - onehot)            # (G, Sg*K, E)
+    pos = (pos * onehot).sum(-1)                           # (G, Sg*K)
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)        # (G, Sg*K)
+
+    tok_of = jnp.broadcast_to(
+        jnp.arange(Sg * K, dtype=jnp.int32) // K, (G, Sg * K))
+
+    def scatter_one(s, t):
+        return jnp.full((E * C + 1,), -1, jnp.int32).at[s].set(t)[: E * C]
+
+    buf = jax.vmap(scatter_one)(slot, tok_of)              # (G, E*C)
+    occupied = buf >= 0
+
+    def gather_one(xi, bi, occ):
+        return jnp.where(occ[:, None], xi[jnp.clip(bi, 0)], 0)
+
+    expert_in = jax.vmap(gather_one)(xg, buf, occupied)    # (G, E*C, d)
+    expert_in = expert_in.reshape(G, E, C, d)
+    expert_in = constrain(expert_in, ("dp", "ep", None, None))
+    g = jnp.einsum("gecd,edf->gecf", expert_in, p.w_gate)
+    u = jnp.einsum("gecd,edf->gecf", expert_in, p.w_up)
+    h = jax.nn.silu(g) * u
+    h = constrain(h, ("dp", "ep", None, "tp"))
+    out_e = jnp.einsum("gecf,efd->gecd", h, p.w_down)
+    out_e = constrain(out_e, ("dp", "ep", None, None))
+
+    # combine from the token side; the overflow slot reads zeros
+    out_flat = jnp.concatenate(
+        [out_e.reshape(G, E * C, d),
+         jnp.zeros((G, 1, d), out_e.dtype)], axis=1)
+
+    def combine_one(of, s):
+        return of[s]
+
+    gathered = jax.vmap(combine_one)(out_flat, slot)       # (G, Sg*K, d)
+    gathered = constrain(gathered, ("dp", None, None))
+    w = jnp.where(keep, topv.reshape(G, Sg * K), 0.0).astype(x.dtype)
+    out = (gathered * w[..., None]).reshape(G, Sg, K, d).sum(axis=2)
+    return out.reshape(B, S, d)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (hybrid/hymba blocks)
+# ---------------------------------------------------------------------------
+
+class SsmParams(NamedTuple):
+    w_in: jax.Array      # (d, 2*d_in)  -> x, z
+    conv_w: jax.Array    # (k, d_in) depthwise causal conv
+    w_bcdt: jax.Array    # (d_in, 2*state + 1)  -> B, C, dt
+    a_log: jax.Array     # (d_in, state)
+    d_skip: jax.Array    # (d_in,)
+    dt_bias: jax.Array   # (d_in,)
+    w_out: jax.Array     # (d_in, d)
+
+
+def _ssm_scan(u, dt, A, Bmat, Cmat):
+    """Selective scan via associative_scan (parallel over sequence).
+
+    u: (B, L, d_in); dt: (B, L, d_in); A: (d_in, N);
+    Bmat/Cmat: (B, L, N).  Returns (B, L, d_in).
+    """
+    da = jnp.exp(dt[..., None] * A)                        # (B,L,d,N)
+    db = dt[..., None] * Bmat[:, :, None, :]               # (B,L,d,N)
+    xdb = u[..., None] * db
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (da, xdb), axis=1)
+    y = jnp.einsum("bldn,bln->bld", h, Cmat)
+    return y
+
+
+def ssm_block(x, p: SsmParams, cfg):
+    """Full-sequence Mamba-ish block (training / prefill)."""
+    B, L, d = x.shape
+    xz = jnp.einsum("bld,de->ble", x, p.w_in)
+    u, z = jnp.split(xz, 2, axis=-1)                       # (B,L,d_in)
+    # causal depthwise conv
+    k = p.conv_w.shape[0]
+    u_pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    u = sum(u_pad[:, i:i + L] * p.conv_w[i] for i in range(k))
+    u = jax.nn.silu(u)
+    bcd = jnp.einsum("bld,dn->bln", u, p.w_bcdt)
+    N = cfg.ssm_state
+    Bmat, Cmat, dt = bcd[..., :N], bcd[..., N:2 * N], bcd[..., 2 * N]
+    dt = jax.nn.softplus(dt[..., None] + p.dt_bias)        # (B,L,d_in)
+    A = -jnp.exp(p.a_log.astype(jnp.float32)).astype(x.dtype)
+    y = _ssm_scan(u, dt, A, Bmat, Cmat)
+    y = y + u * p.d_skip
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bld,de->ble", y, p.w_out)
+
+
+def ssm_decode(x, p: SsmParams, cfg, h_state, conv_state):
+    """One-token SSM step.  h_state: (B, d_in, N); conv_state:
+    (B, k-1, d_in).  O(1) per token -- this is why the hybrid/ssm
+    families run the long_500k cell."""
+    B, _, d = x.shape
+    xz = jnp.einsum("bld,de->ble", x, p.w_in)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u = u[:, 0]                                            # (B, d_in)
+    k = p.conv_w.shape[0]
+    full = jnp.concatenate([conv_state, u[:, None, :]], axis=1)  # (B,k,d_in)
+    new_conv = full[:, 1:]
+    u = sum(full[:, i] * p.conv_w[i] for i in range(k))
+    u = jax.nn.silu(u)
+    bcd = jnp.einsum("bd,dn->bn", u, p.w_bcdt)
+    N = cfg.ssm_state
+    Bv, Cv, dt = bcd[..., :N], bcd[..., N:2 * N], bcd[..., 2 * N]
+    dt = jax.nn.softplus(dt[..., None] + p.dt_bias)        # (B, d_in)
+    A = -jnp.exp(p.a_log.astype(jnp.float32)).astype(x.dtype)
+    da = jnp.exp(dt[..., None] * A)                        # (B,d_in,N)
+    h_new = (da.astype(jnp.float32) * h_state
+             + ((dt * u)[..., None] * Bv[:, None, :]).astype(jnp.float32))
+    y = jnp.einsum("bdn,bn->bd", h_new, Cv.astype(jnp.float32))
+    y = y.astype(x.dtype) + u * p.d_skip
+    y = y * jax.nn.silu(z[:, 0])
+    out = jnp.einsum("bd,de->be", y, p.w_out)[:, None, :]
+    return out.astype(x.dtype), h_new, new_conv
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory)
+# ---------------------------------------------------------------------------
+
+class MlstmParams(NamedTuple):
+    w_up: jax.Array      # (d, 2*d_in)   (x, z branches)
+    wq: jax.Array        # (d_in, d_in)
+    wk: jax.Array        # (d_in, d_in)
+    wv: jax.Array        # (d_in, d_in)
+    w_if: jax.Array      # (d_in, 2*heads)  input+forget gate projections
+    ln: jax.Array        # (d_in,) group-norm scale
+    w_down: jax.Array    # (d_in, d)
+
+
+def mlstm_block(x, p: MlstmParams, cfg, row_chunk: int = 1024):
+    """Parallel (quadratic) mLSTM formulation for training/prefill --
+    an attention-like form with exponential input gates and cumulative
+    forget-gate decay (xLSTM paper, parallel form).  Rows are processed
+    in chunks (like the blockwise attention) so no full (T, S) buffer
+    materialises at 32k sequence lengths; chunks are unrolled for
+    exact cost_analysis accounting."""
+    B, L, d = x.shape
+    H = cfg.n_heads
+    up = jnp.einsum("bld,de->ble", x, p.w_up)
+    u, z = jnp.split(up, 2, axis=-1)
+    d_in = u.shape[-1]
+    hd = d_in // H
+    q = jnp.einsum("ble,ef->blf", u, p.wq).reshape(B, L, H, hd)
+    k = jnp.einsum("ble,ef->blf", u, p.wk).reshape(B, L, H, hd)
+    v = jnp.einsum("ble,ef->blf", u, p.wv).reshape(B, L, H, hd)
+    q = constrain(q, ("dp", "sp", None, None))
+    k = constrain(k, ("dp", "sp", None, None))
+    gates = jnp.einsum("ble,eg->blg", u, p.w_if)           # (B,L,2H)
+    i_gate = gates[..., :H].astype(jnp.float32)            # log-space input
+    f_gate = jax.nn.log_sigmoid(gates[..., H:].astype(jnp.float32))
+    # D[t,s] = exp(cumsum_f(t) - cumsum_f(s) + i(s)) for s<=t (stabilised)
+    csum = jnp.cumsum(f_gate, axis=1)                      # (B,L,H)
+    scale = 1.0 / math.sqrt(hd)
+
+    def rows(r0, C):
+        # decay matrix for row block [r0, r0+C) against all columns
+        logD = (jax.lax.dynamic_slice_in_dim(csum, r0, C, axis=1)
+                [:, :, None, :]
+                - csum[:, None, :, :] + i_gate[:, None, :, :])  # (B,C,S,H)
+        qi = r0 + jax.lax.broadcasted_iota(jnp.int32, (C, L), 0)
+        ki = jax.lax.broadcasted_iota(jnp.int32, (C, L), 1)
+        causal = (ki <= qi)[None, :, :, None]
+        logD = jnp.where(causal, logD, -jnp.inf)
+        m = jnp.max(logD, axis=2, keepdims=True)
+        Dmat = jnp.exp(logD - m)
+        qc = jax.lax.dynamic_slice_in_dim(q, r0, C, axis=1)
+        scores = jnp.einsum("bthd,bshd->btsh", qc, k) * scale
+        weights = scores * Dmat.astype(scores.dtype)
+        norm = jnp.maximum(jnp.abs(weights.sum(axis=2)), 1.0)
+        out = jnp.einsum("btsh,bshd->bthd", weights, v) / norm[..., None]
+        return out
+
+    if L <= row_chunk:
+        hsa = rows(0, L)
+    else:
+        assert L % row_chunk == 0
+        hsa = jnp.concatenate(
+            [rows(i * row_chunk, row_chunk)
+             for i in range(L // row_chunk)], axis=1)
+    hsa = hsa.reshape(B, L, d_in)
+    hsa = rms_norm(hsa, p.ln, cfg.norm_eps)
+    out = hsa * jax.nn.silu(z)
+    return jnp.einsum("ble,ed->bld", out, p.w_down)
+
+
+def mlstm_decode(x, p: MlstmParams, cfg, C, n, m_state):
+    """Recurrent mLSTM step.  C: (B,H,hd,hd) matrix memory; n: (B,H,hd)
+    normaliser; m_state: (B,H) log-space stabiliser."""
+    B, _, d = x.shape
+    H = cfg.n_heads
+    up = jnp.einsum("bld,de->ble", x, p.w_up)
+    u, z = jnp.split(up, 2, axis=-1)
+    u = u[:, 0]
+    d_in = u.shape[-1]
+    hd = d_in // H
+    q = jnp.einsum("be,ef->bf", u, p.wq).reshape(B, H, hd)
+    k = jnp.einsum("be,ef->bf", u, p.wk).reshape(B, H, hd)
+    v = jnp.einsum("be,ef->bf", u, p.wv).reshape(B, H, hd)
+    gates = jnp.einsum("be,eg->bg", u, p.w_if)
+    i_g = gates[..., :H].astype(jnp.float32)
+    f_g = jax.nn.log_sigmoid(gates[..., H:].astype(jnp.float32))
+    m_new = jnp.maximum(f_g + m_state, i_g)
+    f_eff = jnp.exp(f_g + m_state - m_new)[..., None, None]
+    i_eff = jnp.exp(i_g - m_new)[..., None, None]
+    scale = 1.0 / math.sqrt(hd)
+    C_new = f_eff * C + i_eff * (v[..., :, None] * k[..., None, :])
+    n_new = f_eff[..., 0] * n + i_eff[..., 0] * k
+    num = jnp.einsum("bhd,bhvd->bhv", (q * scale).astype(jnp.float32), C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum(
+        "bhd,bhd->bh", (q * scale).astype(jnp.float32), n_new)),
+        1.0)[..., None]
+    hsa = (num / den).reshape(B, d_in).astype(x.dtype)
+    hsa = rms_norm(hsa, p.ln, cfg.norm_eps)
+    out = hsa * jax.nn.silu(z[:, 0])
+    out = jnp.einsum("be,ed->bd", out, p.w_down)[:, None, :]
+    return out.astype(x.dtype), C_new, n_new, m_new
+
+
+class SlstmParams(NamedTuple):
+    w_gates: jax.Array   # (d, 4*d)  i,f,z,o projections (block-diag heads)
+    r_gates: jax.Array   # (heads, 4*hd, hd) recurrent per-head weights
+    w_up: jax.Array      # (d, ff_s)
+    w_down: jax.Array    # (ff_s, d)
+    ln: jax.Array        # (d,)
+
+
+def slstm_scan(x, p: SlstmParams, cfg, h0=None, c0=None, n0=None, m0=None):
+    """Sequential sLSTM over the sequence (lax.scan over time).
+
+    Exponential input gates with the standard max-stabiliser; heads are
+    block-diagonal in the recurrent matrices.  Returns the output
+    sequence and the final (h, c, n, m) state for decode hand-off.
+    """
+    B, L, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    gx = jnp.einsum("bld,dg->blg", x, p.w_gates)           # (B,L,4d)
+
+    def init(v):
+        return jnp.zeros((B, H, hd), jnp.float32) if v is None else v
+
+    h, c = init(h0), init(c0)
+    n = init(n0)
+    m = (jnp.zeros((B, H), jnp.float32) if m0 is None else m0)
+
+    def step(carry, g_t):
+        h, c, n, m = carry
+        rec = jnp.einsum("bhd,hgd->bhg", h.astype(x.dtype), p.r_gates)
+        g = g_t.reshape(B, H, 4 * hd).astype(jnp.float32) + rec.astype(jnp.float32)
+        i_t, f_t, z_t, o_t = jnp.split(g, 4, axis=-1)
+        i_log = i_t
+        f_log = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(f_log.mean(-1) + m, i_log.mean(-1))
+        i_eff = jnp.exp(i_log - m_new[..., None])
+        f_eff = jnp.exp(f_log + (m - m_new)[..., None])
+        c_new = f_eff * c + i_eff * jnp.tanh(z_t)
+        n_new = f_eff * n + i_eff
+        h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1.0)
+        return (h_new, c_new, n_new, m_new), h_new.astype(x.dtype)
+
+    (h, c, n, m), ys = jax.lax.scan(step, (h, c, n, m),
+                                    jnp.moveaxis(gx, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, L, d)
+    y = rms_norm(y, p.ln, cfg.norm_eps)
+    ff = jnp.einsum("bld,df->blf", y, p.w_up)
+    out = jnp.einsum("blf,fd->bld", jax.nn.gelu(ff), p.w_down)
+    return out, (h, c, n, m)

@@ -1,0 +1,593 @@
+"""Model assembly: init / forward / loss / prefill / decode for every
+family, with scan-over-layers (fast compiles at 60+ layers), per-layer
+remat, logical-axis sharding constraints and chunked attention +
+chunked cross-entropy so no S^2- or V-sized global buffer is ever
+materialised at the 40 assigned (arch x shape) cells.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import axis_size, constrain
+
+ATTN_CHUNK = 1024         # query-chunk length for blockwise attention
+MLSTM_CHUNK = 512
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _cast_layer(lp, dt):
+    """Cast a layer's float params to the compute dtype (master copies
+    stay in param_dtype; layers needing f32 internally re-cast)."""
+    return jax.tree.map(
+        lambda a: a.astype(dt) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, lp)
+
+
+# ---------------------------------------------------------------------------
+# Initialisation
+# ---------------------------------------------------------------------------
+
+def _norm_init(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale or (1.0 / math.sqrt(fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    """Parameter pytree; per-layer tensors are stacked on a leading
+    n_layers axis for lax.scan."""
+    cfg.validate()
+    pdt = jnp.dtype(cfg.param_dtype)
+    d, hd, H, KV = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    Lc = cfg.n_layers
+    keys = iter(jax.random.split(key, 64))
+
+    def stack(shape, scale=None):
+        return _dense_init(next(keys), (Lc,) + shape, pdt, scale)
+
+    params: Dict = {}
+    params["embed"] = _dense_init(next(keys), (cfg.vocab_size, d), pdt, 0.02)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense_init(next(keys), (d, cfg.vocab_size), pdt)
+    params["final_norm"] = jnp.ones((d,), pdt)
+
+    layers: Dict = {}
+    if cfg.family in ("dense", "moe", "hybrid", "vlm", "audio"):
+        attn = {
+            "wq": stack((d, H * hd)),
+            "wk": stack((d, KV * hd)),
+            "wv": stack((d, KV * hd)),
+            "wo": stack((H * hd, d), scale=1.0 / math.sqrt(H * hd * Lc)),
+        }
+        if cfg.qkv_bias:
+            attn["bq"] = jnp.zeros((Lc, H * hd), pdt)
+            attn["bk"] = jnp.zeros((Lc, KV * hd), pdt)
+            attn["bv"] = jnp.zeros((Lc, KV * hd), pdt)
+        if cfg.qk_norm:
+            attn["q_norm"] = jnp.ones((Lc, hd), pdt)
+            attn["k_norm"] = jnp.ones((Lc, hd), pdt)
+        layers["attn"] = attn
+        layers["norm1"] = jnp.ones((Lc, d), pdt)
+        layers["norm2"] = jnp.ones((Lc, d), pdt)
+        if cfg.family == "moe":
+            E, ff = cfg.n_experts, cfg.d_ff
+            layers["moe"] = {
+                "router": stack((d, E)),
+                "w_gate": stack((E, d, ff)),
+                "w_up": stack((E, d, ff)),
+                "w_down": stack((E, ff, d), scale=1.0 / math.sqrt(ff * Lc)),
+            }
+        elif cfg.d_ff > 0:
+            layers["mlp"] = {
+                "w_gate": stack((d, cfg.d_ff)),
+                "w_up": stack((d, cfg.d_ff)),
+                "w_down": stack((cfg.d_ff, d),
+                                scale=1.0 / math.sqrt(cfg.d_ff * Lc)),
+            }
+        if cfg.family == "hybrid":
+            d_in = d * cfg.ssm_expand
+            N, k = cfg.ssm_state, cfg.ssm_conv
+            layers["ssm"] = {
+                "w_in": stack((d, 2 * d_in)),
+                "conv_w": stack((k, d_in), scale=1.0 / math.sqrt(k)),
+                "w_bcdt": stack((d_in, 2 * N + 1)),
+                "a_log": jnp.log(jnp.broadcast_to(
+                    jnp.arange(1, N + 1, dtype=jnp.float32),
+                    (Lc, d_in, N)).astype(pdt) + 0.0),
+                "d_skip": jnp.ones((Lc, d_in), pdt),
+                "dt_bias": jnp.zeros((Lc, d_in), pdt),
+                "w_out": stack((d_in, d), scale=1.0 / math.sqrt(d_in * Lc)),
+            }
+            layers["mix"] = jnp.zeros((Lc, 2), pdt)  # attn/ssm mix logits
+    elif cfg.family == "ssm":
+        # xLSTM: alternating mLSTM / sLSTM; scan over L/2 pairs.
+        half = Lc // 2
+        d_in = 2 * d  # mLSTM up-projection factor 2
+
+        def stack2(shape, scale=None):
+            return _dense_init(next(keys), (half,) + shape, pdt, scale)
+
+        layers["mlstm"] = {
+            "w_up": stack2((d, 2 * d_in)),
+            "wq": stack2((d_in, d_in)),
+            "wk": stack2((d_in, d_in)),
+            "wv": stack2((d_in, d_in)),
+            "w_if": stack2((d_in, 2 * cfg.n_heads)),
+            "ln": jnp.ones((half, d_in), pdt),
+            "w_down": stack2((d_in, d), scale=1.0 / math.sqrt(d_in * Lc)),
+        }
+        ff_s = max(int(d * 4 / 3), d)
+        hd_s = d // cfg.n_heads
+        layers["slstm"] = {
+            "w_gates": stack2((d, 4 * d)),
+            "r_gates": stack2((cfg.n_heads, 4 * hd_s, hd_s)),
+            "w_up": stack2((d, ff_s)),
+            "w_down": stack2((ff_s, d), scale=1.0 / math.sqrt(ff_s * Lc)),
+            "ln": jnp.ones((half, d), pdt),
+        }
+        layers["norm1"] = jnp.ones((half, d), pdt)
+        layers["norm2"] = jnp.ones((half, d), pdt)
+    params["layers"] = layers
+    return params
+
+
+
+def _scan_layers(body, h, layers, cfg):
+    """lax.scan over stacked layers, or an unrolled Python loop when
+    cfg.unroll_layers (exact cost_analysis accounting for the dry-run;
+    loop bodies are otherwise counted once by XLA)."""
+    if not cfg.unroll_layers:
+        return jax.lax.scan(body, h, layers)
+    n = jax.tree.leaves(layers)[0].shape[0]
+    ys = []
+    for i in range(n):
+        lp = jax.tree.map(lambda a: a[i], layers)
+        h, y = body(h, lp)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return h, ys
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention wrapper (bounds the S^2 buffer)
+# ---------------------------------------------------------------------------
+
+def _attention_chunked(x, p: L.AttnParams, cfg, positions, mask_mode,
+                       mrope_positions=None, chunk: int = ATTN_CHUNK):
+    B, S, d = x.shape
+    if S <= chunk:
+        return L.attention(x, p, cfg, positions, mask_mode, mrope_positions)
+    assert S % chunk == 0, "sequence must divide the attention chunk"
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q, k, v = L._qkv(x, p, cfg, positions, mrope_positions)
+    k = jnp.repeat(k, cfg.q_rep, axis=2)
+    v = jnp.repeat(v, cfg.q_rep, axis=2)
+    q, k, v, H_real = L._maybe_pad_heads(q, k, v, cfg)
+    if q.shape[2] % max(axis_size("tp"), 1) == 0:
+        q = constrain(q, ("dp", None, "tp", None))
+        k = constrain(k, ("dp", None, "tp", None))
+        v = constrain(v, ("dp", None, "tp", None))
+    else:   # heads don't divide the model axis: shard the sequence
+        q = constrain(q, ("dp", "sp", None, None))
+    scale = 1.0 / math.sqrt(hd)
+    n_chunks = S // chunk
+
+    # Unrolled (not lax.map) on purpose: chunk counts are small,
+    # unrolling keeps XLA cost_analysis FLOP counts exact (loop bodies
+    # are otherwise counted once), and causal chunks can skip the
+    # strictly-future keys entirely -- the FLOP savings of a
+    # flash-style kernel, expressed at the XLA level.
+    def one(qi, off):
+        hi = off + chunk
+        lo = 0
+        if mask_mode == "causal_window" and cfg.sliding_window > 0:
+            lo = max(0, ((off - cfg.sliding_window) // chunk) * chunk)
+        kv_len = hi - lo
+        ks = jax.lax.slice_in_dim(k, lo, hi, axis=1)
+        vs = jax.lax.slice_in_dim(v, lo, hi, axis=1)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qi, ks) * scale
+        rows = off + jax.lax.broadcasted_iota(jnp.int32, (chunk, kv_len), 0)
+        cols = lo + jax.lax.broadcasted_iota(jnp.int32, (chunk, kv_len), 1)
+        mask = cols <= rows
+        if mask_mode == "causal_window" and cfg.sliding_window > 0:
+            mask &= (rows - cols) < cfg.sliding_window
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(x.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, vs)
+
+    outs = [one(jax.lax.slice_in_dim(q, i * chunk, (i + 1) * chunk, axis=1),
+                i * chunk)
+            for i in range(n_chunks)]
+    out = jnp.concatenate(outs, axis=1)[:, :, :H_real]
+    out = out.reshape(B, S, H_real * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p.wo)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _attn_params(lp: Dict) -> L.AttnParams:
+    a = lp["attn"]
+    return L.AttnParams(a["wq"], a["wk"], a["wv"], a["wo"],
+                        a.get("bq"), a.get("bk"), a.get("bv"),
+                        a.get("q_norm"), a.get("k_norm"))
+
+
+def _block(x, lp: Dict, cfg: ModelConfig, positions, mrope_positions=None):
+    """One transformer-ish block (dense/moe/hybrid/vlm/audio)."""
+    mask_mode = "causal_window" if cfg.sliding_window > 0 else "causal"
+    h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+    attn_out = _attention_chunked(h, _attn_params(lp), cfg, positions,
+                                  mask_mode, mrope_positions)
+    if cfg.family == "hybrid":
+        ssm_out = L.ssm_block(h, L.SsmParams(**lp["ssm"]), cfg)
+        w = jax.nn.softmax(lp["mix"].astype(jnp.float32))
+        attn_out = (w[0] * attn_out.astype(jnp.float32)
+                    + w[1] * ssm_out.astype(jnp.float32)).astype(x.dtype)
+    x = x + attn_out
+    x = constrain(x, ("dp", "sp", None))
+    h = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        x = x + L.moe_ffn(h, L.MoeParams(**lp["moe"]), cfg)
+    elif "mlp" in lp:
+        x = x + L.swiglu(h, L.MlpParams(**lp["mlp"]))
+    return constrain(x, ("dp", "sp", None))
+
+
+def _xlstm_pair(x, lp: Dict, cfg: ModelConfig):
+    h = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+    x = x + L.mlstm_block(h, L.MlstmParams(**lp["mlstm"]), cfg)
+    h = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+    out, _ = L.slstm_scan(h, L.SlstmParams(**lp["slstm"]), cfg)
+    x = x + out
+    return constrain(x, ("dp", "sp", None))
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def _inputs_to_h(params, cfg: ModelConfig, batch) -> jax.Array:
+    if cfg.input_kind == "embeds":
+        h = batch["embeds"].astype(_dtype(cfg))
+    else:
+        tok = batch["tokens"]
+        h = params["embed"][tok].astype(_dtype(cfg))
+    return constrain(h, ("dp", "sp", None))
+
+
+def forward(params, cfg: ModelConfig, batch) -> jax.Array:
+    """Full-sequence forward; returns final hidden states (B, S, d)."""
+    h = _inputs_to_h(params, cfg, batch)
+    B, S, _ = h.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mrope = batch.get("mrope_positions") if cfg.family == "vlm" else None
+
+    dt = _dtype(cfg)
+    if cfg.family == "ssm":
+        def body(x, lp):
+            return _xlstm_pair(x, _cast_layer(lp, dt), cfg), None
+    else:
+        def body(x, lp):
+            return _block(x, _cast_layer(lp, dt), cfg, positions,
+                          mrope), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = _scan_layers(body, h, params["layers"], cfg)
+    h = L.rms_norm(h, params["final_norm"].astype(h.dtype), cfg.norm_eps)
+    return h
+
+
+def _head(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> jax.Array:
+    """Next-token cross-entropy, chunked over the sequence so the
+    (tokens x vocab) logits buffer never materialises globally."""
+    h = forward(params, cfg, batch)                    # (B, S, d)
+    B, S, d = h.shape
+    labels = batch["labels"]                           # (B, S) next tokens
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones((B, S), bool)
+    W = _head(params, cfg).astype(_dtype(cfg))         # (d, V)
+
+    C = min(cfg.loss_chunk, S)
+    assert S % C == 0
+    n_chunks = S // C
+
+    # Unrolled chunks (see _attention_chunked for why not lax.map).
+    def one(hx, lx, mx):
+        logits = jnp.einsum("bcd,dv->bcv", hx, W).astype(jnp.float32)
+        logits = constrain(logits, ("dp", None, "tp"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mx, lse - ll, 0.0)
+        return nll.sum(), mx.sum()
+
+    nll = 0.0
+    cnt = 0
+    for i in range(n_chunks):
+        sl = slice(i * C, (i + 1) * C)
+        n_i, c_i = one(h[:, sl], labels[:, sl], mask[:, sl])
+        nll = nll + n_i
+        cnt = cnt + c_i
+    return nll / jnp.maximum(cnt, 1)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with per-family caches
+# ---------------------------------------------------------------------------
+
+def cache_heads(cfg: ModelConfig) -> int:
+    """KV-head count stored in the cache.  With cache_repeated_kv the
+    cache holds the GQA-repeated (and, with pad_attn_heads, padded)
+    query heads so the head dim shards over the model axis."""
+    if not cfg.cache_repeated_kv:
+        return cfg.n_kv_heads
+    from repro.parallel.sharding import axis_size
+    H = cfg.n_heads
+    tp = max(axis_size("tp"), 1)
+    if cfg.pad_attn_heads and H % tp:
+        H = -(-H // tp) * tp
+    return H
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               ring: Optional[bool] = None) -> Dict:
+    dt = _dtype(cfg)
+    KV, hd = cache_heads(cfg), cfg.hd
+    Lc = cfg.n_layers
+    if cfg.family == "ssm":
+        half = Lc // 2
+        d = cfg.d_model
+        d_in = 2 * d
+        H = cfg.n_heads
+        hd_m = d_in // H
+        hd_s = d // H
+        return {
+            "mlstm_C": jnp.zeros((half, batch, H, hd_m, hd_m), jnp.float32),
+            "mlstm_n": jnp.zeros((half, batch, H, hd_m), jnp.float32),
+            "mlstm_m": jnp.zeros((half, batch, H), jnp.float32),
+            "slstm_h": jnp.zeros((half, batch, H, hd_s), jnp.float32),
+            "slstm_c": jnp.zeros((half, batch, H, hd_s), jnp.float32),
+            "slstm_n": jnp.zeros((half, batch, H, hd_s), jnp.float32),
+            "slstm_m": jnp.zeros((half, batch, H), jnp.float32),
+        }
+    s_cache = s_max
+    if ring is None:
+        ring = cfg.sliding_window > 0 and s_max > cfg.sliding_window
+    if ring:
+        # SWA ring buffer: the cache only ever needs window entries,
+        # making long-context decode O(window) in memory and compute.
+        s_cache = cfg.sliding_window
+    cache = {
+        "k": jnp.zeros((Lc, batch, s_cache, KV, hd), dt),
+        "v": jnp.zeros((Lc, batch, s_cache, KV, hd), dt),
+    }
+    if ring:
+        cache["pos_ids"] = jnp.full((Lc, s_cache), -1, jnp.int32)
+    if cfg.family == "hybrid":
+        d_in = cfg.d_model * cfg.ssm_expand
+        cache["ssm_h"] = jnp.zeros((Lc, batch, d_in, cfg.ssm_state),
+                                   jnp.float32)
+        cache["ssm_conv"] = jnp.zeros((Lc, batch, cfg.ssm_conv - 1, d_in), dt)
+    return cache
+
+
+def prefill(params, cfg: ModelConfig, batch, s_max: Optional[int] = None
+            ) -> Tuple[jax.Array, Dict]:
+    """Process the prompt; return (next-token logits (B, V), cache).
+
+    Implemented as a full forward that also materialises the caches.
+    For attention families the K/V of every layer are recomputed from
+    the per-layer inputs inside the scan (cheap relative to the
+    quadratic attention itself).
+    """
+    h = _inputs_to_h(params, cfg, batch)
+    B, S, _ = h.shape
+    s_max = s_max or S
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mrope = batch.get("mrope_positions") if cfg.family == "vlm" else None
+    dt = _dtype(cfg)
+    KV, hd = cfg.n_kv_heads, cfg.hd
+
+    if cfg.family == "ssm":
+        def body(x, lp):
+            lp = _cast_layer(lp, dt)
+            hpre = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+            mp = L.MlstmParams(**lp["mlstm"])
+            x = x + L.mlstm_block(hpre, mp, cfg)
+            C_f, n_f, m_f = _mlstm_final_state(hpre, mp, cfg)
+            h2 = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+            out, (sh, sc, sn, sm) = L.slstm_scan(
+                h2, L.SlstmParams(**lp["slstm"]), cfg)
+            x = x + out
+            return x, {"mlstm_C": C_f, "mlstm_n": n_f, "mlstm_m": m_f,
+                       "slstm_h": sh, "slstm_c": sc, "slstm_n": sn,
+                       "slstm_m": sm}
+    else:
+        def body(x, lp):
+            lp = _cast_layer(lp, dt)
+            hpre = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+            p = _attn_params(lp)
+            q, k, v = L._qkv(hpre, p, cfg, positions, mrope)
+            pad = s_max - S
+            cache_k = jnp.pad(k.astype(dt), ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cache_v = jnp.pad(v.astype(dt), ((0, 0), (0, pad), (0, 0), (0, 0)))
+            out = {"k": cache_k, "v": cache_v}
+            mask_mode = ("causal_window" if cfg.sliding_window > 0
+                         else "causal")
+            attn_out = _attention_chunked(hpre, p, cfg, positions, mask_mode,
+                                          mrope)
+            if cfg.family == "hybrid":
+                sp = L.SsmParams(**lp["ssm"])
+                ssm_out, (h_last, conv_last) = _ssm_with_state(hpre, sp, cfg)
+                w = jax.nn.softmax(lp["mix"].astype(jnp.float32))
+                attn_out = (w[0] * attn_out.astype(jnp.float32)
+                            + w[1] * ssm_out.astype(jnp.float32)).astype(x.dtype)
+                out["ssm_h"] = h_last
+                out["ssm_conv"] = conv_last
+            x = x + attn_out
+            h2 = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                x = x + L.moe_ffn(h2, L.MoeParams(**lp["moe"]), cfg)
+            elif "mlp" in lp:
+                x = x + L.swiglu(h2, L.MlpParams(**lp["mlp"]))
+            return constrain(x, ("dp", "sp", None)), out
+
+    h, cache = _scan_layers(body, h, params["layers"], cfg)
+    h = L.rms_norm(h, params["final_norm"].astype(h.dtype), cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], _head(params, cfg).astype(dt))
+    return logits.astype(jnp.float32), cache
+
+
+def _ssm_with_state(x, p: L.SsmParams, cfg):
+    """ssm_block + final recurrent state (for prefill -> decode)."""
+    B, S, d = x.shape
+    xz = jnp.einsum("bld,de->ble", x, p.w_in)
+    u, z = jnp.split(xz, 2, axis=-1)
+    k = p.conv_w.shape[0]
+    u_pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    conv_last = u_pad[:, S:S + k - 1] if k > 1 else u_pad[:, :0]
+    u_c = sum(u_pad[:, i:i + S] * p.conv_w[i] for i in range(k))
+    u_c = jax.nn.silu(u_c)
+    bcd = jnp.einsum("bld,dn->bln", u_c, p.w_bcdt)
+    N = cfg.ssm_state
+    Bmat, Cmat, dt = bcd[..., :N], bcd[..., N:2 * N], bcd[..., 2 * N]
+    dt = jax.nn.softplus(dt[..., None] + p.dt_bias)
+    A = -jnp.exp(p.a_log.astype(jnp.float32)).astype(x.dtype)
+    da = jnp.exp(dt[..., None] * A)
+    db = dt[..., None] * Bmat[:, :, None, :]
+    xdb = u_c[..., None] * db
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    _, hseq = jax.lax.associative_scan(combine, (da, xdb), axis=1)
+    y = jnp.einsum("bldn,bln->bld", hseq, Cmat)
+    y = y + u_c * p.d_skip
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bld,de->ble", y, p.w_out)
+    h_last = hseq[:, -1].astype(jnp.float32)           # (B, d_in, N)
+    # conv state holds the raw (pre-conv) inputs
+    return out, (h_last, conv_last)
+
+
+def _mlstm_final_state(x, p: L.MlstmParams, cfg):
+    """Reconstruct the recurrent (C, n, m) state after a parallel-form
+    mLSTM pass, for prefill -> decode hand-off."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    up = jnp.einsum("bld,de->ble", x, p.w_up)
+    u, _ = jnp.split(up, 2, axis=-1)
+    d_in = u.shape[-1]
+    hd = d_in // H
+    k = jnp.einsum("ble,ef->blf", u, p.wk).reshape(B, S, H, hd)
+    v = jnp.einsum("ble,ef->blf", u, p.wv).reshape(B, S, H, hd)
+    gates = jnp.einsum("ble,eg->blg", u, p.w_if)
+    i_g = gates[..., :H].astype(jnp.float32)
+    f_g = jax.nn.log_sigmoid(gates[..., H:].astype(jnp.float32))
+    csum = jnp.cumsum(f_g, axis=1)
+    logw = csum[:, -1:, :] - csum + i_g                # (B, S, H)
+    m = jnp.max(logw, axis=1)                          # (B, H)
+    wgt = jnp.exp(logw - m[:, None, :])
+    C = jnp.einsum("bsh,bshv,bshk->bhvk", wgt, v, k)
+    n = jnp.einsum("bsh,bshk->bhk", wgt, k)
+    return C, n, m
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache: Dict, pos):
+    """One decode step.  tokens: (B, 1) int32 (or embeds (B,1,d));
+    pos: () int32 position of the new token.  Returns (logits (B, V),
+    new_cache)."""
+    dt = _dtype(cfg)
+    if cfg.input_kind == "embeds":
+        h = tokens.astype(dt)             # caller passes an embedding
+    else:
+        h = params["embed"][tokens].astype(dt)
+    B = h.shape[0]
+    mrope = None
+    if cfg.family == "vlm":
+        mrope = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
+
+    if cfg.family == "ssm":
+        def body(x, packed):
+            lp, c = packed
+            lp = _cast_layer(lp, dt)
+            hpre = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+            out, C2, n2, m2 = L.mlstm_decode(
+                hpre, L.MlstmParams(**lp["mlstm"]), cfg,
+                c["mlstm_C"], c["mlstm_n"], c["mlstm_m"])
+            x = x + out
+            h2 = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+            out2, (sh, sc, sn, sm) = L.slstm_scan(
+                h2, L.SlstmParams(**lp["slstm"]), cfg,
+                c["slstm_h"], c["slstm_c"], c["slstm_n"], c["slstm_m"])
+            x = x + out2
+            new_c = {"mlstm_C": C2, "mlstm_n": n2, "mlstm_m": m2,
+                     "slstm_h": sh, "slstm_c": sc, "slstm_n": sn,
+                     "slstm_m": sm}
+            return x, new_c
+    else:
+        def body(x, packed):
+            lp, c = packed
+            lp = _cast_layer(lp, dt)
+            hpre = L.rms_norm(x, lp["norm1"], cfg.norm_eps)
+            p = _attn_params(lp)
+            attn_out, ck, cv, cp = L.attention_decode(
+                hpre, p, cfg, c["k"], c["v"], pos, mrope,
+                cache_pos=c.get("pos_ids"))
+            new_c = {"k": ck, "v": cv}
+            if cp is not None:
+                new_c["pos_ids"] = cp
+            if cfg.family == "hybrid":
+                sp = L.SsmParams(**lp["ssm"])
+                ssm_out, h_new, conv_new = L.ssm_decode(
+                    hpre, sp, cfg, c["ssm_h"], c["ssm_conv"])
+                w = jax.nn.softmax(lp["mix"].astype(jnp.float32))
+                attn_out = (w[0] * attn_out.astype(jnp.float32)
+                            + w[1] * ssm_out.astype(jnp.float32)).astype(x.dtype)
+                new_c["ssm_h"] = h_new
+                new_c["ssm_conv"] = conv_new
+            x = x + attn_out
+            h2 = L.rms_norm(x, lp["norm2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                x = x + L.moe_ffn(h2, L.MoeParams(**lp["moe"]), cfg)
+            elif "mlp" in lp:
+                x = x + L.swiglu(h2, L.MlpParams(**lp["mlp"]))
+            return x, new_c
+
+    h, new_cache = _scan_layers(body, h, (params["layers"], cache), cfg)
+    h = L.rms_norm(h, params["final_norm"].astype(h.dtype), cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1],
+                        _head(params, cfg).astype(dt))
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,2 @@
+"""Distribution substrate: logical-axis sharding rules, collective
+helpers, and gradient compression."""

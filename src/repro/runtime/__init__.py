@@ -1,0 +1,8 @@
+"""Cluster runtime: checkpoint/restore, fault tolerance, elastic
+re-sharding, straggler mitigation."""
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.fault_tolerance import FaultTolerantLoop, Heartbeat
+from repro.runtime.elastic import reshard_state
+
+__all__ = ["CheckpointManager", "FaultTolerantLoop", "Heartbeat",
+           "reshard_state"]

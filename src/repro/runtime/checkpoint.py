@@ -1,0 +1,129 @@
+"""Sharded checkpointing with atomic commits and retention.
+
+Layout: one directory per step::
+
+    <root>/step_000500.tmp/          (written)
+    <root>/step_000500/              (atomic rename on success)
+        manifest.json                (tree structure, shapes, dtypes)
+        arr_00000.npy ...            (one file per leaf)
+
+Design points for multi-pod operation:
+
+* **Atomicity** -- writers fill a ``.tmp`` directory and rename;
+  a crash mid-write never corrupts the latest checkpoint, and restore
+  simply picks the newest complete directory (the restart path of the
+  fault-tolerance loop).
+* **Host-sharded writes** -- ``process_slice`` lets each host write
+  only the leaves it owns (leaf index modulo process count), so a
+  1000-node job writes in parallel without coordination beyond the
+  final per-host ``commit`` marker; restore requires all markers.
+* **Elastic restore** -- arrays are stored UNSHARDED logically (device
+  layout is not baked in), so a checkpoint taken on a 16x16 mesh
+  restores onto 2x16x16 or 8x8 unchanged; re-sharding happens at
+  device_put time against the new mesh (see runtime/elastic.py).
+* 8-bit optimizer states (Quant8) round-trip transparently (int8
+  payload + fp32 scales are ordinary leaves).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import re
+import shutil
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"step_(\d+)$")
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3, n_processes: int = 1,
+                 process_id: int = 0):
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.n_processes = max(n_processes, 1)
+        self.process_id = process_id
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any) -> pathlib.Path:
+        tmp = self.root / f"step_{step:08d}.tmp"
+        final = self.root / f"step_{step:08d}"
+        if final.exists():
+            return final
+        tmp.mkdir(parents=True, exist_ok=True)
+        leaves, treedef = _flatten(tree)
+        manifest = {
+            "step": step,
+            "n_leaves": len(leaves),
+            "treedef": str(treedef),
+            "n_processes": self.n_processes,
+            "leaves": [{"shape": list(np.shape(x)),
+                        "dtype": str(np.asarray(x).dtype
+                                     if not hasattr(x, "dtype") else x.dtype)}
+                       for x in leaves],
+            "time": time.time(),
+        }
+        for i, leaf in enumerate(leaves):
+            if i % self.n_processes != self.process_id:
+                continue  # owned by another host
+            np.save(tmp / f"arr_{i:05d}.npy",
+                    np.asarray(jax.device_get(leaf)))
+        (tmp / f"commit_{self.process_id}").write_text("ok")
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        # last committer renames
+        commits = list(tmp.glob("commit_*"))
+        if len(commits) == self.n_processes:
+            os.replace(tmp, final)
+            self._gc()
+            return final
+        return tmp
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for p in self.root.iterdir():
+            m = _STEP_RE.search(p.name)
+            if m and not p.name.endswith(".tmp") and \
+                    (p / "manifest.json").exists():
+                steps.append(int(m.group(1)))
+        return max(steps) if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None) -> Any:
+        """Restore into the structure of ``like`` (shapes validated)."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = self.root / f"step_{step:08d}"
+        leaves, treedef = _flatten(like)
+        out = []
+        for i, leaf in enumerate(leaves):
+            arr = np.load(d / f"arr_{i:05d}.npy")
+            want = tuple(np.shape(leaf))
+            if tuple(arr.shape) != want:
+                raise ValueError(
+                    f"leaf {i}: checkpoint shape {arr.shape} != {want}")
+            out.append(arr)
+        return treedef.unflatten(out)
+
+    def restore_step(self, like: Any, step: Optional[int] = None):
+        step = self.latest_step() if step is None else step
+        return step, self.restore(like, step)
+
+    # ------------------------------------------------------------------
+    def _gc(self) -> None:
+        steps = sorted(
+            int(_STEP_RE.search(p.name).group(1))
+            for p in self.root.iterdir()
+            if _STEP_RE.search(p.name) and not p.name.endswith(".tmp"))
+        for s in steps[: max(len(steps) - self.keep, 0)]:
+            shutil.rmtree(self.root / f"step_{s:08d}", ignore_errors=True)

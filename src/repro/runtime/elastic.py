@@ -1,0 +1,39 @@
+"""Elastic scaling: re-shard state onto a different mesh.
+
+Checkpoints store logically-unsharded arrays (runtime/checkpoint.py),
+so growing 256 -> 512 chips or shrinking to a degraded 8x16 mesh is:
+
+    state = ckpt.restore(like)                  # host arrays
+    state = reshard_state(new_mesh, state)      # device_put w/ new specs
+
+``reshard_state`` re-derives every leaf's PartitionSpec from the same
+path rules the trainer uses (parallel/sharding.py), so the layout is
+always consistent with what the recompiled step expects.  The batch
+schedule is preserved by keeping the GLOBAL batch size fixed and
+letting the per-device batch change with the data-parallel degree --
+optimizer hyperparameters therefore need no adjustment on a mesh
+change (the "consistent global batch" elasticity policy).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.parallel import sharding as shardlib
+
+
+def reshard_state(mesh, state):
+    """device_put every leaf with the spec derived for ``mesh``."""
+    with shardlib.activate(mesh):
+        shardings = shardlib.tree_shardings(mesh, state)
+    return jax.tree.map(jax.device_put, state, shardings)
+
+
+def degraded_mesh_options(n_devices: int):
+    """Feasible (data, model) meshes for a degraded device count,
+    largest model-parallel degree first (prefer keeping TP intact so
+    big models still fit)."""
+    opts = []
+    for model in (16, 8, 4, 2, 1):
+        if n_devices % model == 0:
+            opts.append((n_devices // model, model))
+    return opts

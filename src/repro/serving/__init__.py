@@ -1,0 +1,6 @@
+"""Serving substrate: request scheduler + predictively-managed prefix
+cache (the paper's index tuner applied to KV-cache management)."""
+from repro.serving.prefix_cache import PredictivePrefixCache
+from repro.serving.scheduler import BatchScheduler, Request
+
+__all__ = ["BatchScheduler", "PredictivePrefixCache", "Request"]

@@ -1,0 +1,66 @@
+"""Batched request scheduler for the serve loop.
+
+Continuous-batching-lite: requests queue up, the scheduler packs up to
+``max_batch`` of them per step, pads to the batch shape the compiled
+decode step expects, and retires sequences that hit EOS or their token
+budget.  The prefix cache (serving/prefix_cache.py) is consulted at
+admission to skip covered prefill spans.
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (len,) int32
+    max_new_tokens: int = 32
+    prefix_id: Optional[str] = None
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class BatchScheduler:
+    max_batch: int
+    eos_id: int = -1                # -1: only budget-based termination
+    queue: Deque[Request] = field(default_factory=collections.deque)
+    active: List[Request] = field(default_factory=list)
+    _ids: "itertools.count" = field(default_factory=itertools.count)
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               prefix_id: Optional[str] = None) -> int:
+        rid = next(self._ids)
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  max_new_tokens, prefix_id))
+        return rid
+
+    def admit(self) -> List[Request]:
+        """Fill free slots from the queue; returns newly admitted."""
+        new = []
+        while self.queue and len(self.active) < self.max_batch:
+            r = self.queue.popleft()
+            self.active.append(r)
+            new.append(r)
+        return new
+
+    def record_tokens(self, tokens: Dict[int, int]) -> None:
+        """Feed one decode step's outputs {rid: token}."""
+        for r in self.active:
+            if r.rid in tokens:
+                t = int(tokens[r.rid])
+                r.generated.append(t)
+                if t == self.eos_id or \
+                        len(r.generated) >= r.max_new_tokens:
+                    r.done = True
+        self.active = [r for r in self.active if not r.done]
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.active

@@ -1,0 +1,9 @@
+"""Training substrate: AdamW (fp32 or 8-bit states), LR schedules,
+gradient clipping, and the jit-able train/serve step factories."""
+from repro.train.optimizer import (AdamWState, adamw_init, adamw_update,
+                                   clip_by_global_norm, cosine_schedule)
+from repro.train.steps import make_serve_steps, make_train_step
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "cosine_schedule", "make_serve_steps",
+           "make_train_step"]

@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train
+step on CPU asserting output shapes and finiteness, plus
+prefill->decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import (decode_step, init_cache, init_params, loss_fn,
+                          prefill)
+from repro.train.optimizer import cosine_schedule
+from repro.train.steps import init_train_state, make_train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    batch = {"labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.input_kind == "embeds":
+        batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model),
+                                            jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.family == "vlm":
+        batch["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32), (3, B, S))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    state = init_train_state(cfg, key)
+    step = jax.jit(make_train_step(cfg, cosine_schedule(1e-3, 2, 100)))
+    state, m = step(state, _batch(cfg, key))
+    assert jnp.isfinite(m["loss"]), arch
+    assert jnp.isfinite(m["grad_norm"]), arch
+    # loss near ln(vocab) at init
+    assert 0.5 * np.log(cfg.vocab_size) < float(m["loss"]) \
+        < 2.0 * np.log(cfg.vocab_size), (arch, float(m["loss"]))
+
+
+@pytest.mark.parametrize("arch", ["qwen3_1_7b", "granite_moe_1b_a400m",
+                                  "hymba_1_5b", "xlstm_350m",
+                                  "mixtral_8x22b"])
+def test_prefill_decode_consistency(arch):
+    """decode(token_n | prefill(prompt[:n])) must agree with
+    prefill(prompt[:n+1])'s next-token logits."""
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch_n = {"tokens": toks[:, : S - 1],
+               "labels": jnp.zeros((B, S - 1), jnp.int32)}
+    batch_n1 = {"tokens": toks, "labels": jnp.zeros((B, S), jnp.int32)}
+    logits_a, cache = prefill(params, cfg, batch_n, s_max=S)
+    logits_b, _ = prefill(params, cfg, batch_n1, s_max=S)
+    step_logits, _ = decode_step(params, cfg, toks[:, S - 1: S], cache,
+                                 jnp.asarray(S - 1, jnp.int32))
+    # parallel vs recurrent formulations agree numerically (argmax is
+    # not asserted: freshly-initialised logits are near-uniform, so
+    # bf16-level noise legitimately flips ties)
+    np.testing.assert_allclose(np.asarray(step_logits),
+                               np.asarray(logits_b), rtol=0.05, atol=0.05)
+
+
+def test_swa_ring_cache_long_context():
+    """SWA decode with a ring cache must match a linear cache once the
+    window covers the live region."""
+    cfg = get_smoke_config("mixtral_8x22b")  # sliding_window=16
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key)
+    W = cfg.sliding_window
+    total = W * 3
+    # linear cache sized for the whole sequence (ring explicitly off)
+    lin = init_cache(cfg, 1, total, ring=False)
+    assert "pos_ids" not in lin
+    ring = init_cache(cfg, 1, total * 10)  # forces ring mode
+    assert "pos_ids" in ring and ring["k"].shape[2] == W
+    tok = jnp.ones((1, 1), jnp.int32)
+    outs_l, outs_r = [], []
+    for p in range(total):
+        ll, lin = decode_step(params, cfg, tok, lin, jnp.asarray(p, jnp.int32))
+        lr, ring = decode_step(params, cfg, tok, ring, jnp.asarray(p, jnp.int32))
+        outs_l.append(np.asarray(ll))
+        outs_r.append(np.asarray(lr))
+    np.testing.assert_allclose(outs_l[-1], outs_r[-1], rtol=2e-2, atol=2e-2)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity factor >= 1 and uniform routing, drop rate stays
+    low; with tiny capacity, outputs stay finite (dropped tokens pass
+    through the residual)."""
+    cfg = get_smoke_config("granite_moe_1b_a400m").scaled(
+        moe_capacity_factor=0.25)
+    key = jax.random.PRNGKey(3)
+    params = init_params(cfg, key)
+    loss = loss_fn(params, cfg, _batch(cfg, key))
+    assert jnp.isfinite(loss)
+
+
+def test_training_reduces_loss():
+    cfg = get_smoke_config("qwen3_1_7b")
+    from repro.data import TokenPipeline
+    pipe = TokenPipeline(cfg.vocab_size, 64, 8, seed=0)
+    step = jax.jit(make_train_step(cfg, cosine_schedule(3e-3, 5, 60)))
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    losses = []
+    for i in range(25):
+        b = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[:3] + losses[-3:]

@@ -1,0 +1,190 @@
+"""Sharding rules + an 8-device end-to-end SPMD test (subprocess sets
+XLA_FLAGS before jax initialises; the main test process keeps 1 CPU
+device as the smoke tests expect)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import sharding as sh
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.size = 1
+        for v in shape.values():
+            self.size *= v
+
+
+def test_spec_rules_divisibility():
+    mesh = FakeMesh({"data": 4, "model": 4})
+    with sh.activate(mesh):
+        # divisible: head-sharded qkv + fsdp
+        assert sh.spec_for_path("layers/attn/wq", (2, 64, 64)) == \
+            P(None, "data", "model")
+        # vocab-sharded embedding
+        assert sh.spec_for_path("embed", (1024, 64)) == P("model", "data")
+        # non-divisible dims are dropped per-dimension
+        assert sh.spec_for_path("layers/attn/wq", (2, 63, 64)) == \
+            P(None, None, "model")
+        # norms replicated
+        assert sh.spec_for_path("layers/norm1", (2, 64)) == P()
+
+
+def test_spec_rules_moe_ep_vs_tp_conflict():
+    mesh = FakeMesh({"data": 2, "model": 4})
+    with sh.activate(mesh):
+        # E=8 divisible by model=4 -> ep wins, tp suppressed (same axis)
+        spec = sh.spec_for_path("layers/moe/w_gate", (2, 8, 64, 128))
+        assert spec == P(None, "model", "data", None)
+        # E=6 not divisible -> ep dropped, tp on ff
+        spec = sh.spec_for_path("layers/moe/w_gate", (2, 6, 64, 128))
+        assert spec == P(None, None, "data", "model")
+
+
+def test_quant8_moment_paths():
+    mesh = FakeMesh({"data": 2, "model": 4})
+    with sh.activate(mesh):
+        assert sh.spec_for_path("opt/mu/layers/mlp/w_gate/q",
+                                (2, 64, 128)) == P(None, "data", "model")
+        assert sh.spec_for_path("opt/mu/layers/mlp/w_gate/scale",
+                                (64,)) == P()
+
+
+def test_no_active_mesh_is_noop():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert sh.constrain(x, ("dp", "tp")) is x
+    assert sh.axis_size("tp") == 1
+
+
+SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.launch.mesh import make_debug_mesh
+from repro.launch import specs as S
+from repro.parallel import sharding as shardlib
+from repro.train.optimizer import cosine_schedule
+from repro.train.steps import init_train_state, make_train_step
+
+assert len(jax.devices()) == 8
+
+results = {}
+
+# 1) multi-pod debug mesh end-to-end train step (pod,data,model)=(2,2,2)
+cfg = get_smoke_config("qwen3_1_7b")
+mesh = make_debug_mesh(2, 2, multi_pod=True)
+with shardlib.activate(mesh):
+    step = make_train_step(cfg, cosine_schedule(1e-3, 2, 10))
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    state_sh = shardlib.tree_shardings(mesh, state)
+    state = jax.device_put(state, state_sh)
+    batch = {
+        "tokens": jnp.zeros((8, 32), jnp.int32),
+        "labels": jnp.zeros((8, 32), jnp.int32),
+    }
+    batch = jax.device_put(batch, S.batch_shardings(mesh, batch))
+    jitted = jax.jit(step, in_shardings=(state_sh,
+                                         S.batch_shardings(mesh, batch)))
+    state2, m = jitted(state, batch)
+    results["loss_finite"] = bool(jnp.isfinite(m["loss"]))
+    results["sharded_output"] = len(
+        state2.params["embed"].sharding.device_set) == 8
+
+# 2) sharded == single-device numerics
+with shardlib.activate(mesh):
+    loss_sharded = float(m["loss"])
+state1 = init_train_state(cfg, jax.random.PRNGKey(0))
+step1 = make_train_step(cfg, cosine_schedule(1e-3, 2, 10))
+_, m1 = jax.jit(step1)(state1, {"tokens": jnp.zeros((8, 32), jnp.int32),
+                                "labels": jnp.zeros((8, 32), jnp.int32)})
+results["numerics_match"] = bool(abs(loss_sharded - float(m1["loss"])) < 1e-2)
+
+# 4) elastic: save on one mesh, restore+reshard on another
+from repro.runtime import CheckpointManager, reshard_state
+import tempfile
+d = tempfile.mkdtemp()
+ck = CheckpointManager(d)
+ck.save(0, state2.params)
+mesh2 = make_debug_mesh(4, 2, multi_pod=False)
+like = jax.tree.map(np.zeros_like, jax.device_get(state2.params))
+restored = ck.restore(like)
+with shardlib.activate(mesh2):
+    resharded = reshard_state(mesh2, restored)
+results["elastic_ok"] = bool(
+    np.allclose(np.asarray(jax.device_get(resharded["final_norm"])),
+                np.asarray(jax.device_get(state2.params["final_norm"]))))
+print("RESULTS:" + json.dumps(results))
+"""
+
+
+COMPRESSED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke_config
+from repro.launch.mesh import make_debug_mesh
+from repro.parallel import sharding as shardlib
+from repro.train.optimizer import cosine_schedule
+from repro.train.steps import init_train_state, make_train_step
+
+cfg = get_smoke_config("qwen3_1_7b")
+mesh = make_debug_mesh(2, 2, multi_pod=True)
+batch = {"tokens": jnp.zeros((8, 32), jnp.int32),
+         "labels": jnp.zeros((8, 32), jnp.int32)}
+with shardlib.activate(mesh):
+    cstep = make_train_step(cfg, cosine_schedule(1e-3, 2, 10),
+                            compress_pod_grads=True, mesh=mesh)
+    state_c = init_train_state(cfg, jax.random.PRNGKey(0),
+                               error_feedback=True)
+    out_c, mc = jax.jit(cstep)(state_c, batch)
+    assert bool(jnp.isfinite(mc["loss"]))
+print("COMPRESSED_OK", float(mc["loss"]))
+"""
+
+
+@pytest.mark.slow
+def test_compressed_pod_grads_end_to_end():
+    """int8 error-feedback cross-pod reduction via partial-manual
+    shard_map.  The XLA *CPU* SPMD partitioner is known to abort
+    (PartitionGather) on some gather ops inside partial-auto regions;
+    when that backend limitation fires we xfail with the signature --
+    the compression numerics themselves are covered by unit tests in
+    test_runtime.py."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", COMPRESSED_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    if out.returncode != 0 and ("PartitionGather" in out.stderr
+                                or out.returncode == -6):
+        pytest.xfail("XLA CPU SPMD partitioner abort (PartitionGather) "
+                     "in partial-auto shard_map -- backend limitation")
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "COMPRESSED_OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_spmd_8device_end_to_end():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", SUBPROCESS_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULTS:")]
+    assert line, out.stdout
+    results = json.loads(line[0][len("RESULTS:"):])
+    assert all(results.values()), results

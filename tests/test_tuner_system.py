@@ -1,0 +1,131 @@
+"""End-to-end behaviour tests: the predictive tuner on workloads
+(detection, ahead-of-time builds, write-shift pruning), the baseline
+tuners, and the layout tuner."""
+import numpy as np
+import pytest
+
+from repro.bench_db import (QueryGen, RunConfig, make_tuner_db, run_workload)
+from repro.bench_db.workloads import (affinity_workload, hybrid_workload,
+                                      segments_workload)
+from repro.core import (Database, PredictiveTuner, Query, TunerConfig,
+                        make_dl_tuner)
+from repro.core.baselines import (AdaptiveTuner, DisabledTuner,
+                                  HolisticTuner, OnlineTuner, SmixTuner)
+from repro.core.layout import (LayoutState, LayoutTuner, derive_target_groups,
+                               scan_width_factor)
+
+DB = make_tuner_db(n_rows=8_000, page_size=128)
+
+
+def _gen(**kw):
+    return QueryGen(DB, selectivity=0.01, **kw)
+
+
+def test_predictive_tuner_builds_useful_index():
+    db = Database(dict(DB.tables))
+    tuner = PredictiveTuner(db, TunerConfig(storage_budget_bytes=1e7,
+                                            candidate_min_count=2,
+                                            pages_per_cycle=64,
+                                            max_build_pages_per_cycle=128))
+    gen = _gen()
+    for i in range(30):
+        db.execute(gen.low_s(attr=3))
+        if i % 5 == 4:
+            tuner.tuning_cycle()
+    assert any(b.desc.key_attrs[0] == 3 for b in db.indexes.values())
+    # the index actually serves queries
+    st = db.execute(gen.low_s(attr=3))
+    assert st.used_index
+
+
+def test_predictive_tuner_prunes_on_write_shift():
+    db = Database(dict(DB.tables), monitor_max_age_ms=1e9)
+    cfg = TunerConfig(storage_budget_bytes=1e8, candidate_min_count=2,
+                      pages_per_cycle=64, max_build_pages_per_cycle=256,
+                      u_min_write=0.4)
+    tuner = PredictiveTuner(db, cfg)
+    gen = _gen()
+    for i in range(30):
+        db.execute(gen.low_s(attr=2))
+        if i % 5 == 4:
+            tuner.tuning_cycle()
+    n_before = len(db.indexes)
+    assert n_before >= 1
+    # shift to pure inserts; classifier must flag write-intensive and
+    # the action generator should drop the scan indexes
+    for i in range(120):
+        db.execute(gen.ins(n=16))
+        if i % 5 == 4:
+            tuner.tuning_cycle()
+    assert len(db.indexes) < n_before or tuner.last_label == 0
+
+
+def test_all_baseline_tuners_run():
+    gen = _gen()
+    wl = hybrid_workload(gen, "balanced", total=60, phase_len=30)
+    for make in (lambda d: OnlineTuner(d), lambda d: AdaptiveTuner(d),
+                 lambda d: SmixTuner(d, TunerConfig(storage_budget_bytes=2e5)),
+                 lambda d: HolisticTuner(d), lambda d: DisabledTuner(d),
+                 lambda d: make_dl_tuner(d, "immediate"),
+                 lambda d: make_dl_tuner(d, "retrospective")):
+        db = Database(dict(DB.tables))
+        res = run_workload(db, make(db), wl,
+                           RunConfig(tuning_interval_ms=50.0))
+        assert len(res.latencies_ms) == 60
+        assert res.cumulative_ms > 0
+
+
+def test_tuning_beats_disabled_on_stable_read_workload():
+    gen = _gen()
+    wl = affinity_workload(gen, total=150, phase_len=150, n_subdomains=4,
+                           template="low_s")
+    cfg = RunConfig(tuning_interval_ms=25.0)
+    db1 = Database(dict(DB.tables))
+    r_dis = run_workload(db1, DisabledTuner(db1), wl, cfg)
+    db2 = Database(dict(DB.tables))
+    r_pred = run_workload(
+        db2, PredictiveTuner(db2, TunerConfig(storage_budget_bytes=1e8,
+                                              candidate_min_count=2,
+                                              pages_per_cycle=32,
+                                              max_build_pages_per_cycle=64)),
+        wl, cfg)
+    assert r_pred.cumulative_ms < 0.7 * r_dis.cumulative_ms
+
+
+def test_join_queries_drive_inner_index():
+    db = Database(dict(DB.tables))
+    tuner = PredictiveTuner(db, TunerConfig(storage_budget_bytes=1e8,
+                                            candidate_min_count=2,
+                                            pages_per_cycle=64,
+                                            max_build_pages_per_cycle=128))
+    gen = _gen()
+    for i in range(30):
+        st = db.execute(gen.high_s())
+        assert st.count >= 0
+        if i % 5 == 4:
+            tuner.tuning_cycle()
+    # the tuner saw the join-attribute access path
+    assert any(b.desc.key_attrs[0] == 4 for b in db.indexes.values())
+
+
+def test_layout_tuner_groups_and_width():
+    st = LayoutState(n_attrs=20, n_pages=10)
+    assert scan_width_factor(st, (1, 2)) == 20.0  # NSM default
+    groups = derive_target_groups(20, [(1, 2, 3)] * 5 + [(4, 5)] * 3)
+    assert (1, 2, 3) in groups
+    lt = LayoutTuner(pages_per_cycle=10, page_size=100)
+    lt.retarget(st, [(1, 2, 3)] * 5)
+    ms = lt.cycle(st)
+    assert ms > 0
+    w = scan_width_factor(st, (1, 2))
+    assert w == 3.0  # only the co-located group is read
+
+
+def test_workload_monitor_time_horizon():
+    db = Database(dict(DB.tables), monitor_max_age_ms=10.0)
+    gen = _gen()
+    db.execute(gen.low_s())
+    assert len(db.monitor.records) >= 1
+    db.clock_ms += 100.0
+    db.monitor.prune(db.clock_ms)
+    assert len(db.monitor.records) == 0
