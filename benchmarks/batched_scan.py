@@ -1,0 +1,75 @@
+"""Microbenchmark: per-query dispatch vs the batched read-burst path.
+
+The executor's hot path for read bursts used to be one jitted scan per
+query -- launch-bound, not bandwidth-bound.  ``Database.execute_batch``
+groups compatible scans and evaluates each group in ONE dispatch
+(vmapped jnp on CPU, the multi-query Pallas kernel on TPU), so a burst
+pays the dispatch overhead once.  This bench measures both paths on
+the bench_db TUNER workload, for a pure table-scan burst and for a
+hybrid-scan burst over a half-built VAP index.
+
+    PYTHONPATH=src python -m benchmarks.batched_scan
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.bench_db import QueryGen, make_tuner_db
+from repro.core import Database, IndexDescriptor
+
+
+def _mk_db(src, with_index: bool):
+    db = Database(dict(src.tables))
+    if with_index:
+        bi = db.create_index(IndexDescriptor("narrow", (1,)), "vap")
+        db.vap_build_step(bi, pages=src.tables["narrow"].n_pages // 2)
+    return db
+
+
+def _queries(src, n_queries: int, seed: int):
+    gen = QueryGen(src, selectivity=0.01, seed=seed)
+    return [gen.low_s(attr=1) if i % 2 == 0 else gen.mod_s()
+            for i in range(n_queries)]
+
+
+def _time_burst(fn, repeats: int) -> float:
+    fn()                       # warm-up: compile every group shape
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+def run(n_queries: int = 128, n_rows: int = 20_000, page_size: int = 256,
+        repeats: int = 3, quiet: bool = False):
+    src = make_tuner_db(n_rows=n_rows, page_size=page_size)
+    results = {}
+    for label, with_index in (("table_scan", False), ("hybrid_scan", True)):
+        qs = _queries(src, n_queries, seed=17)
+        db_loop = _mk_db(src, with_index)
+        db_batch = _mk_db(src, with_index)
+
+        s_loop = _time_burst(
+            lambda: [db_loop.execute(q) for q in qs], repeats)
+        s_batch = _time_burst(
+            lambda: db_batch.execute_batch(qs), repeats)
+        speedup = s_loop / max(s_batch, 1e-12)
+        results[label] = speedup
+
+        us_q_loop = s_loop / n_queries * 1e6
+        us_q_batch = s_batch / n_queries * 1e6
+        emit(f"batched_scan.{label}.per_query_dispatch", us_q_loop,
+             f"{n_queries}-query burst, one jit dispatch per query")
+        emit(f"batched_scan.{label}.execute_batch", us_q_batch,
+             f"{n_queries}-query burst, grouped dispatches")
+        emit(f"batched_scan.{label}.speedup", speedup,
+             f"{speedup:.2f}x queries/s vs per-query dispatch")
+        if not quiet:
+            print(f"# {label}: {us_q_loop:.1f} us/q -> {us_q_batch:.1f} us/q "
+                  f"({speedup:.2f}x)")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -76,8 +76,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (fig2_schemes, fig6_decision_logic, fig7_holistic,
-                            fig8_affinity, fig9_layout, fig10_adaptability)
+    from benchmarks import (batched_scan, fig2_schemes, fig6_decision_logic,
+                            fig7_holistic, fig8_affinity, fig9_layout,
+                            fig10_adaptability)
 
     quick = args.quick
     jobs = [
@@ -94,6 +95,8 @@ def main() -> None:
             total=250 if quick else 500, quiet=True)),
         ("fig10", lambda: fig10_adaptability.run(
             total=600 if quick else 1500, quiet=True)),
+        ("batched", lambda: batched_scan.run(
+            n_queries=64 if quick else 128, quiet=True)),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),
     ]

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Canonical pre-merge check: the fast tier-1 slice on CPU with the
+# Pallas kernels in interpret mode (repro.kernels.ops.INTERPRET is
+# True by default on this container; TPU deployments flip it).
+#
+#   scripts/ci.sh            fast slice (slow tests deselected)
+#   scripts/ci.sh --full     everything, including @pytest.mark.slow
+#   scripts/ci.sh <args...>  extra args forwarded to pytest
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS=cpu
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--full" ]]; then
+    shift
+    exec python -m pytest -q -m "slow or not slow" "$@"
+fi
+exec python -m pytest -q "$@"

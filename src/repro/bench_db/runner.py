@@ -21,7 +21,7 @@ mode, Figure 6: indexes have to be rebuilt every morning) -- tuner
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -40,6 +40,9 @@ class RunConfig:
     max_cycles_per_gap: int = 50                  # clamp catch-up storms
     arrival_ms: float = 0.0                       # open-loop client cadence
                                                   # (0 = closed loop)
+    read_batch_size: int = 1                      # >1: submit consecutive
+                                                  # read scans through
+                                                  # Database.execute_batch
 
 
 @dataclass
@@ -114,28 +117,9 @@ def run_workload(db: Database, tuner, workload: Workload,
             k = int((db.clock_ms - next_cycle_ms) // cfg.tuning_interval_ms) + 1
             next_cycle_ms += k * cfg.tuning_interval_ms
 
-    import time as _time
-    t_start = _time.perf_counter()
-    for phase, q in workload:
-        if phase != prev_phase:
-            if cfg.drop_indexes_at_phase_end:
-                for name in list(db.indexes):
-                    db.drop_index(name)
-            idle_until_ms = db.clock_ms + cfg.idle_at_phase_start_ms
-            idle_credit_ms += cfg.idle_at_phase_start_ms
-            if cfg.idle_at_phase_start_ms > 0:
-                # traverse the idle window so due cycles fire inside it
-                end = idle_until_ms
-                while db.clock_ms < end and cfg.tuning_interval_ms:
-                    db.clock_ms = min(end, max(next_cycle_ms, db.clock_ms))
-                    run_due_cycles()
-                    if next_cycle_ms > end:
-                        break
-                db.clock_ms = max(db.clock_ms, end)
-            prev_phase = phase
-
-        run_due_cycles()
-        stats = db.execute(q)
+    def account(phase, q, stats):
+        """Per-query bookkeeping shared by the single and batch paths."""
+        nonlocal blocking_ms, idle_credit_ms
         extra_units = tuner.on_query(q, stats)
         extra_ms = extra_units * cfg.time_per_unit_ms
         db.clock_ms += extra_ms
@@ -152,5 +136,56 @@ def run_workload(db: Database, tuner, workload: Workload,
             gap = cfg.arrival_ms - lat
             db.clock_ms += gap
             idle_credit_ms += gap
+
+    # Read bursts: consecutive batchable scans are staged and submitted
+    # through the batched execution path in one dispatch.  Tuning
+    # cycles fire at burst boundaries instead of between every query
+    # (the burst is one uninterruptible unit of client work); mutations
+    # and phase changes flush the stage first, preserving sequential
+    # semantics.
+    batch_n = max(int(cfg.read_batch_size), 1)
+    staged: List[Tuple[int, object]] = []
+
+    def flush_burst():
+        if not staged:
+            return
+        run_due_cycles()
+        stats_list = db.execute_batch([q for _, q in staged])
+        for (ph, q), stats in zip(staged, stats_list):
+            account(ph, q, stats)
+        staged.clear()
+
+    import time as _time
+    t_start = _time.perf_counter()
+    for phase, q in workload:
+        if phase != prev_phase:
+            flush_burst()
+            if cfg.drop_indexes_at_phase_end:
+                for name in list(db.indexes):
+                    db.drop_index(name)
+            idle_until_ms = db.clock_ms + cfg.idle_at_phase_start_ms
+            idle_credit_ms += cfg.idle_at_phase_start_ms
+            if cfg.idle_at_phase_start_ms > 0:
+                # traverse the idle window so due cycles fire inside it
+                end = idle_until_ms
+                while db.clock_ms < end and cfg.tuning_interval_ms:
+                    db.clock_ms = min(end, max(next_cycle_ms, db.clock_ms))
+                    run_due_cycles()
+                    if next_cycle_ms > end:
+                        break
+                db.clock_ms = max(db.clock_ms, end)
+            prev_phase = phase
+
+        if batch_n > 1 and q.kind == "scan" and q.join_table is None:
+            staged.append((phase, q))
+            if len(staged) >= batch_n:
+                flush_burst()
+            continue
+
+        flush_burst()
+        run_due_cycles()
+        stats = db.execute(q)
+        account(phase, q, stats)
+    flush_burst()
     res.wall_s = _time.perf_counter() - t_start
     return res

@@ -15,7 +15,11 @@ The paper's contribution as composable pieces:
 """
 from repro.core.cost_model import IndexDescriptor
 from repro.core.executor import Database, ExecStats, Query
-from repro.core.hybrid_scan import (ScanResult, full_table_scan, hybrid_scan,
+from repro.core.hybrid_scan import (BatchScanResult, ScanResult,
+                                    batched_full_table_scan,
+                                    batched_hybrid_scan,
+                                    batched_pure_index_scan,
+                                    full_table_scan, hybrid_scan,
                                     pure_index_scan)
 from repro.core.index import (AdHocIndex, VbpState, build_full,
                               build_pages_vap, make_index, make_vbp)
@@ -23,9 +27,11 @@ from repro.core.table import Table, load_table, make_table
 from repro.core.tuner import PredictiveTuner, TunerConfig, make_dl_tuner
 
 __all__ = [
-    "AdHocIndex", "Database", "ExecStats", "IndexDescriptor",
-    "PredictiveTuner", "Query", "ScanResult", "Table", "TunerConfig",
-    "VbpState", "build_full", "build_pages_vap", "full_table_scan",
-    "hybrid_scan", "load_table", "make_dl_tuner", "make_index", "make_table",
-    "make_vbp", "pure_index_scan",
+    "AdHocIndex", "BatchScanResult", "Database", "ExecStats",
+    "IndexDescriptor", "PredictiveTuner", "Query", "ScanResult", "Table",
+    "TunerConfig", "VbpState", "batched_full_table_scan",
+    "batched_hybrid_scan", "batched_pure_index_scan", "build_full",
+    "build_pages_vap", "full_table_scan", "hybrid_scan", "load_table",
+    "make_dl_tuner", "make_index", "make_table", "make_vbp",
+    "pure_index_scan",
 ]

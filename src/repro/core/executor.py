@@ -26,7 +26,11 @@ import numpy as np
 
 from repro.core import cost_model as cm
 from repro.core.cost_model import IndexDescriptor
-from repro.core.hybrid_scan import (ScanResult, full_table_scan, hybrid_scan,
+from repro.core.hybrid_scan import (BatchScanResult, ScanResult,
+                                    batched_full_table_scan,
+                                    batched_hybrid_scan,
+                                    batched_pure_index_scan,
+                                    full_table_scan, hybrid_scan,
                                     pure_index_scan)
 from repro.core.index import (AdHocIndex, VbpState, build_pages_vap,
                               index_range_scan, key_range, make_index,
@@ -328,6 +332,155 @@ class Database:
                          latency_ms=cost * self.time_per_unit_ms,
                          wall_s=wall, used_index=used,
                          agg_sum=int(r.agg_sum), count=count)
+
+    # ------------------------------------------------------------------
+    # Batched execution (read bursts)
+    # ------------------------------------------------------------------
+    def execute_batch(self, queries, observe: bool = True,
+                      use_kernel: bool = False):
+        """Execute a burst of queries, batching compatible read scans.
+
+        Scans that share (table, attrs, agg_attr) and access path are
+        evaluated in ONE jitted dispatch (``batched_*_scan``; with
+        ``use_kernel`` the no-index group goes through the Pallas
+        multi-query kernel via the ops layer) instead of one dispatch
+        per query.  Results and accounting are bit-identical to
+        ``[self.execute(q) for q in queries]``:
+
+        * A maximal run of consecutive batchable scans forms one
+          burst, executed against the snapshot at burst start.  Every
+          version timestamp in the table predates that snapshot, and
+          reads do not mutate, so each query sees exactly the
+          visibility it would have seen at its own (later) per-query
+          snapshot.
+        * Cost, latency, simulated-clock advancement and monitor
+          observations are replayed per query, in order, from the
+          per-query batch results.
+        * Non-batchable statements (updates, inserts, joins) flush
+          the pending burst and run through ``execute``, so mutations
+          interleaved with reads keep sequential semantics.
+
+        Returns the list of per-query ``ExecStats`` in input order.
+        """
+        out: list = [None] * len(queries)
+        pending: list = []          # [(position, query)]
+
+        def flush():
+            if pending:
+                self._exec_scan_burst(pending, out, observe, use_kernel)
+                pending.clear()
+
+        for i, q in enumerate(queries):
+            if q.kind == "scan" and q.join_table is None:
+                pending.append((i, q))
+            else:
+                flush()
+                out[i] = self.execute(q, observe=observe)
+        flush()
+        return out
+
+    def _exec_scan_burst(self, pending, out, observe: bool,
+                         use_kernel: bool) -> None:
+        """Plan, group and execute one burst of batchable scans."""
+        # Plan each query exactly like _exec_scan would, then group by
+        # (table, attrs, agg_attr, access path, index).  Plans cannot
+        # change mid-burst: reads never mutate tables or index state.
+        groups: Dict[tuple, list] = {}
+        for pos, q in pending:
+            est_sel = self._estimate_selectivity(q)
+            bi = None
+            if est_sel <= HYBRID_SELECTIVITY_CUTOFF:
+                bi = self._choose_index(q)
+            if bi is None:
+                path = "table"
+            elif bi.scheme == "vbp":
+                path = "pure_vbp"
+            elif bi.scheme == "full" and bi.complete:
+                path = "pure_vap"
+            else:
+                path = "hybrid"
+            key = (q.table, tuple(q.attrs), q.agg_attr, path,
+                   bi.desc.name if bi is not None else None)
+            groups.setdefault(key, []).append((pos, q, bi))
+
+        # Run each group in one dispatch; gather per-position raw rows.
+        ts = self.clock_ms_i32()
+        raw: Dict[int, tuple] = {}   # pos -> (sum, count, pages, entries,
+                                     #         start_page, wall_share)
+        for (table_name, attrs, agg_attr, path, _idx), members in \
+                groups.items():
+            t = self.tables[table_name]
+            los = jnp.asarray([q.los for _, q, _ in members], jnp.int32)
+            his = jnp.asarray([q.his for _, q, _ in members], jnp.int32)
+            tss = jnp.full((len(members),), ts, jnp.int32)
+            bi = members[0][2]
+            t0 = time.perf_counter()
+            if path == "table":
+                # The Pallas kernel evaluates at most 2 predicate
+                # columns; wider conjunctions take the vmapped path.
+                if use_kernel and 1 <= len(attrs) <= 2:
+                    from repro.kernels import ops as _kops
+                    sums, cnts = _kops.scan_table_batched(
+                        t, attrs, los, his, tss, agg_attr)
+                    used_pages = -(-int(t.n_rows) // t.page_size)
+                    z = jnp.zeros((len(members),), jnp.int32)
+                    r = BatchScanResult(
+                        sums, cnts,
+                        jnp.full((len(members),), used_pages, jnp.int32),
+                        z, z)
+                else:
+                    r = batched_full_table_scan(t, attrs, los, his, tss,
+                                                agg_attr)
+            elif path == "hybrid":
+                r = batched_hybrid_scan(t, bi.vap, bi.desc.key_attrs,
+                                        attrs, los, his, tss, agg_attr)
+            else:
+                idx = bi.vbp.index if path == "pure_vbp" else bi.vap
+                r = batched_pure_index_scan(t, idx, bi.desc.key_attrs,
+                                            attrs, los, his, tss, agg_attr)
+            wall = time.perf_counter() - t0
+            agg_sums = np.asarray(r.agg_sum)
+            counts = np.asarray(r.count)
+            pages = np.asarray(r.pages_scanned)
+            entries = np.asarray(r.entries_probed)
+            starts = np.asarray(r.start_page)
+            for k, (pos, _q, _bi) in enumerate(members):
+                raw[pos] = (int(agg_sums[k]), int(counts[k]),
+                            int(pages[k]), int(entries[k]),
+                            int(starts[k]), wall / len(members))
+
+        # Accounting replay in input order (host-side, same arithmetic
+        # and clock/monitor trajectory as the per-query loop).
+        plan_by_pos = {pos: bi_q for ms in groups.values()
+                       for pos, _q, bi_q in ms}
+        for pos, q in pending:
+            agg_sum, count, n_pages, n_entries, start_page, wall = raw[pos]
+            t = self.tables[q.table]
+            layout = self.layouts[q.table]
+            bi_q = plan_by_pos[pos]
+            width = scan_width_factor(layout, q.accessed_attrs,
+                                      from_page=start_page)
+            cost = float(n_pages) * t.page_size * (width / layout.n_attrs)
+            cost += float(n_entries) * cm.INDEX_PROBE_COST
+            used = bi_q is not None
+            if used:
+                bi_q.last_used_ms = self.clock_ms
+            stats = ExecStats(
+                cost_units=cost, latency_ms=cost * self.time_per_unit_ms,
+                wall_s=wall, used_index=used,
+                agg_sum=agg_sum, count=count)
+            self.clock_ms += stats.latency_ms
+            if observe:
+                n_rows = int(t.n_rows)
+                self.monitor.observe(QueryRecord(
+                    kind="scan", table=q.table, pred_attrs=tuple(q.attrs),
+                    accessed_attrs=q.accessed_attrs,
+                    selectivity=stats.count / max(n_rows, 1),
+                    tuples_scanned=int(stats.cost_units),
+                    used_index=stats.used_index,
+                    rows_modified=0, ts_ms=self.clock_ms,
+                    template=q.template))
+            out[pos] = stats
 
     def _exec_join(self, q: Query, outer: ScanResult):
         """HIGH-S equi-join: count pairs between the outer matches and

@@ -46,6 +46,24 @@ class ScanResult(NamedTuple):
     start_page: jax.Array     # () int32 where the table scan began
 
 
+class BatchScanResult(NamedTuple):
+    """Per-query aggregates + accounting from one batched execution.
+
+    Every field is (n_queries,); entry q is bit-identical to the
+    corresponding ``ScanResult`` field of the per-query operator run
+    with query q's bounds and snapshot (``contrib`` is not
+    materialised on the batch path -- the executor only needs the
+    aggregates and accounting, and the per-query oracle equivalence
+    is covered by tests/test_batch_exec.py).
+    """
+
+    agg_sum: jax.Array        # (B,) int32
+    count: jax.Array          # (B,) int32
+    pages_scanned: jax.Array  # (B,) int32
+    entries_probed: jax.Array # (B,) int32
+    start_page: jax.Array     # (B,) int32
+
+
 def _predicate_key_bounds(key_attrs: tuple, attrs: tuple, los, his):
     """Packed-key range implied by a conjunctive predicate for an index
     keyed on ``key_attrs``.  Requires the index's leading attribute to
@@ -64,10 +82,12 @@ def _predicate_key_bounds(key_attrs: tuple, attrs: tuple, los, his):
     return key_range(lo0, hi0, lo1, hi1)
 
 
-@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
-def hybrid_scan(table: Table, index: AdHocIndex, key_attrs: tuple,
-                attrs: tuple, los, his, ts, agg_attr: int) -> ScanResult:
-    """Value-agnostic hybrid scan: index prefix + table suffix."""
+def _hybrid_scan_core(table: Table, index: AdHocIndex, key_attrs: tuple,
+                      attrs: tuple, los, his, ts, agg_attr: int):
+    """Shared hybrid-scan body: returns the aggregate/accounting tuple
+    plus the match masks the single-query wrapper needs for contrib.
+    The batched path vmaps this and drops the masks (XLA prunes the
+    dead mask computation after jit)."""
     psz = table.page_size
     lo_key, hi_key = _predicate_key_bounds(key_attrs, attrs, los, his)
 
@@ -88,13 +108,9 @@ def hybrid_scan(table: Table, index: AdHocIndex, key_attrs: tuple,
 
     # ---- 4. dedup + combine --------------------------------------------
     idx_keep = idx_match & (pg < start_page)
-    contrib = jnp.zeros((table.n_pages, table.page_size), jnp.int32)
-    contrib = contrib.at[pg, sl].add(idx_keep.astype(jnp.int32))
-
     page_ids = jnp.arange(table.n_pages, dtype=jnp.int32)[:, None]
     tbl_mask = conj_predicate_mask(table, attrs, los, his) & visible_mask(table, ts)
     tbl_mask &= page_ids >= start_page
-    contrib = contrib + tbl_mask.astype(jnp.int32)
 
     vals = table.data[:, :, agg_attr]
     idx_sum = jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32)
@@ -108,9 +124,23 @@ def hybrid_scan(table: Table, index: AdHocIndex, key_attrs: tuple,
     used_pages = (table.n_rows + psz - 1) // psz
     pages_scanned = jnp.clip(used_pages - start_page, 0, None).astype(jnp.int32)
     entries_probed = jnp.sum(entry_mask, dtype=jnp.int32)
-    return ScanResult(idx_sum + tbl_sum, count, contrib,
-                      pages_scanned, entries_probed,
-                      start_page.astype(jnp.int32))
+    stats = (idx_sum + tbl_sum, count, pages_scanned, entries_probed,
+             start_page.astype(jnp.int32))
+    return stats, idx_keep, tbl_mask, pg, sl
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def hybrid_scan(table: Table, index: AdHocIndex, key_attrs: tuple,
+                attrs: tuple, los, his, ts, agg_attr: int) -> ScanResult:
+    """Value-agnostic hybrid scan: index prefix + table suffix."""
+    stats, idx_keep, tbl_mask, pg, sl = _hybrid_scan_core(
+        table, index, key_attrs, attrs, los, his, ts, agg_attr)
+    agg_sum, count, pages_scanned, entries_probed, start_page = stats
+    contrib = jnp.zeros((table.n_pages, table.page_size), jnp.int32)
+    contrib = contrib.at[pg, sl].add(idx_keep.astype(jnp.int32))
+    contrib = contrib + tbl_mask.astype(jnp.int32)
+    return ScanResult(agg_sum, count, contrib,
+                      pages_scanned, entries_probed, start_page)
 
 
 @functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
@@ -149,3 +179,71 @@ def full_table_scan(table: Table, attrs: tuple, los, his, ts,
     return ScanResult(s, c, tbl_mask.astype(jnp.int32),
                       used_pages,
                       jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-query scans (the executor's read-burst substrate)
+# ---------------------------------------------------------------------------
+# Each takes per-query bounds ``los``/``his`` of shape (B, len(attrs))
+# and snapshots ``tss`` of shape (B,) and evaluates every query in ONE
+# jitted dispatch over shared table state -- the launch-amortisation
+# analogue of the Pallas kernel in kernels/batched_filter_agg.py
+# (which the ops layer exposes for TPU deployments; on CPU these
+# vmapped forms are the fast path).  Results are per-query
+# bit-identical to the single-query operators above.
+
+@functools.partial(jax.jit, static_argnames=("attrs", "agg_attr"))
+def batched_full_table_scan(table: Table, attrs: tuple, los, his, tss,
+                            agg_attr: int) -> BatchScanResult:
+    """B plain table scans in one dispatch."""
+    def one(lo, hi, ts):
+        tbl_mask = conj_predicate_mask(table, attrs, lo, hi) \
+            & visible_mask(table, ts)
+        vals = table.data[:, :, agg_attr]
+        s = jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
+        c = jnp.sum(tbl_mask, dtype=jnp.int32)
+        used_pages = ((table.n_rows + table.page_size - 1)
+                      // table.page_size).astype(jnp.int32)
+        z = jnp.zeros((), jnp.int32)
+        return s, c, used_pages, z, z
+
+    return BatchScanResult(*jax.vmap(one)(los, his, tss))
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def batched_hybrid_scan(table: Table, index: AdHocIndex, key_attrs: tuple,
+                        attrs: tuple, los, his, tss,
+                        agg_attr: int) -> BatchScanResult:
+    """B hybrid scans over one shared partial index in one dispatch.
+    Per-query stitch points (start_page) fall out of the vmapped core."""
+    def one(lo, hi, ts):
+        stats, *_ = _hybrid_scan_core(table, index, key_attrs, attrs,
+                                      lo, hi, ts, agg_attr)
+        return stats
+
+    return BatchScanResult(*jax.vmap(one)(los, his, tss))
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def batched_pure_index_scan(table: Table, index: AdHocIndex, key_attrs: tuple,
+                            attrs: tuple, los, his, tss,
+                            agg_attr: int) -> BatchScanResult:
+    """B index-only scans in one dispatch (same legality conditions as
+    ``pure_index_scan``)."""
+    psz = table.page_size
+
+    def one(lo, hi, ts):
+        lo_key, hi_key = _predicate_key_bounds(key_attrs, attrs, lo, hi)
+        entry_mask, rids = index_range_scan(index, lo_key, hi_key)
+        pg, sl = rids // psz, rids % psz
+        rows_ok = conj_predicate_mask(table, attrs, lo, hi)[pg, sl]
+        rows_ok &= visible_mask(table, ts)[pg, sl]
+        idx_match = entry_mask & rows_ok
+        vals = table.data[:, :, agg_attr]
+        s = jnp.sum(jnp.where(idx_match, vals[pg, sl], 0), dtype=jnp.int32)
+        c = jnp.sum(idx_match, dtype=jnp.int32)
+        return (s, c, jnp.zeros((), jnp.int32),
+                jnp.sum(entry_mask, dtype=jnp.int32),
+                jnp.asarray(table.n_pages, jnp.int32))
+
+    return BatchScanResult(*jax.vmap(one)(los, his, tss))

@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: multi-query fused filter+aggregate table scan.
+
+One launch evaluates a whole *batch* of conjunctive filter+aggregate
+queries over the same column planes.  The per-query dispatch path
+(``filter_agg``) is launch-bound on read bursts -- every query pays a
+kernel launch plus a fresh HBM -> VMEM stream of the same columns.
+Batching amortises both:
+
+* Grid is ``(page_block, query)`` with the query dimension innermost:
+  consecutive grid steps share the same input block, so Pallas keeps
+  the block resident in VMEM and streams each column tile from HBM
+  once per *batch*, not once per query.
+* All per-query parameters -- predicate bounds, MVCC snapshot
+  timestamp and the hybrid scan's ``start_page`` -- arrive as one
+  scalar-prefetch operand in SMEM, indexed by the query grid
+  coordinate.  Scalar prefetch means ``start_page`` is known before
+  the block's DMA is issued; a (block, query) step whose pages lie
+  entirely inside that query's indexed prefix skips its compute via
+  ``pl.when`` (and, when *every* query in the batch skips the block,
+  no query forces the DMA).
+* Each (block, query) step writes its partial (sum, count) to a
+  ``(n_blocks, n_queries)`` output; the wrapper reduces over blocks.
+  Accumulation stays int32 (the engine's documented wraparound
+  semantics).
+
+Semantics contract: ``ref.batched_filter_agg_ref`` -- per query
+identical to ``ref.masked_filter_agg_ref``.  A single-query batch is
+bit-identical to the single-query kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+I32_MIN = -(2 ** 31)
+I32_MAX = 2 ** 31 - 1
+
+
+def _batched_kernel(scalars_ref, pred0_ref, pred1_ref, agg_ref,
+                    begin_ref, end_ref, sum_ref, cnt_ref, *,
+                    block_pages: int):
+    """One grid step: reduce a (block_pages, page_size) tile for one
+    query of the batch.
+
+    scalars_ref (SMEM, scalar-prefetch) is (7, n_queries) int32 with
+    rows [lo0, hi0, lo1, hi1, ts, start_page, first_needed_block]
+    (the last row is batch-wide, used only by the input index_map).
+    """
+    blk = pl.program_id(0)
+    q = pl.program_id(1)
+    lo0, hi0 = scalars_ref[0, q], scalars_ref[1, q]
+    lo1, hi1 = scalars_ref[2, q], scalars_ref[3, q]
+    ts = scalars_ref[4, q]
+    start_page = scalars_ref[5, q]
+
+    first_page = blk * block_pages
+
+    @pl.when(first_page + block_pages <= start_page)
+    def _skip():
+        sum_ref[0, 0] = jnp.int32(0)
+        cnt_ref[0, 0] = jnp.int32(0)
+
+    @pl.when(first_page + block_pages > start_page)
+    def _run():
+        p0 = pred0_ref[...]
+        p1 = pred1_ref[...]
+        ag = agg_ref[...]
+        bts = begin_ref[...]
+        ets = end_ref[...]
+        mask = (p0 >= lo0) & (p0 <= hi0) & (p1 >= lo1) & (p1 <= hi1)
+        mask &= (bts <= ts) & (ts < ets)
+        # Per-page mask inside a block straddling this query's
+        # start_page boundary.
+        rows = jax.lax.broadcasted_iota(jnp.int32, p0.shape, 0)
+        mask &= (first_page + rows) >= start_page
+        sum_ref[0, 0] = jnp.sum(jnp.where(mask, ag, 0), dtype=jnp.int32)
+        cnt_ref[0, 0] = jnp.sum(mask, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_pages", "interpret"))
+def batched_filter_agg(pred0, pred1, agg, begin_ts, end_ts,
+                       los0, his0, los1, his1, tss, start_pages,
+                       block_pages: int = 8, interpret: bool = False):
+    """Multi-query fused filter+aggregate scan.
+
+    Column planes are (n_pages, page_size) int32, shared by every
+    query in the batch; per-query operands ``los0/his0/los1/his1/tss/
+    start_pages`` are (n_queries,) int32.  Single-attribute queries
+    pass los1 = INT32_MIN, his1 = INT32_MAX; full (non-hybrid) scans
+    pass start_pages = 0.  Returns (sums, counts), each (n_queries,)
+    int32.
+    """
+    n_pages, page_size = pred0.shape
+    n_queries = los0.shape[0]
+
+    n_blocks = pl.cdiv(n_pages, block_pages)
+    pad = n_blocks * block_pages - n_pages
+    if pad:
+        # Padding rows carry begin_ts = INT32_MAX -> never visible.
+        def padp(x, fill):
+            return jnp.pad(x, ((0, pad), (0, 0)), constant_values=fill)
+        pred0 = padp(pred0, 0)
+        pred1 = padp(pred1, 0)
+        agg = padp(agg, 0)
+        begin_ts = padp(begin_ts, I32_MAX)
+        end_ts = padp(end_ts, I32_MAX)
+
+    # Row 6: first page-block ANY query needs (blocks below it lie in
+    # every query's indexed prefix -- they form a skippable prefix).
+    start_pages = jnp.asarray(start_pages, jnp.int32)
+    first_blk = jnp.minimum(jnp.min(start_pages) // block_pages,
+                            n_blocks - 1)
+    scalars = jnp.stack([jnp.asarray(v, jnp.int32) for v in
+                         (los0, his0, los1, his1, tss, start_pages,
+                          jnp.full((n_queries,), first_blk, jnp.int32))])
+
+    # index_map receives (*grid_indices, *scalar_prefetch_refs); the
+    # input block depends only on the page-block coordinate, so the
+    # innermost query steps revisit the resident block.  Clamping the
+    # coordinate up to the batch-wide first needed block makes the
+    # skippable prefix revisit THAT block too, so its DMAs are elided
+    # -- the pre-DMA skip (pl.when in the kernel body still zeroes the
+    # prefix outputs per query).
+    block = pl.BlockSpec((block_pages, page_size),
+                         lambda i, q, s: (jnp.maximum(i, s[6, 0]), 0))
+    out_spec = pl.BlockSpec((1, 1), lambda i, q, s: (i, q))
+    kernel = functools.partial(_batched_kernel, block_pages=block_pages)
+    sums, cnts = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_blocks, n_queries),
+            in_specs=[block] * 5,
+            out_specs=[out_spec, out_spec],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((n_blocks, n_queries), jnp.int32),
+                   jax.ShapeDtypeStruct((n_blocks, n_queries), jnp.int32)],
+        interpret=interpret,
+    )(scalars, pred0, pred1, agg, begin_ts, end_ts)
+    return (jnp.sum(sums, axis=0, dtype=jnp.int32),
+            jnp.sum(cnts, axis=0, dtype=jnp.int32))

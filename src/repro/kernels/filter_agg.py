@@ -119,8 +119,18 @@ def filter_agg(pred0, pred1, agg, begin_ts, end_ts, lo0, hi0, lo1, hi1, ts,
     scalars = jnp.stack([jnp.asarray(v, jnp.int32) for v in
                          (lo0, hi0, lo1, hi1, ts, start_page)])
 
-    # index_map receives (*grid_indices, *scalar_prefetch_refs).
-    block = pl.BlockSpec((block_pages, page_size), lambda i, s: (i, 0))
+    # index_map receives (*grid_indices, *scalar_prefetch_refs).  The
+    # hybrid variant clamps the block coordinate up to the first block
+    # the scan needs: the skipped prefix revisits that resident block,
+    # so its DMAs are elided (the pre-DMA skip); pl.when still zeroes
+    # the prefix outputs.
+    if use_start:
+        def _imap(i, s):
+            first = jnp.minimum(s[5] // block_pages, grid - 1)
+            return (jnp.maximum(i, first), 0)
+        block = pl.BlockSpec((block_pages, page_size), _imap)
+    else:
+        block = pl.BlockSpec((block_pages, page_size), lambda i, s: (i, 0))
     out_spec = pl.BlockSpec((1,), lambda i, s: (i,))
     kernel = functools.partial(_filter_agg_kernel, block_pages=block_pages,
                                use_start_page=use_start)

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels import batched_filter_agg as _bfa
 from repro.kernels import filter_agg as _fa
 
 I32_MIN = _fa.I32_MIN
@@ -70,3 +71,41 @@ def scan_table_hybrid(table, attrs, los, his, ts, agg_attr, start_page,
                           start_page=jnp.asarray(start_page, jnp.int32),
                           block_pages=_pick_block_pages(table.n_pages),
                           interpret=interpret)
+
+
+def scan_table_batched(table, attrs, los, his, tss, agg_attr,
+                       start_pages=None, interpret: bool | None = None):
+    """Batched multi-query filter+aggregate via the Pallas kernel.
+
+    All queries share the table, the constrained ``attrs`` (1 or 2
+    columns) and ``agg_attr``; ``los``/``his`` are (n_queries,
+    len(attrs)) per-query inclusive bounds, ``tss`` (n_queries,)
+    snapshot timestamps, ``start_pages`` (n_queries,) hybrid-scan
+    stitch points (None = full scans).  Returns (sums, counts), each
+    (n_queries,) int32.
+    """
+    if len(attrs) not in (1, 2):
+        raise ValueError(f"kernel scans support 1 or 2 predicate "
+                         f"attributes, got {attrs!r}")
+    interpret = INTERPRET if interpret is None else interpret
+    los = jnp.asarray(los, jnp.int32)
+    his = jnp.asarray(his, jnp.int32)
+    n_queries = los.shape[0]
+    pred0 = table.data[:, :, attrs[0]]
+    los0, his0 = los[:, 0], his[:, 0]
+    if len(attrs) == 2:
+        pred1 = table.data[:, :, attrs[1]]
+        los1, his1 = los[:, 1], his[:, 1]
+    else:
+        pred1 = pred0
+        los1 = jnp.full((n_queries,), I32_MIN, jnp.int32)
+        his1 = jnp.full((n_queries,), I32_MAX, jnp.int32)
+    if start_pages is None:
+        start_pages = jnp.zeros((n_queries,), jnp.int32)
+    agg = table.data[:, :, agg_attr]
+    return _bfa.batched_filter_agg(
+        pred0, pred1, agg, table.begin_ts, table.end_ts,
+        los0, his0, los1, his1, jnp.asarray(tss, jnp.int32),
+        jnp.asarray(start_pages, jnp.int32),
+        block_pages=_pick_block_pages(table.n_pages),
+        interpret=interpret)

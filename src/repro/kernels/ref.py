@@ -39,3 +39,19 @@ def masked_filter_agg_ref(pred0, pred1, agg, begin_ts, end_ts,
     s = jnp.sum(jnp.where(mask, agg, 0), dtype=jnp.int32)
     c = jnp.sum(mask, dtype=jnp.int32)
     return s, c
+
+
+def batched_filter_agg_ref(pred0, pred1, agg, begin_ts, end_ts,
+                           los0, his0, los1, his1, tss, start_pages):
+    """Multi-query scan: per query q identical to
+    ``masked_filter_agg_ref`` with that query's bounds, snapshot and
+    start_page.  Per-query operands are (n_queries,); returns
+    (sums, counts), each (n_queries,) int32."""
+    sums, cnts = [], []
+    for q in range(los0.shape[0]):
+        s, c = masked_filter_agg_ref(
+            pred0, pred1, agg, begin_ts, end_ts,
+            los0[q], his0[q], los1[q], his1[q], tss[q], start_pages[q])
+        sums.append(s)
+        cnts.append(c)
+    return jnp.stack(sums), jnp.stack(cnts)

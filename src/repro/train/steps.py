@@ -27,6 +27,23 @@ from repro.train.optimizer import (AdamWState, adamw_init, adamw_update,
                                    clip_by_global_norm)
 
 
+def _partial_shard_map(f, mesh, manual_axes, in_specs, out_specs):
+    """Partial-manual shard_map across jax versions: ``manual_axes``
+    are manual, every other mesh axis stays in auto (pjit) mode.
+    jax >= 0.6 exposes ``jax.shard_map(axis_names=...)``; older
+    releases spell it ``jax.experimental.shard_map.shard_map(auto=...)``.
+    """
+    manual = frozenset(manual_axes)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, axis_names=manual,
+                             in_specs=in_specs, out_specs=out_specs,
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shmap
+    auto = frozenset(mesh.shape) - manual
+    return _shmap(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False, auto=auto)
+
+
 class TrainState(NamedTuple):
     params: object
     opt: AdamWState
@@ -89,11 +106,10 @@ def make_train_step(cfg: ModelConfig, lr_fn: Callable,
             loss = jax.lax.pmean(loss, "pod")
             return loss, tdef.unflatten(out_g), tdef.unflatten(out_e)
 
-        shmapped = jax.shard_map(
-            podwise, mesh=mesh, axis_names={"pod"},
+        shmapped = _partial_shard_map(
+            podwise, mesh, {"pod"},
             in_specs=(P(), P(), P("pod")),
-            out_specs=(P(), P(), P()),
-            check_vma=False)
+            out_specs=(P(), P(), P()))
         loss, grads, ef = shmapped(state.params, state.ef, batch)
         grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
         lr = lr_fn(state.opt.step)

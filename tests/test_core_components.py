@@ -1,9 +1,8 @@
 """Unit + property tests for the tuner's ML components: Holt-Winters
 forecaster, CART classifier, 0-1 knapsack, VBP index semantics."""
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core import forecaster as hw
 from repro.core import knapsack

@@ -4,11 +4,10 @@ The operator's contract: every tuple version visible at the snapshot
 and matching the predicate is returned EXACTLY ONCE, regardless of how
 much of the index is built, interleaved with MVCC updates/inserts.
 """
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.hybrid_scan import full_table_scan, hybrid_scan
 from repro.core.index import build_pages_vap, make_index

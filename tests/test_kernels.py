@@ -1,10 +1,9 @@
 """Pallas kernel validation: shape sweep in interpret mode against the
 pure-jnp oracles in repro.kernels.ref."""
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.table import load_table, update_rows
 from repro.kernels import ops

@@ -66,6 +66,7 @@ def test_prefill_decode_consistency(arch):
                                np.asarray(logits_b), rtol=0.05, atol=0.05)
 
 
+@pytest.mark.slow
 def test_swa_ring_cache_long_context():
     """SWA decode with a ring cache must match a linear cache once the
     window covers the live region."""

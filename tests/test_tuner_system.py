@@ -60,6 +60,7 @@ def test_predictive_tuner_prunes_on_write_shift():
     assert len(db.indexes) < n_before or tuner.last_label == 0
 
 
+@pytest.mark.slow
 def test_all_baseline_tuners_run():
     gen = _gen()
     wl = hybrid_workload(gen, "balanced", total=60, phase_len=30)
