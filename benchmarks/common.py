@@ -33,13 +33,18 @@ class SchemeResult:
     wall_s: float = 0.0
 
     def summary(self) -> Dict[str, float]:
+        # Guard the empty case: write-only workloads record no scan
+        # latencies, and np.percentile raises on an empty sample.
         lat = np.asarray(self.latencies_ms)
+        has = lat.size > 0
         return {"scheme": self.scheme,
                 "cumulative_ms": round(self.cumulative_ms, 2),
-                "mean_ms": round(float(lat.mean()), 5),
-                "p99_ms": round(float(np.percentile(lat, 99)), 5),
-                "final_ms": round(float(lat[-20:].mean()), 5),
-                "built": round(self.built_fraction[-1], 3),
+                "mean_ms": round(float(lat.mean()), 5) if has else 0.0,
+                "p99_ms": round(float(np.percentile(lat, 99)), 5)
+                          if has else 0.0,
+                "final_ms": round(float(lat[-20:].mean()), 5) if has else 0.0,
+                "built": round(self.built_fraction[-1], 3)
+                         if self.built_fraction else 0.0,
                 "wall_s": round(self.wall_s, 2)}
 
 

@@ -73,12 +73,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller workloads (CI mode)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every registered benchmark (the default; "
+                         "spelled out for scripts)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
     from benchmarks import (batched_scan, fig2_schemes, fig6_decision_logic,
                             fig7_holistic, fig8_affinity, fig9_layout,
-                            fig10_adaptability)
+                            fig10_adaptability, sharded_scan)
 
     quick = args.quick
     jobs = [
@@ -97,6 +100,9 @@ def main() -> None:
             total=600 if quick else 1500, quiet=True)),
         ("batched", lambda: batched_scan.run(
             n_queries=64 if quick else 128, quiet=True)),
+        ("sharded", lambda: sharded_scan.run(
+            n_queries=32 if quick else 64,
+            n_rows=10_000 if quick else 20_000, quiet=True)),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),
     ]

@@ -43,6 +43,9 @@ class RunConfig:
     read_batch_size: int = 1                      # >1: submit consecutive
                                                   # read scans through
                                                   # Database.execute_batch
+    num_shards: int = 1                           # >1: partition tables
+                                                  # round-robin and fan scans
+                                                  # out per shard (engine)
 
 
 @dataclass
@@ -56,14 +59,21 @@ class RunResult:
     index_counts: List[int] = field(default_factory=list)
     built_fraction: List[float] = field(default_factory=list)
 
+    def percentile(self, p: float) -> float:
+        """Latency percentile, 0.0 on empty runs (np.percentile raises
+        on an empty sample -- write-only or zero-length workloads must
+        not crash reporting)."""
+        if not self.latencies_ms:
+            return 0.0
+        return float(np.percentile(self.latencies_ms, p))
+
     @property
     def mean_latency_ms(self) -> float:
         return float(np.mean(self.latencies_ms)) if self.latencies_ms else 0.0
 
     @property
     def p99_latency_ms(self) -> float:
-        return float(np.percentile(self.latencies_ms, 99)) \
-            if self.latencies_ms else 0.0
+        return self.percentile(99)
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -87,6 +97,9 @@ def run_workload(db: Database, tuner, workload: Workload,
     is the latency-spike mechanism of unbounded (holistic/value-based)
     population, while bounded VAP cycles typically fit in the credit.
     """
+    if cfg.num_shards != getattr(db, "num_shards", 1):
+        db.reshard(cfg.num_shards)
+
     res = RunResult()
     next_cycle_ms = (db.clock_ms + cfg.tuning_interval_ms
                      if cfg.tuning_interval_ms else float("inf"))

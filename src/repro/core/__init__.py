@@ -14,24 +14,35 @@ The paper's contribution as composable pieces:
 * ``layout`` -- the storage-layout tuner it cooperates with (Fig. 9).
 """
 from repro.core.cost_model import IndexDescriptor
+from repro.core.engine import ScanEngine, ShardScanResult
 from repro.core.executor import Database, ExecStats, Query
-from repro.core.hybrid_scan import (BatchScanResult, ScanResult,
-                                    batched_full_table_scan,
+from repro.core.hybrid_scan import (BatchScanResult, HybridPrefixResult,
+                                    ScanResult, batched_full_table_scan,
+                                    batched_hybrid_index_prefix,
                                     batched_hybrid_scan,
                                     batched_pure_index_scan,
                                     full_table_scan, hybrid_scan,
                                     pure_index_scan)
-from repro.core.index import (AdHocIndex, VbpState, build_full,
-                              build_pages_vap, make_index, make_vbp)
-from repro.core.table import Table, load_table, make_table
+from repro.core.index import (AdHocIndex, ShardedIndex, ShardedVbpState,
+                              VbpState, build_full, build_pages_vap,
+                              make_index, make_sharded_index,
+                              make_sharded_vbp, make_vbp,
+                              sharded_build_pages_vap)
+from repro.core.planner import (BuiltIndex, QueryPlanner, ScanPlan,
+                                scan_cost)
+from repro.core.table import (ShardedTable, Table, load_table, make_table,
+                              shard_table, unshard_table)
 from repro.core.tuner import PredictiveTuner, TunerConfig, make_dl_tuner
 
 __all__ = [
-    "AdHocIndex", "BatchScanResult", "Database", "ExecStats",
-    "IndexDescriptor", "PredictiveTuner", "Query", "ScanResult", "Table",
-    "TunerConfig", "VbpState", "batched_full_table_scan",
+    "AdHocIndex", "BatchScanResult", "BuiltIndex", "Database", "ExecStats",
+    "HybridPrefixResult", "IndexDescriptor", "PredictiveTuner", "Query",
+    "QueryPlanner", "ScanEngine", "ScanPlan", "ScanResult", "ShardScanResult",
+    "ShardedIndex", "ShardedTable", "ShardedVbpState", "Table", "TunerConfig",
+    "VbpState", "batched_full_table_scan", "batched_hybrid_index_prefix",
     "batched_hybrid_scan", "batched_pure_index_scan", "build_full",
     "build_pages_vap", "full_table_scan", "hybrid_scan", "load_table",
-    "make_dl_tuner", "make_index", "make_table", "make_vbp",
-    "pure_index_scan",
+    "make_dl_tuner", "make_index", "make_sharded_index", "make_sharded_vbp",
+    "make_table", "make_vbp", "pure_index_scan", "scan_cost", "shard_table",
+    "sharded_build_pages_vap", "unshard_table",
 ]

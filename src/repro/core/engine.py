@@ -1,0 +1,434 @@
+"""Scan engine: turns planned scans into jitted dispatches.
+
+The execution half of the planner/engine split (the planner lives in
+``core.planner``).  The engine knows nothing about catalogs or cost
+models -- it receives an access path, raw index state and per-query
+bounds, and owns the dispatch strategy:
+
+* plain ``Table``   -- the single-table operators of ``hybrid_scan``
+  (vmapped jnp forms on CPU, the multi-query Pallas kernel via
+  ``kernels.ops`` on TPU; the hybrid path stitches the kernel's
+  per-query ``start_pages`` table suffix to the jnp index prefix).
+* ``ShardedTable``  -- one scan fan-out per shard with a tree-reduce
+  of per-query partial aggregates.  On CPU the fan-out is a loop over
+  shards inside one jitted program (XLA sees one dispatch per shard);
+  with enough devices the uniform-shard full-scan path fans out via
+  ``jax.pmap`` (see ``parallel.sharding.shard_fanout_devices``).
+
+Bit-identity contract (tests/test_sharded_engine.py): for any shard
+count, every aggregate and accounting field equals the single-shard
+value.  int32 sums wrap associatively/commutatively, so per-shard
+partials reduce to the exact single-shard bit pattern in any order;
+stitch points are computed from *global* page ids, so per-query
+``start_page``/``pages_scanned`` match by construction.
+
+The hybrid scan's cross-shard stitch works in two passes inside one
+program: pass 1 probes each shard's local index and reduces the
+per-query max global matched page (rho_m) across shards together with
+the global built prefix (rho_i + 1 == sum of shard-local
+``built_pages``); pass 2 re-walks each shard with the global stitch
+point, deduplicating index matches and masking the table suffix
+exactly like the single-table operator.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hybrid_scan import (BatchScanResult, ScanResult,
+                                    _predicate_key_bounds,
+                                    batched_full_table_scan,
+                                    batched_hybrid_index_prefix,
+                                    batched_hybrid_scan,
+                                    batched_pure_index_scan,
+                                    full_table_scan, hybrid_scan,
+                                    pure_index_scan)
+from repro.core.index import AdHocIndex, ShardedIndex, index_range_scan
+from repro.core.table import (ShardedTable, Table, conj_predicate_mask,
+                              visible_mask)
+from repro.parallel.sharding import shard_fanout_devices
+
+
+class ShardScanResult(NamedTuple):
+    """Single-query aggregates + accounting over sharded storage.
+
+    Scalar fields are bit-identical to the single-shard ``ScanResult``;
+    ``contribs`` replaces the global contrib plane with one
+    (local_pages, page_size) int32 plane per shard (the executor's
+    join path consumes them per shard).
+    """
+
+    agg_sum: jax.Array
+    count: jax.Array
+    contribs: Tuple[jax.Array, ...]
+    pages_scanned: jax.Array
+    entries_probed: jax.Array
+    start_page: jax.Array
+
+
+def tree_reduce(vals, op=jnp.add):
+    """Pairwise (tree-shaped) reduction of per-shard partials."""
+    vals = list(vals)
+    while len(vals) > 1:
+        nxt = [op(vals[i], vals[i + 1]) for i in range(0, len(vals) - 1, 2)]
+        if len(vals) % 2:
+            nxt.append(vals[-1])
+        vals = nxt
+    return vals[0]
+
+
+def _used_pages(st: ShardedTable) -> jax.Array:
+    """Global pages at/below the append watermark (real pages; reserved
+    headroom beyond it holds no tuples)."""
+    return ((st.n_rows + st.page_size - 1) // st.page_size).astype(jnp.int32)
+
+
+def _shard_index_probe(t: Table, ix: AdHocIndex, s: int, S: int,
+                       key_attrs: tuple, attrs: tuple, lo, hi, ts):
+    """Probe one shard's local index: masks, local page/slot of each
+    entry, and this shard's contribution to the per-query rho_m (in
+    *global* page ids)."""
+    psz = t.page_size
+    lo_key, hi_key = _predicate_key_bounds(key_attrs, attrs, lo, hi)
+    entry_mask, rids = index_range_scan(ix, lo_key, hi_key)
+    pg, sl = rids // psz, rids % psz
+    rows_ok = conj_predicate_mask(t, attrs, lo, hi)[pg, sl]
+    rows_ok &= visible_mask(t, ts)[pg, sl]
+    idx_match = entry_mask & rows_ok
+    gpg = pg * S + s
+    rho_m = jnp.max(jnp.where(idx_match, gpg, -1))
+    return idx_match, gpg, pg, sl, entry_mask, rho_m
+
+
+def _shard_table_mask(t: Table, s: int, S: int, attrs: tuple, lo, hi, ts,
+                      start_page):
+    """Predicate+visibility mask over one shard's pages whose *global*
+    page id is >= the stitch point."""
+    g_page_ids = (jnp.arange(t.n_pages, dtype=jnp.int32) * S + s)[:, None]
+    mask = conj_predicate_mask(t, attrs, lo, hi) & visible_mask(t, ts)
+    return mask & (g_page_ids >= start_page)
+
+
+# ---------------------------------------------------------------------------
+# Sharded single-query scans (contrib planes for the join path)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("attrs", "agg_attr"))
+def sharded_full_table_scan(st: ShardedTable, attrs: tuple, los, his, ts,
+                            agg_attr: int) -> ShardScanResult:
+    sums, cnts, contribs = [], [], []
+    for t in st.shards:
+        mask = conj_predicate_mask(t, attrs, los, his) & visible_mask(t, ts)
+        vals = t.data[:, :, agg_attr]
+        sums.append(jnp.sum(jnp.where(mask, vals, 0), dtype=jnp.int32))
+        cnts.append(jnp.sum(mask, dtype=jnp.int32))
+        contribs.append(mask.astype(jnp.int32))
+    z = jnp.zeros((), jnp.int32)
+    return ShardScanResult(tree_reduce(sums), tree_reduce(cnts),
+                           tuple(contribs), _used_pages(st), z, z)
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def sharded_hybrid_scan(st: ShardedTable, index: ShardedIndex,
+                        key_attrs: tuple, attrs: tuple, los, his, ts,
+                        agg_attr: int) -> ShardScanResult:
+    S = len(st.shards)
+    probes = [_shard_index_probe(t, ix, s, S, key_attrs, attrs, los, his, ts)
+              for s, (t, ix) in enumerate(zip(st.shards, index.shards))]
+    rho_m = tree_reduce([p[5] for p in probes], jnp.maximum)
+    start_page = jnp.maximum(rho_m, index.built_pages)  # rho_i + 1
+
+    sums, cnts, ents, contribs = [], [], [], []
+    for s, (t, ix) in enumerate(zip(st.shards, index.shards)):
+        idx_match, gpg, pg, sl, entry_mask, _ = probes[s]
+        idx_keep = idx_match & (gpg < start_page)
+        tbl_mask = _shard_table_mask(t, s, S, attrs, los, his, ts, start_page)
+        vals = t.data[:, :, agg_attr]
+        sums.append(jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0),
+                            dtype=jnp.int32)
+                    + jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32))
+        cnts.append(jnp.sum(idx_keep, dtype=jnp.int32)
+                    + jnp.sum(tbl_mask, dtype=jnp.int32))
+        ents.append(jnp.sum(entry_mask, dtype=jnp.int32))
+        contrib = jnp.zeros((t.n_pages, t.page_size), jnp.int32)
+        contrib = contrib.at[pg, sl].add(idx_keep.astype(jnp.int32))
+        contribs.append(contrib + tbl_mask.astype(jnp.int32))
+    pages = jnp.clip(_used_pages(st) - start_page, 0, None).astype(jnp.int32)
+    return ShardScanResult(tree_reduce(sums), tree_reduce(cnts),
+                           tuple(contribs), pages, tree_reduce(ents),
+                           start_page.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def sharded_pure_index_scan(st: ShardedTable, index: ShardedIndex,
+                            key_attrs: tuple, attrs: tuple, los, his, ts,
+                            agg_attr: int) -> ShardScanResult:
+    S = len(st.shards)
+    sums, cnts, ents, contribs = [], [], [], []
+    for s, (t, ix) in enumerate(zip(st.shards, index.shards)):
+        idx_match, _gpg, pg, sl, entry_mask, _ = _shard_index_probe(
+            t, ix, s, S, key_attrs, attrs, los, his, ts)
+        vals = t.data[:, :, agg_attr]
+        sums.append(jnp.sum(jnp.where(idx_match, vals[pg, sl], 0),
+                            dtype=jnp.int32))
+        cnts.append(jnp.sum(idx_match, dtype=jnp.int32))
+        ents.append(jnp.sum(entry_mask, dtype=jnp.int32))
+        contrib = jnp.zeros((t.n_pages, t.page_size), jnp.int32)
+        contribs.append(contrib.at[pg, sl].add(idx_match.astype(jnp.int32)))
+    return ShardScanResult(tree_reduce(sums), tree_reduce(cnts),
+                           tuple(contribs), jnp.zeros((), jnp.int32),
+                           tree_reduce(ents),
+                           jnp.asarray(st.n_pages, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Sharded batched scans (the read-burst fan-out)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("attrs", "agg_attr"))
+def sharded_batched_full_table_scan(st: ShardedTable, attrs: tuple, los,
+                                    his, tss, agg_attr: int
+                                    ) -> BatchScanResult:
+    """B plain table scans, one fan-out per shard, tree-reduced."""
+    sums, cnts = [], []
+    for t in st.shards:
+        def one(lo, hi, ts, t=t):
+            mask = conj_predicate_mask(t, attrs, lo, hi) & visible_mask(t, ts)
+            vals = t.data[:, :, agg_attr]
+            return (jnp.sum(jnp.where(mask, vals, 0), dtype=jnp.int32),
+                    jnp.sum(mask, dtype=jnp.int32))
+
+        s_, c_ = jax.vmap(one)(los, his, tss)
+        sums.append(s_)
+        cnts.append(c_)
+    B = los.shape[0]
+    z = jnp.zeros((B,), jnp.int32)
+    used = jnp.full((B,), _used_pages(st), jnp.int32)
+    return BatchScanResult(tree_reduce(sums), tree_reduce(cnts), used, z, z)
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def sharded_batched_hybrid_scan(st: ShardedTable, index: ShardedIndex,
+                                key_attrs: tuple, attrs: tuple, los, his,
+                                tss, agg_attr: int) -> BatchScanResult:
+    """B hybrid scans over per-shard partial indexes: pass 1 reduces
+    per-query rho_m across shards into the global stitch point, pass 2
+    fans the deduped index prefix + table suffix out per shard."""
+    S = len(st.shards)
+
+    rho_list = []
+    for s, (t, ix) in enumerate(zip(st.shards, index.shards)):
+        def rho_of(lo, hi, ts, t=t, ix=ix, s=s):
+            return _shard_index_probe(t, ix, s, S, key_attrs, attrs,
+                                      lo, hi, ts)[5]
+
+        rho_list.append(jax.vmap(rho_of)(los, his, tss))
+    rho_m = tree_reduce(rho_list, jnp.maximum)
+    start_pages = jnp.maximum(rho_m, index.built_pages)  # (B,)
+
+    sums, cnts, ents = [], [], []
+    for s, (t, ix) in enumerate(zip(st.shards, index.shards)):
+        def two(lo, hi, ts, sp, t=t, ix=ix, s=s):
+            idx_match, gpg, pg, sl, entry_mask, _ = _shard_index_probe(
+                t, ix, s, S, key_attrs, attrs, lo, hi, ts)
+            idx_keep = idx_match & (gpg < sp)
+            tbl_mask = _shard_table_mask(t, s, S, attrs, lo, hi, ts, sp)
+            vals = t.data[:, :, agg_attr]
+            s_ = jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0),
+                         dtype=jnp.int32) \
+                + jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
+            c_ = jnp.sum(idx_keep, dtype=jnp.int32) \
+                + jnp.sum(tbl_mask, dtype=jnp.int32)
+            return s_, c_, jnp.sum(entry_mask, dtype=jnp.int32)
+
+        s_, c_, e_ = jax.vmap(two)(los, his, tss, start_pages)
+        sums.append(s_)
+        cnts.append(c_)
+        ents.append(e_)
+    pages = jnp.clip(_used_pages(st) - start_pages, 0, None).astype(jnp.int32)
+    return BatchScanResult(tree_reduce(sums), tree_reduce(cnts), pages,
+                           tree_reduce(ents), start_pages.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def sharded_batched_pure_index_scan(st: ShardedTable, index: ShardedIndex,
+                                    key_attrs: tuple, attrs: tuple, los,
+                                    his, tss, agg_attr: int
+                                    ) -> BatchScanResult:
+    S = len(st.shards)
+    sums, cnts, ents = [], [], []
+    for s, (t, ix) in enumerate(zip(st.shards, index.shards)):
+        def one(lo, hi, ts, t=t, ix=ix, s=s):
+            idx_match, _gpg, pg, sl, entry_mask, _ = _shard_index_probe(
+                t, ix, s, S, key_attrs, attrs, lo, hi, ts)
+            vals = t.data[:, :, agg_attr]
+            return (jnp.sum(jnp.where(idx_match, vals[pg, sl], 0),
+                            dtype=jnp.int32),
+                    jnp.sum(idx_match, dtype=jnp.int32),
+                    jnp.sum(entry_mask, dtype=jnp.int32))
+
+        s_, c_, e_ = jax.vmap(one)(los, his, tss)
+        sums.append(s_)
+        cnts.append(c_)
+        ents.append(e_)
+    B = los.shape[0]
+    return BatchScanResult(tree_reduce(sums), tree_reduce(cnts),
+                           jnp.zeros((B,), jnp.int32), tree_reduce(ents),
+                           jnp.full((B,), st.n_pages, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Multi-device fan-out (pmap): uniform shards, one device per shard
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _pmap_full_scan_fn(attrs: tuple, agg_attr: int):
+    """pmapped per-shard body for the batched full-table scan.  Each
+    device receives one shard's Table (the stacked pytree's leading
+    axis is the device axis); per-query bounds broadcast to every
+    device.  The body is the same mask arithmetic as the loop fan-out
+    (``conj_predicate_mask``/``visible_mask``), so the two dispatch
+    strategies cannot drift."""
+
+    def body(t, los, his, tss):
+        def one(lo, hi, ts):
+            mask = conj_predicate_mask(t, attrs, lo, hi) & \
+                visible_mask(t, ts)
+            vals = t.data[:, :, agg_attr]
+            return (jnp.sum(jnp.where(mask, vals, 0), dtype=jnp.int32),
+                    jnp.sum(mask, dtype=jnp.int32))
+
+        return jax.vmap(one)(los, his, tss)
+
+    return jax.pmap(body, in_axes=(Table(0, 0, 0, 0), None, None, None))
+
+
+def shards_uniform(st: ShardedTable) -> bool:
+    return len({t.n_pages for t in st.shards}) == 1
+
+
+def pmap_batched_full_table_scan(st: ShardedTable, attrs: tuple, los, his,
+                                 tss, agg_attr: int) -> BatchScanResult:
+    """Device fan-out: one shard per device via ``jax.pmap``.  Callers
+    must check ``shard_fanout_devices``/``shards_uniform`` first; the
+    reduced aggregates are bit-identical to the loop fan-out."""
+    stacked = Table(*(jnp.stack(xs) for xs in zip(*st.shards)))
+    fn = _pmap_full_scan_fn(attrs, agg_attr)
+    sums, cnts = fn(stacked, jnp.asarray(los), jnp.asarray(his),
+                    jnp.asarray(tss))                  # (S, B)
+    B = los.shape[0]
+    z = jnp.zeros((B,), jnp.int32)
+    used = jnp.full((B,), _used_pages(st), jnp.int32)
+    return BatchScanResult(tree_reduce(list(sums)), tree_reduce(list(cnts)),
+                           used, z, z)
+
+
+# ---------------------------------------------------------------------------
+# The engine facade the executor drives
+# ---------------------------------------------------------------------------
+
+class ScanEngine:
+    """Dispatch strategy for planned scans over either storage layout."""
+
+    def scan(self, table, plan, attrs: tuple, los, his, ts, agg_attr: int):
+        """Single planned scan -> ScanResult | ShardScanResult."""
+        path = plan.path
+        if isinstance(table, ShardedTable):
+            if path == "table":
+                return sharded_full_table_scan(table, attrs, los, his, ts,
+                                               agg_attr)
+            if path in ("pure_vbp", "pure_vap"):
+                return sharded_pure_index_scan(table, plan.index_state,
+                                               plan.key_attrs, attrs, los,
+                                               his, ts, agg_attr)
+            return sharded_hybrid_scan(table, plan.index_state,
+                                       plan.key_attrs, attrs, los, his, ts,
+                                       agg_attr)
+        if path == "table":
+            return full_table_scan(table, attrs, los, his, ts, agg_attr)
+        if path in ("pure_vbp", "pure_vap"):
+            return pure_index_scan(table, plan.index_state, plan.key_attrs,
+                                   attrs, los, his, ts, agg_attr)
+        return hybrid_scan(table, plan.index_state, plan.key_attrs, attrs,
+                           los, his, ts, agg_attr)
+
+    def scan_batch(self, table, path: str, index_state, key_attrs: tuple,
+                   attrs: tuple, los, his, tss, agg_attr: int,
+                   use_kernel: bool = False) -> BatchScanResult:
+        """One batched dispatch (or per-shard fan-out) for a plan group."""
+        if isinstance(table, ShardedTable):
+            return self._scan_batch_sharded(table, path, index_state,
+                                            key_attrs, attrs, los, his, tss,
+                                            agg_attr)
+        # The Pallas kernel evaluates at most 2 predicate columns;
+        # wider conjunctions take the vmapped paths.
+        kernel_ok = use_kernel and 1 <= len(attrs) <= 2
+        if path == "table":
+            if kernel_ok:
+                return self._kernel_full_scan(table, attrs, los, his, tss,
+                                              agg_attr)
+            return batched_full_table_scan(table, attrs, los, his, tss,
+                                           agg_attr)
+        if path == "hybrid":
+            if kernel_ok:
+                return self._kernel_hybrid_scan(table, index_state,
+                                                key_attrs, attrs, los, his,
+                                                tss, agg_attr)
+            return batched_hybrid_scan(table, index_state, key_attrs, attrs,
+                                       los, his, tss, agg_attr)
+        return batched_pure_index_scan(table, index_state, key_attrs, attrs,
+                                       los, his, tss, agg_attr)
+
+    # -- kernel paths (TPU; interpret mode on CPU) -----------------------
+    @staticmethod
+    def _kernel_full_scan(table: Table, attrs, los, his, tss,
+                          agg_attr: int) -> BatchScanResult:
+        from repro.kernels import ops as _kops
+        sums, cnts = _kops.scan_table_batched(table, attrs, los, his, tss,
+                                              agg_attr)
+        B = los.shape[0]
+        used = -(-int(table.n_rows) // table.page_size)
+        z = jnp.zeros((B,), jnp.int32)
+        return BatchScanResult(sums, cnts, jnp.full((B,), used, jnp.int32),
+                               z, z)
+
+    @staticmethod
+    def _kernel_hybrid_scan(table: Table, index: AdHocIndex, key_attrs,
+                            attrs, los, his, tss,
+                            agg_attr: int) -> BatchScanResult:
+        """Hybrid scans with the table suffix on the multi-query kernel:
+        the jnp prefix pass yields per-query stitch points, which flow
+        into the kernel as scalar-prefetched ``start_pages`` so blocks
+        inside every query's indexed prefix skip their DMA."""
+        from repro.kernels import ops as _kops
+        pre = batched_hybrid_index_prefix(table, index, key_attrs, attrs,
+                                          los, his, tss, agg_attr)
+        tbl_sums, tbl_cnts = _kops.scan_table_batched(
+            table, attrs, los, his, tss, agg_attr,
+            start_pages=pre.start_page)
+        used = ((table.n_rows + table.page_size - 1)
+                // table.page_size).astype(jnp.int32)
+        pages = jnp.clip(used - pre.start_page, 0, None).astype(jnp.int32)
+        return BatchScanResult(pre.agg_sum + tbl_sums, pre.count + tbl_cnts,
+                               pages, pre.entries_probed, pre.start_page)
+
+    # -- sharded fan-out -------------------------------------------------
+    @staticmethod
+    def _scan_batch_sharded(table: ShardedTable, path: str, index_state,
+                            key_attrs, attrs, los, his, tss,
+                            agg_attr: int) -> BatchScanResult:
+        if path == "table":
+            if (shard_fanout_devices(table.n_shards) is not None
+                    and shards_uniform(table)):
+                return pmap_batched_full_table_scan(table, attrs, los, his,
+                                                    tss, agg_attr)
+            return sharded_batched_full_table_scan(table, attrs, los, his,
+                                                   tss, agg_attr)
+        if path == "hybrid":
+            return sharded_batched_hybrid_scan(table, index_state, key_attrs,
+                                               attrs, los, his, tss, agg_attr)
+        return sharded_batched_pure_index_scan(table, index_state, key_attrs,
+                                               attrs, los, his, tss, agg_attr)

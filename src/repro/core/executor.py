@@ -1,4 +1,4 @@
-"""Query execution engine with optimizer-style access-path selection.
+"""Query execution: the Database facade over the planner/engine split.
 
 Owns the tables, built indexes and layout state of one database, and
 executes benchmark statements, returning *measured* statistics in the
@@ -7,18 +7,24 @@ same tuple-touch units the what-if cost model estimates in (see
 on -- only the decision logic and population scheme differ between
 tuners, exactly as in the paper's DBMS-X integration.
 
-Access-path selection (Section III, "Query Optimization"): for a scan,
-the optimizer considers each built index whose leading key attribute
-is constrained by the predicate, estimates selectivity, and picks a
-hybrid scan for selective queries -- falling back to a table scan when
-the predicate is not selective or no index matches.  FULL-scheme
-indexes are usable only when complete; VBP indexes only when the query
-sub-domain is covered.
+The execution core is split in two (PR 2):
+
+* ``core.planner.QueryPlanner`` -- access-path choice, selectivity
+  estimation and cost accounting; pure Python, no array dispatch.
+* ``core.engine.ScanEngine``    -- jitted scan dispatch over plain or
+  sharded storage; on a ``ShardedTable`` every scan fans out per shard
+  and tree-reduces per-query aggregates.
+
+``Database`` wires plans to dispatches, replays cost/clock/monitor
+accounting, and routes mutations to the storage layout's mutators.
+Pass ``num_shards > 1`` (or call ``reshard``) to partition every table
+round-robin by page; results and accounting are bit-identical across
+shard counts (tests/test_sharded_engine.py).
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
@@ -26,59 +32,22 @@ import numpy as np
 
 from repro.core import cost_model as cm
 from repro.core.cost_model import IndexDescriptor
-from repro.core.hybrid_scan import (BatchScanResult, ScanResult,
-                                    batched_full_table_scan,
-                                    batched_hybrid_scan,
-                                    batched_pure_index_scan,
-                                    full_table_scan, hybrid_scan,
-                                    pure_index_scan)
-from repro.core.index import (AdHocIndex, VbpState, build_pages_vap,
-                              index_range_scan, key_range, make_index,
-                              make_vbp, vbp_invalidate_coverage,
-                              vbp_is_covered, vbp_populate_subdomain)
+from repro.core.engine import ScanEngine, ShardScanResult
+from repro.core.index import (ShardedIndex, ShardedVbpState, build_pages_vap,
+                              make_index, make_sharded_index,
+                              make_sharded_vbp, make_vbp,
+                              sharded_build_pages_vap,
+                              sharded_vbp_populate_subdomain,
+                              vbp_invalidate_coverage, vbp_n_entries,
+                              vbp_populate_subdomain)
 from repro.core.layout import LayoutState, scan_width_factor
 from repro.core.monitor import QueryRecord, WorkloadMonitor
-from repro.core.table import Table, insert_rows, update_rows
-
-HYBRID_SELECTIVITY_CUTOFF = 0.20  # optimizer switches to table scan above this
-
-
-class IntervalUnion:
-    """Host-side merged interval set over composite keys.
-
-    The jnp-side VbpState tracks exact-interval coverage (enough for
-    the jitted kernels); real cracking additionally benefits from the
-    *union* of overlapping populated sub-domains -- two overlapping
-    cracks jointly cover their union.  The executor keeps this merged
-    view per VBP index and uses it for access-path decisions.
-    """
-
-    def __init__(self):
-        self.ivs: list = []   # sorted disjoint [(lo, hi)] of key tuples
-
-    def add(self, lo, hi) -> None:
-        ivs = self.ivs + [(lo, hi)]
-        ivs.sort()
-        merged = [ivs[0]]
-        for a, b in ivs[1:]:
-            la, lb = merged[-1]
-            if a <= lb or a == lb:   # touching/overlapping (tuple compare)
-                if b > lb:
-                    merged[-1] = (la, b)
-            else:
-                merged.append((a, b))
-        self.ivs = merged
-
-    def covers(self, lo, hi) -> bool:
-        for a, b in self.ivs:
-            if a <= lo and hi <= b:
-                return True
-            if a > lo:
-                break
-        return False
-
-    def clear(self) -> None:
-        self.ivs = []
+from repro.core.planner import (HYBRID_SELECTIVITY_CUTOFF,  # noqa: F401
+                                BuiltIndex, IntervalUnion, QueryPlanner,
+                                scan_cost)
+from repro.core.table import (ShardedTable, Table, insert_rows, shard_table,
+                              sharded_insert_rows, sharded_update_rows,
+                              unshard_table, update_rows)
 
 
 @dataclass
@@ -107,31 +76,6 @@ class Query:
 
 
 @dataclass
-class BuiltIndex:
-    desc: IndexDescriptor
-    scheme: str                     # 'vap' | 'vbp' | 'full'
-    vap: Optional[AdHocIndex] = None
-    vbp: Optional[VbpState] = None
-    cov_union: Optional[IntervalUnion] = None   # VBP merged coverage
-    complete: bool = False          # FULL usable flag
-    building: bool = True           # under construction (VAP/FULL)
-    created_ms: float = 0.0
-    last_used_ms: float = 0.0
-
-    def built_fraction(self, table: Table) -> float:
-        if self.scheme == "vap" or self.scheme == "full":
-            full_pages = max(int(table.n_rows) // table.page_size, 1)
-            return min(int(self.vap.built_pages) / full_pages, 1.0)
-        n = max(int(table.n_rows), 1)
-        return min(int(self.vbp.index.n_entries) / n, 1.0)
-
-    def size_bytes(self) -> float:
-        if self.scheme in ("vap", "full"):
-            return 12.0 * float(int(self.vap.n_entries))
-        return 12.0 * float(int(self.vbp.index.n_entries))
-
-
-@dataclass
 class ExecStats:
     cost_units: float               # tuple-touch units (simulated work)
     latency_ms: float               # simulated latency
@@ -146,19 +90,57 @@ class ExecStats:
 class Database:
     """Tables + index configuration + layout + monitor + simulated clock."""
 
-    def __init__(self, tables: Dict[str, Table], time_per_unit_ms: float = 1e-4,
+    def __init__(self, tables: Dict[str, object],
+                 time_per_unit_ms: float = 1e-4,
                  monitor_window: int = 256,
-                 monitor_max_age_ms: float | None = None):
-        self.tables: Dict[str, Table] = dict(tables)
+                 monitor_max_age_ms: float | None = None,
+                 num_shards: int = 1):
+        self.tables: Dict[str, object] = dict(tables)
+        self.num_shards = 1
         self.indexes: Dict[str, BuiltIndex] = {}
         self.layouts: Dict[str, LayoutState] = {
             name: LayoutState(n_attrs=t.n_attrs, n_pages=t.n_pages)
-            for name, t in tables.items()}
+            for name, t in self.tables.items()}
         self.monitor = WorkloadMonitor(window=monitor_window,
                                        max_age_ms=monitor_max_age_ms)
         self.clock_ms: float = 0.0
         self.time_per_unit_ms = time_per_unit_ms
         self.update_cap = 512       # max rows materialised per UPDATE
+        self.planner = QueryPlanner(self)
+        self.engine = ScanEngine()
+        counts = {t.n_shards for t in self.tables.values()
+                  if isinstance(t, ShardedTable)}
+        if num_shards > 1:
+            self.reshard(num_shards)
+        elif counts:
+            # Adopt pre-sharded tables as-is when the layout is
+            # uniform; only rebuild to normalise a mixed layout.
+            target = max(counts)
+            if counts == {target} and all(
+                    isinstance(t, ShardedTable)
+                    for t in self.tables.values()):
+                self.num_shards = target
+            else:
+                self.reshard(target)
+
+    # ------------------------------------------------------------------
+    # Storage layout
+    # ------------------------------------------------------------------
+    def reshard(self, num_shards: int) -> None:
+        """Re-partition every table round-robin over ``num_shards``.
+
+        Built ad-hoc indexes are dropped (their rid spaces change);
+        tuners rebuild them, exactly like the diurnal index drop.
+        Layout state survives -- page ids are global either way.
+        """
+        for name in list(self.indexes):
+            self.drop_index(name)
+        for name, t in self.tables.items():
+            if isinstance(t, ShardedTable):
+                t = unshard_table(t)
+            self.tables[name] = shard_table(t, num_shards) \
+                if num_shards > 1 else t
+        self.num_shards = num_shards
 
     # ------------------------------------------------------------------
     # Index configuration actions (used by tuners)
@@ -168,10 +150,12 @@ class Database:
         if desc.name in self.indexes:
             return self.indexes[desc.name]
         bi = BuiltIndex(desc=desc, scheme=scheme, created_ms=self.clock_ms)
+        sharded = isinstance(t, ShardedTable)
         if scheme in ("vap", "full"):
-            bi.vap = make_index(t.capacity)
+            bi.vap = make_sharded_index(t) if sharded else \
+                make_index(t.capacity)
         else:
-            bi.vbp = make_vbp(t.capacity)
+            bi.vbp = make_sharded_vbp(t) if sharded else make_vbp(t.capacity)
             bi.cov_union = IntervalUnion()
         self.indexes[desc.name] = bi
         return bi
@@ -185,60 +169,12 @@ class Database:
     def total_index_bytes(self) -> float:
         return sum(b.size_bytes() for b in self.indexes.values())
 
-    # ------------------------------------------------------------------
-    # Optimizer: choose the access path for a scan
-    # ------------------------------------------------------------------
+    # Planner delegation (kept as methods for tuner/baseline callers).
     def _estimate_selectivity(self, q: Query) -> float:
-        """Cheap uniform-assumption estimate from predicate ranges over
-        the TUNER attribute domain [1, 1m]; used only for plan choice
-        (measured selectivity feeds the monitor afterwards)."""
-        sel = 1.0
-        for lo, hi in zip(q.los, q.his):
-            width = max(float(hi) - float(lo) + 1.0, 0.0)
-            sel *= min(width / 1_000_000.0, 1.0)
-        return sel
+        return self.planner.estimate_selectivity(q)
 
     def _choose_index(self, q: Query) -> Optional[BuiltIndex]:
-        best, best_key = None, (-1, -1.0)
-        for bi in self.indexes.values():
-            if not cm.index_matches(bi.desc, q.table, q.attrs):
-                continue
-            if bi.scheme == "full" and not bi.complete:
-                continue
-            covered = len(set(bi.desc.key_attrs) & set(q.attrs))
-            frac = bi.built_fraction(self.tables[q.table])
-            if bi.scheme == "vbp":
-                lo, hi = self._vbp_host_bounds(bi, q)
-                if not bi.cov_union.covers(lo, hi):
-                    continue
-            key = (covered, frac)
-            if key > best_key:
-                best, best_key = bi, key
-        return best
-
-    @staticmethod
-    def _vbp_host_key_bounds(bi: BuiltIndex, q: Query):
-        """Host-side composite-key bounds ((hi,lo) int tuples)."""
-        pmap = {a: k for k, a in enumerate(q.attrs)}
-        ka = bi.desc.key_attrs
-        lo0, hi0 = int(q.los[pmap[ka[0]]]), int(q.his[pmap[ka[0]]])
-        if len(ka) == 2 and ka[1] in pmap:
-            lo1, hi1 = int(q.los[pmap[ka[1]]]), int(q.his[pmap[ka[1]]])
-        elif len(ka) == 2:
-            lo1, hi1 = -(2**31) + 1, 2**31 - 2
-        else:
-            lo1, hi1 = 0, 0
-        return (lo0, lo1), (hi0, hi1)
-
-    def _vbp_host_bounds(self, bi: BuiltIndex, q: Query):
-        return self._vbp_host_key_bounds(bi, q)
-
-    @staticmethod
-    def _vbp_bounds(bi: BuiltIndex, q: Query):
-        (lo0, lo1), (hi0, hi1) = Database._vbp_host_key_bounds(bi, q)
-        if len(bi.desc.key_attrs) == 2:
-            return key_range(lo0, hi0, lo1, hi1)
-        return key_range(lo0, hi0)
+        return self.planner.choose_index(q)
 
     # ------------------------------------------------------------------
     # Execution
@@ -283,42 +219,24 @@ class Database:
         layout = self.layouts[q.table]
         los = jnp.asarray(q.los, jnp.int32)
         his = jnp.asarray(q.his, jnp.int32)
-        est_sel = self._estimate_selectivity(q)
-        bi = None
-        if est_sel <= HYBRID_SELECTIVITY_CUTOFF:
-            bi = self._choose_index(q)
+        plan = self.planner.plan_scan(q)
+        bi = plan.index
 
         t0 = time.perf_counter()
-        if bi is None:
-            r: ScanResult = full_table_scan(t, tuple(q.attrs), los, his,
-                                            self.clock_ms_i32(), q.agg_attr)
-            start_page = 0
-            entries = 0.0
-        elif bi.scheme == "vbp":
-            r = pure_index_scan(t, bi.vbp.index, bi.desc.key_attrs,
-                                tuple(q.attrs), los, his,
-                                self.clock_ms_i32(), q.agg_attr)
-            start_page = t.n_pages
-            entries = float(int(r.entries_probed))
-        elif bi.scheme == "full" and bi.complete:
-            r = pure_index_scan(t, bi.vap, bi.desc.key_attrs, tuple(q.attrs),
-                                los, his, self.clock_ms_i32(), q.agg_attr)
-            start_page = t.n_pages
-            entries = float(int(r.entries_probed))
-        else:  # VAP hybrid scan (or FULL still building -> table scan part)
-            idx = bi.vap
-            r = hybrid_scan(t, idx, bi.desc.key_attrs, tuple(q.attrs), los,
-                            his, self.clock_ms_i32(), q.agg_attr)
-            start_page = int(r.start_page)
-            entries = float(int(r.entries_probed))
+        r = self.engine.scan(t, plan, tuple(q.attrs), los, his,
+                             self.clock_ms_i32(), q.agg_attr)
         wall = time.perf_counter() - t0
 
-        # Table-scan units scale with the layout's effective width
-        # (width/n_attrs == 1 for untuned NSM pages); index probes are
-        # narrow and layout-independent.
-        width = scan_width_factor(layout, q.accessed_attrs, from_page=start_page)
-        cost = float(int(r.pages_scanned)) * t.page_size * (width / layout.n_attrs)
-        cost += entries * cm.INDEX_PROBE_COST
+        if plan.path == "table":
+            start_page, entries = 0, 0.0
+        elif plan.path == "hybrid":
+            start_page = int(r.start_page)
+            entries = float(int(r.entries_probed))
+        else:  # pure index scan: no table pages touched
+            start_page = t.n_pages
+            entries = float(int(r.entries_probed))
+        cost = scan_cost(layout, q.accessed_attrs, t.page_size,
+                         int(r.pages_scanned), entries, start_page)
         used = bi is not None
         if used:
             bi.last_used_ms = self.clock_ms
@@ -341,10 +259,11 @@ class Database:
         """Execute a burst of queries, batching compatible read scans.
 
         Scans that share (table, attrs, agg_attr) and access path are
-        evaluated in ONE jitted dispatch (``batched_*_scan``; with
-        ``use_kernel`` the no-index group goes through the Pallas
-        multi-query kernel via the ops layer) instead of one dispatch
-        per query.  Results and accounting are bit-identical to
+        evaluated in ONE dispatch (``batched_*_scan``; with
+        ``use_kernel`` the table-scan and hybrid groups go through the
+        Pallas multi-query kernel via the ops layer; on sharded tables
+        each group fans out per shard) instead of one dispatch per
+        query.  Results and accounting are bit-identical to
         ``[self.execute(q) for q in queries]``:
 
         * A maximal run of consecutive batchable scans forms one
@@ -387,81 +306,48 @@ class Database:
         # change mid-burst: reads never mutate tables or index state.
         groups: Dict[tuple, list] = {}
         for pos, q in pending:
-            est_sel = self._estimate_selectivity(q)
-            bi = None
-            if est_sel <= HYBRID_SELECTIVITY_CUTOFF:
-                bi = self._choose_index(q)
-            if bi is None:
-                path = "table"
-            elif bi.scheme == "vbp":
-                path = "pure_vbp"
-            elif bi.scheme == "full" and bi.complete:
-                path = "pure_vap"
-            else:
-                path = "hybrid"
-            key = (q.table, tuple(q.attrs), q.agg_attr, path,
-                   bi.desc.name if bi is not None else None)
-            groups.setdefault(key, []).append((pos, q, bi))
+            plan = self.planner.plan_scan(q)
+            key = (q.table, tuple(q.attrs), q.agg_attr) + plan.group_key
+            groups.setdefault(key, []).append((pos, q, plan))
 
-        # Run each group in one dispatch; gather per-position raw rows.
+        # Run each group in one dispatch (one fan-out per shard when
+        # the table is sharded); gather per-position raw rows.
         ts = self.clock_ms_i32()
         raw: Dict[int, tuple] = {}   # pos -> (sum, count, pages, entries,
                                      #         start_page, wall_share)
-        for (table_name, attrs, agg_attr, path, _idx), members in \
+        for (table_name, attrs, agg_attr, _path, _idx), members in \
                 groups.items():
             t = self.tables[table_name]
             los = jnp.asarray([q.los for _, q, _ in members], jnp.int32)
             his = jnp.asarray([q.his for _, q, _ in members], jnp.int32)
             tss = jnp.full((len(members),), ts, jnp.int32)
-            bi = members[0][2]
+            plan = members[0][2]
             t0 = time.perf_counter()
-            if path == "table":
-                # The Pallas kernel evaluates at most 2 predicate
-                # columns; wider conjunctions take the vmapped path.
-                if use_kernel and 1 <= len(attrs) <= 2:
-                    from repro.kernels import ops as _kops
-                    sums, cnts = _kops.scan_table_batched(
-                        t, attrs, los, his, tss, agg_attr)
-                    used_pages = -(-int(t.n_rows) // t.page_size)
-                    z = jnp.zeros((len(members),), jnp.int32)
-                    r = BatchScanResult(
-                        sums, cnts,
-                        jnp.full((len(members),), used_pages, jnp.int32),
-                        z, z)
-                else:
-                    r = batched_full_table_scan(t, attrs, los, his, tss,
-                                                agg_attr)
-            elif path == "hybrid":
-                r = batched_hybrid_scan(t, bi.vap, bi.desc.key_attrs,
-                                        attrs, los, his, tss, agg_attr)
-            else:
-                idx = bi.vbp.index if path == "pure_vbp" else bi.vap
-                r = batched_pure_index_scan(t, idx, bi.desc.key_attrs,
-                                            attrs, los, his, tss, agg_attr)
+            r = self.engine.scan_batch(t, plan.path, plan.index_state,
+                                       plan.key_attrs, attrs, los, his, tss,
+                                       agg_attr, use_kernel=use_kernel)
             wall = time.perf_counter() - t0
             agg_sums = np.asarray(r.agg_sum)
             counts = np.asarray(r.count)
             pages = np.asarray(r.pages_scanned)
             entries = np.asarray(r.entries_probed)
             starts = np.asarray(r.start_page)
-            for k, (pos, _q, _bi) in enumerate(members):
+            for k, (pos, _q, _plan) in enumerate(members):
                 raw[pos] = (int(agg_sums[k]), int(counts[k]),
                             int(pages[k]), int(entries[k]),
                             int(starts[k]), wall / len(members))
 
         # Accounting replay in input order (host-side, same arithmetic
         # and clock/monitor trajectory as the per-query loop).
-        plan_by_pos = {pos: bi_q for ms in groups.values()
-                       for pos, _q, bi_q in ms}
+        plan_by_pos = {pos: plan.index for ms in groups.values()
+                       for pos, _q, plan in ms}
         for pos, q in pending:
             agg_sum, count, n_pages, n_entries, start_page, wall = raw[pos]
             t = self.tables[q.table]
             layout = self.layouts[q.table]
             bi_q = plan_by_pos[pos]
-            width = scan_width_factor(layout, q.accessed_attrs,
-                                      from_page=start_page)
-            cost = float(n_pages) * t.page_size * (width / layout.n_attrs)
-            cost += float(n_entries) * cm.INDEX_PROBE_COST
+            cost = scan_cost(layout, q.accessed_attrs, t.page_size,
+                             n_pages, float(n_entries), start_page)
             used = bi_q is not None
             if used:
                 bi_q.last_used_ms = self.clock_ms
@@ -482,27 +368,42 @@ class Database:
                     template=q.template))
             out[pos] = stats
 
-    def _exec_join(self, q: Query, outer: ScanResult):
+    def _exec_join(self, q: Query, outer):
         """HIGH-S equi-join: count pairs between the outer matches and
         the inner table on join_attr == join_inner_attr.  Cost model:
         index-nested-loop when an index exists on the inner join
         attribute, hash join (one inner pass) otherwise."""
         inner_t = self.tables[q.join_table]
-        # exact pair count (host-side sorted merge; correctness path)
-        om = np.asarray(outer.contrib) > 0
-        outer_vals = np.asarray(
-            self.tables[q.table].data[:, :, q.join_attr])[om]
-        ib = np.asarray(inner_t.begin_ts).reshape(-1)
-        ie = np.asarray(inner_t.end_ts).reshape(-1)
+        outer_t = self.tables[q.table]
         ts = int(self.clock_ms) + 1
+        # exact pair count (host-side sorted merge; correctness path)
+        if isinstance(outer, ShardScanResult):
+            outer_vals = np.concatenate([
+                np.asarray(t.data[:, :, q.join_attr])[np.asarray(c) > 0]
+                for t, c in zip(outer_t.shards, outer.contribs)])
+        else:
+            om = np.asarray(outer.contrib) > 0
+            outer_vals = np.asarray(outer_t.data[:, :, q.join_attr])[om]
+        if isinstance(inner_t, ShardedTable):
+            ib = np.concatenate([np.asarray(t.begin_ts).reshape(-1)
+                                 for t in inner_t.shards])
+            ie = np.concatenate([np.asarray(t.end_ts).reshape(-1)
+                                 for t in inner_t.shards])
+            ivals = np.concatenate([
+                np.asarray(t.data[:, :, q.join_inner_attr]).reshape(-1)
+                for t in inner_t.shards])
+        else:
+            ib = np.asarray(inner_t.begin_ts).reshape(-1)
+            ie = np.asarray(inner_t.end_ts).reshape(-1)
+            ivals = np.asarray(
+                inner_t.data[:, :, q.join_inner_attr]).reshape(-1)
         ivis = (ib <= ts) & (ts < ie)
-        inner_vals = np.sort(
-            np.asarray(inner_t.data[:, :, q.join_inner_attr]).reshape(-1)[ivis])
+        inner_vals = np.sort(ivals[ivis])
         lo = np.searchsorted(inner_vals, outer_vals, side="left")
         hi = np.searchsorted(inner_vals, outer_vals, side="right")
         pairs = int((hi - lo).sum())
 
-        n_outer = int(om.sum())
+        n_outer = int(outer_vals.shape[0])
         n_inner = int(inner_t.n_rows)
         inner_idx = None
         for bi in self.indexes_on(q.join_table):
@@ -524,11 +425,13 @@ class Database:
         layout = self.layouts[q.table]
         los = jnp.asarray(q.los, jnp.int32)
         his = jnp.asarray(q.his, jnp.int32)
+        mutate = sharded_update_rows if isinstance(t, ShardedTable) \
+            else update_rows
         t0 = time.perf_counter()
-        new_t, n_upd = update_rows(t, tuple(q.attrs), los, his,
-                                   tuple(q.set_attrs),
-                                   jnp.asarray(q.set_vals, jnp.int32),
-                                   self.clock_ms_i32(), max_new=self.update_cap)
+        new_t, n_upd = mutate(t, tuple(q.attrs), los, his,
+                              tuple(q.set_attrs),
+                              jnp.asarray(q.set_vals, jnp.int32),
+                              self.clock_ms_i32(), max_new=self.update_cap)
         wall = time.perf_counter() - t0
         self.tables[q.table] = new_t
         n_upd = int(n_upd)
@@ -552,9 +455,11 @@ class Database:
     def _exec_insert(self, q: Query) -> ExecStats:
         t = self.tables[q.table]
         rows = np.asarray(q.rows, np.int32)
+        mutate = sharded_insert_rows if isinstance(t, ShardedTable) \
+            else insert_rows
         t0 = time.perf_counter()
-        new_t = insert_rows(t, jnp.asarray(rows), self.clock_ms_i32(),
-                            rows.shape[0], max_new=rows.shape[0])
+        new_t = mutate(t, jnp.asarray(rows), self.clock_ms_i32(),
+                       rows.shape[0], max_new=rows.shape[0])
         wall = time.perf_counter() - t0
         self.tables[q.table] = new_t
         n = rows.shape[0]
@@ -576,11 +481,17 @@ class Database:
     # Tuner-side physical work, charged by the caller
     # ------------------------------------------------------------------
     def vap_build_step(self, bi: BuiltIndex, pages: int) -> float:
-        """Advance a VAP/FULL index by ``pages`` pages; returns work units."""
+        """Advance a VAP/FULL index by ``pages`` pages; returns work
+        units.  On sharded storage the budget round-robins across
+        shards in global page order (index.sharded_build_pages_vap)."""
         t = self.tables[bi.desc.table]
         before = int(bi.vap.built_pages)
-        bi.vap = build_pages_vap(bi.vap, t, bi.desc.key_attrs,
-                                 pages_per_cycle=pages)
+        if isinstance(bi.vap, ShardedIndex):
+            bi.vap = sharded_build_pages_vap(bi.vap, t, bi.desc.key_attrs,
+                                             pages_per_cycle=pages)
+        else:
+            bi.vap = build_pages_vap(bi.vap, t, bi.desc.key_attrs,
+                                     pages_per_cycle=pages)
         done = int(bi.vap.built_pages) - before
         full_pages = int(t.n_rows) // t.page_size
         if int(bi.vap.built_pages) >= full_pages:
@@ -599,14 +510,15 @@ class Database:
         """
         t = self.tables[bi.desc.table]
         max_add = min(int(max_add), t.capacity)
-        entries_before = int(bi.vbp.index.n_entries)
-        lo, hi = self._vbp_bounds(bi, q)
-        bi.vbp, n_added = vbp_populate_subdomain(
-            bi.vbp, t, bi.desc.key_attrs, lo, hi, self.clock_ms_i32(),
-            max_add=max_add)
+        entries_before = int(vbp_n_entries(bi.vbp))
+        lo, hi = self.planner.vbp_bounds(bi, q)
+        populate = sharded_vbp_populate_subdomain \
+            if isinstance(bi.vbp, ShardedVbpState) else vbp_populate_subdomain
+        bi.vbp, n_added = populate(bi.vbp, t, bi.desc.key_attrs, lo, hi,
+                                   self.clock_ms_i32(), max_add=max_add)
         n_added = int(n_added)
         if n_added < max_add:  # the whole sub-domain fit -> now covered
-            hlo, hhi = self._vbp_host_bounds(bi, q)
+            hlo, hhi = self.planner.vbp_host_bounds(bi, q)
             bi.cov_union.add(hlo, hhi)
         # Cracking-style cost: partitioning the still-uncracked region
         # (early cracks touch nearly the whole column; later ones are

@@ -224,6 +224,48 @@ def batched_hybrid_scan(table: Table, index: AdHocIndex, key_attrs: tuple,
     return BatchScanResult(*jax.vmap(one)(los, his, tss))
 
 
+class HybridPrefixResult(NamedTuple):
+    """Per-query index-prefix portion of a batched hybrid scan.
+
+    The companion of the Pallas kernel's per-query ``start_pages``
+    table suffix (``ops.scan_table_batched``): ``agg_sum``/``count``
+    cover only deduplicated index matches on pages < ``start_page``;
+    adding the kernel's suffix aggregates reconstructs the full hybrid
+    result bit-identically to ``batched_hybrid_scan``.
+    """
+
+    agg_sum: jax.Array        # (B,) int32
+    count: jax.Array          # (B,) int32
+    entries_probed: jax.Array # (B,) int32
+    start_page: jax.Array     # (B,) int32
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def batched_hybrid_index_prefix(table: Table, index: AdHocIndex,
+                                key_attrs: tuple, attrs: tuple, los, his,
+                                tss, agg_attr: int) -> HybridPrefixResult:
+    """B hybrid-scan index prefixes + stitch points in one dispatch."""
+    psz = table.page_size
+    vals = table.data[:, :, agg_attr]
+
+    def one(lo, hi, ts):
+        lo_key, hi_key = _predicate_key_bounds(key_attrs, attrs, lo, hi)
+        entry_mask, rids = index_range_scan(index, lo_key, hi_key)
+        pg, sl = rids // psz, rids % psz
+        rows_ok = conj_predicate_mask(table, attrs, lo, hi)[pg, sl]
+        rows_ok &= visible_mask(table, ts)[pg, sl]
+        idx_match = entry_mask & rows_ok
+        rho_m = jnp.max(jnp.where(idx_match, pg, -1))
+        start_page = jnp.maximum(rho_m, index.built_pages)  # rho_i + 1
+        idx_keep = idx_match & (pg < start_page)
+        s = jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32)
+        c = jnp.sum(idx_keep, dtype=jnp.int32)
+        return (s, c, jnp.sum(entry_mask, dtype=jnp.int32),
+                start_page.astype(jnp.int32))
+
+    return HybridPrefixResult(*jax.vmap(one)(los, his, tss))
+
+
 @functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
 def batched_pure_index_scan(table: Table, index: AdHocIndex, key_attrs: tuple,
                             attrs: tuple, los, his, tss,

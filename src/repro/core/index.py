@@ -38,7 +38,7 @@ from typing import NamedTuple, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.table import Table, INF_TS
+from repro.core.table import (INF_TS, ShardedTable, Table, global_rids)
 
 I32_MAX = jnp.int32(2**31 - 1)
 I32_MIN = jnp.int32(-(2**31))
@@ -169,6 +169,74 @@ def build_full(index: AdHocIndex, table: Table, key_attrs: tuple) -> AdHocIndex:
 
 
 # ---------------------------------------------------------------------------
+# Sharded VAP/FULL: one local index per table shard
+# ---------------------------------------------------------------------------
+
+class ShardedIndex(NamedTuple):
+    """Per-shard AdHocIndex state over a ShardedTable.
+
+    Each shard's index holds *local* rids into its own shard and a
+    shard-local ``built_pages`` prefix.  Because the sharded build
+    walks global page order (round-robin over shards -- see
+    ``sharded_build_pages_vap``), the union of the local prefixes is
+    always the global prefix [0, sum(built_pages)), which preserves
+    the hybrid scan's stitch invariant across any shard count.
+    """
+
+    shards: Tuple[AdHocIndex, ...]
+
+    @property
+    def built_pages(self) -> jax.Array:
+        """Global fully-indexed page prefix length (== rho_i + 1)."""
+        out = self.shards[0].built_pages
+        for ix in self.shards[1:]:
+            out = out + ix.built_pages
+        return out
+
+    @property
+    def n_entries(self) -> jax.Array:
+        out = self.shards[0].n_entries
+        for ix in self.shards[1:]:
+            out = out + ix.n_entries
+        return out
+
+    @property
+    def capacity(self) -> int:
+        return sum(ix.capacity for ix in self.shards)
+
+
+def make_sharded_index(table: ShardedTable) -> ShardedIndex:
+    return ShardedIndex(tuple(make_index(t.capacity) for t in table.shards))
+
+
+def _count_owned_below(bound: int, shard: int, n_shards: int) -> int:
+    """#{global page p < bound : p % n_shards == shard} (host-side)."""
+    return max(0, -(-(bound - shard) // n_shards))
+
+
+def sharded_build_pages_vap(index: ShardedIndex, table: ShardedTable,
+                            key_attrs: tuple,
+                            pages_per_cycle: int) -> ShardedIndex:
+    """One VAP cycle over sharded storage: index the next
+    ``pages_per_cycle`` pages *in global page order*, which round-robins
+    the build budget across shards (global page p extends shard p % S).
+    The set of built pages -- and therefore every downstream scan,
+    stitch point and accounting value -- is bit-identical to the
+    single-shard ``build_pages_vap`` at the same cumulative budget.
+    """
+    S = len(index.shards)
+    built = sum(int(ix.built_pages) for ix in index.shards)
+    new_shards = []
+    for s, (ix, t) in enumerate(zip(index.shards, table.shards)):
+        step = (_count_owned_below(built + pages_per_cycle, s, S)
+                - _count_owned_below(built, s, S))
+        if step > 0:
+            ix = build_pages_vap(ix, t, key_attrs, pages_per_cycle=step)
+        new_shards.append(ix)
+    return ShardedIndex(tuple(new_shards))
+
+
+# ---------------------------------------------------------------------------
 # VBP: value-based partial population (cracking / SMIX / holistic style)
 # ---------------------------------------------------------------------------
 
@@ -250,25 +318,142 @@ def vbp_populate_subdomain(state: VbpState, table: Table, key_attrs: tuple,
     in_index = state.in_index.at[take].set(state.in_index[take] | ok)
     # Record coverage only if the whole sub-domain fit this cycle.
     fits = (n_want <= max_add) & ~already
-    slot = jnp.minimum(state.n_cov, state.cov_lo_hi.shape[0] - 1)
-    def upd(arr, val, sentinel):
-        return arr.at[slot].set(jnp.where(fits, val, arr[slot]))
-    cov_lo_hi = upd(state.cov_lo_hi, lo[0], I32_MAX)
-    cov_lo_lo = upd(state.cov_lo_lo, lo[1], I32_MAX)
-    cov_hi_hi = upd(state.cov_hi_hi, hi[0], I32_MIN)
-    cov_hi_lo = upd(state.cov_hi_lo, hi[1], I32_MIN)
-    n_cov = state.n_cov + jnp.where(fits, 1, 0).astype(jnp.int32)
-    return (VbpState(new_index, cov_lo_hi, cov_lo_lo, cov_hi_hi, cov_hi_lo,
-                     n_cov, in_index),
+    cov = _record_coverage(state, fits, lo, hi)
+    return (VbpState(new_index, *cov, in_index),
             jnp.minimum(n_want, max_add))
 
 
-def vbp_invalidate_coverage(state: VbpState) -> VbpState:
+def _record_coverage(state, fits, lo: KeyPair, hi: KeyPair):
+    """Append [lo, hi] to the covering interval set when ``fits``;
+    shared by the single-table and sharded population steps (``state``
+    only needs the ``cov_*``/``n_cov`` fields)."""
+    slot = jnp.minimum(state.n_cov, state.cov_lo_hi.shape[0] - 1)
+
+    def upd(arr, val):
+        return arr.at[slot].set(jnp.where(fits, val, arr[slot]))
+
+    return (upd(state.cov_lo_hi, lo[0]), upd(state.cov_lo_lo, lo[1]),
+            upd(state.cov_hi_hi, hi[0]), upd(state.cov_hi_lo, hi[1]),
+            state.n_cov + jnp.where(fits, 1, 0).astype(jnp.int32))
+
+
+def vbp_invalidate_coverage(state):
     """Drop coverage claims after table mutations (inserts create rows
     the covering intervals do not know about).  Index entries stay --
     the scan re-checks visibility -- but pure index scans are no
-    longer legal until sub-domains are re-populated."""
+    longer legal until sub-domains are re-populated.  Works on both
+    ``VbpState`` and ``ShardedVbpState``."""
     return state._replace(n_cov=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Sharded VBP: per-shard sorted entries, global covering metadata
+# ---------------------------------------------------------------------------
+
+class ShardedVbpState(NamedTuple):
+    """VBP over sharded storage.
+
+    Sorted entries are per shard (local rids) so shard-local scans need
+    no cross-shard gathers, but the covering-interval metadata and the
+    ``in_index`` dedup bitmap live on the *global* key/rid space: an
+    interval claims every tuple in the sub-domain regardless of which
+    shard holds it, and the "first max_add wanted rows in rid order"
+    population budget is a global selection (same shape as the sharded
+    UPDATE's selection -- see table.sharded_update_rows).
+    """
+
+    shards: Tuple[AdHocIndex, ...]
+    cov_lo_hi: jax.Array   # (max_intervals,) int32
+    cov_lo_lo: jax.Array
+    cov_hi_hi: jax.Array
+    cov_hi_lo: jax.Array
+    n_cov: jax.Array       # () int32
+    in_index: jax.Array    # (global row capacity,) bool
+
+    @property
+    def n_entries(self) -> jax.Array:
+        out = self.shards[0].n_entries
+        for ix in self.shards[1:]:
+            out = out + ix.n_entries
+        return out
+
+
+def make_sharded_vbp(table: ShardedTable,
+                     max_intervals: int = 64) -> ShardedVbpState:
+    proto = make_vbp(1, max_intervals)   # reuse the cov-array layout
+    return ShardedVbpState(
+        shards=tuple(make_index(t.capacity) for t in table.shards),
+        cov_lo_hi=proto.cov_lo_hi, cov_lo_lo=proto.cov_lo_lo,
+        cov_hi_hi=proto.cov_hi_hi, cov_hi_lo=proto.cov_hi_lo,
+        n_cov=proto.n_cov,
+        in_index=jnp.zeros((table.capacity,), bool))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("key_attrs", "max_add"))
+def sharded_vbp_populate_subdomain(state: ShardedVbpState,
+                                   table: ShardedTable, key_attrs: tuple,
+                                   lo: KeyPair, hi: KeyPair, ts,
+                                   max_add: int
+                                   ) -> Tuple[ShardedVbpState, jax.Array]:
+    """Sharded value-based population, bit-identical to the single-table
+    ``vbp_populate_subdomain``: per-shard key planes are scattered into
+    global rid order, the wanted set and the max_add budget selection
+    run globally, and the chosen rows merge into their owning shard's
+    sorted entries."""
+    S = len(table.shards)
+    psz = table.page_size
+    capacity = table.capacity
+    gkh = jnp.zeros((capacity,), jnp.int32)
+    gkl = jnp.zeros((capacity,), jnp.int32)
+    gocc = jnp.zeros((capacity,), bool)
+    for s, t in enumerate(table.shards):
+        kh, kl = make_keys([t.data[:, :, a] for a in key_attrs])
+        rid_map = global_rids(t.n_pages, s, S, psz)
+        gkh = gkh.at[rid_map].set(kh.reshape(-1))
+        gkl = gkl.at[rid_map].set(kl.reshape(-1))
+        gocc = gocc.at[rid_map].set((t.begin_ts < INF_TS).reshape(-1))
+
+    already = vbp_is_covered(state, lo, hi)
+    want = (gocc & keys_in_range(gkh, gkl, lo, hi)
+            & ~already & ~state.in_index)
+    n_want = jnp.sum(want, dtype=jnp.int32)
+
+    order = jnp.argsort(~want, stable=True)
+    take = order[:max_add].astype(jnp.int32)
+    ok = jnp.arange(max_add) < jnp.minimum(n_want, max_add)
+    nk_hi = jnp.where(ok, gkh[take], I32_MAX)
+    nk_lo = jnp.where(ok, gkl[take], I32_MAX)
+    gp, sl = take // psz, take % psz
+    owner, lp = gp % S, gp // S
+
+    new_shards = []
+    for s, ix in enumerate(state.shards):
+        ok_s = ok & (owner == s)
+        mh = jnp.concatenate([ix.key_hi, jnp.where(ok_s, nk_hi, I32_MAX)])
+        ml = jnp.concatenate([ix.key_lo, jnp.where(ok_s, nk_lo, I32_MAX)])
+        mr = jnp.concatenate([ix.rids,
+                              jnp.where(ok_s, lp * psz + sl, 0)
+                              .astype(jnp.int32)])
+        mh, ml, mr = _lexsort_merge(mh, ml, mr, ix.capacity)
+        new_shards.append(AdHocIndex(
+            mh, ml, mr, ix.n_entries + jnp.sum(ok_s, dtype=jnp.int32),
+            ix.built_pages))
+    in_index = state.in_index.at[take].set(state.in_index[take] | ok)
+    fits = (n_want <= max_add) & ~already
+    cov = _record_coverage(state, fits, lo, hi)
+    return (ShardedVbpState(tuple(new_shards), *cov, in_index),
+            jnp.minimum(n_want, max_add))
+
+
+# ---------------------------------------------------------------------------
+# Duck-typing helpers (planner/catalog code handles either storage)
+# ---------------------------------------------------------------------------
+
+def vbp_n_entries(state) -> jax.Array:
+    """Entry count of a VbpState or ShardedVbpState."""
+    return state.index.n_entries if isinstance(state, VbpState) \
+        else state.n_entries
 
 
 # ---------------------------------------------------------------------------

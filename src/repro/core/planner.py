@@ -1,0 +1,231 @@
+"""Query planner: access-path selection, selectivity estimation and
+cost accounting -- pure Python, no array dispatch.
+
+This is the optimizer half of the executor's planner/engine split.
+The planner inspects the index catalog (``BuiltIndex`` records) and a
+query's predicate and emits a ``ScanPlan``; the scan engine
+(``core.engine``) turns plans into jitted dispatches -- one per table,
+or one fan-out per shard on sharded storage.  Keeping the planner free
+of jax calls means plan choice costs no device round-trips and the
+same planner drives both storage layouts.
+
+Access-path selection follows the paper (Section III, "Query
+Optimization"): for a scan, consider each built index whose leading
+key attribute is constrained by the predicate, estimate selectivity,
+and pick a hybrid scan for selective queries -- falling back to a
+table scan when the predicate is not selective or no index matches.
+FULL-scheme indexes are usable only when complete; VBP indexes only
+when the query sub-domain is covered.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from repro.core import cost_model as cm
+from repro.core.cost_model import IndexDescriptor
+from repro.core.index import (ShardedIndex, ShardedVbpState, key_range,
+                              vbp_n_entries)
+from repro.core.layout import LayoutState, scan_width_factor
+
+HYBRID_SELECTIVITY_CUTOFF = 0.20  # optimizer switches to table scan above this
+
+
+class IntervalUnion:
+    """Host-side merged interval set over composite keys.
+
+    The jnp-side VbpState tracks exact-interval coverage (enough for
+    the jitted kernels); real cracking additionally benefits from the
+    *union* of overlapping populated sub-domains -- two overlapping
+    cracks jointly cover their union.  The planner keeps this merged
+    view per VBP index and uses it for access-path decisions.
+    """
+
+    def __init__(self):
+        self.ivs: list = []   # sorted disjoint [(lo, hi)] of key tuples
+
+    def add(self, lo, hi) -> None:
+        ivs = self.ivs + [(lo, hi)]
+        ivs.sort()
+        merged = [ivs[0]]
+        for a, b in ivs[1:]:
+            la, lb = merged[-1]
+            if a <= lb or a == lb:   # touching/overlapping (tuple compare)
+                if b > lb:
+                    merged[-1] = (la, b)
+            else:
+                merged.append((a, b))
+        self.ivs = merged
+
+    def covers(self, lo, hi) -> bool:
+        for a, b in self.ivs:
+            if a <= lo and hi <= b:
+                return True
+            if a > lo:
+                break
+        return False
+
+    def clear(self) -> None:
+        self.ivs = []
+
+
+@dataclass
+class BuiltIndex:
+    """Catalog entry for one built (or building) index."""
+
+    desc: IndexDescriptor
+    scheme: str                     # 'vap' | 'vbp' | 'full'
+    vap: Optional[object] = None    # AdHocIndex | ShardedIndex
+    vbp: Optional[object] = None    # VbpState | ShardedVbpState
+    cov_union: Optional[IntervalUnion] = None   # VBP merged coverage
+    complete: bool = False          # FULL usable flag
+    building: bool = True           # under construction (VAP/FULL)
+    created_ms: float = 0.0
+    last_used_ms: float = 0.0
+
+    def built_fraction(self, table) -> float:
+        if self.scheme == "vap" or self.scheme == "full":
+            full_pages = max(int(table.n_rows) // table.page_size, 1)
+            return min(int(self.vap.built_pages) / full_pages, 1.0)
+        n = max(int(table.n_rows), 1)
+        return min(int(vbp_n_entries(self.vbp)) / n, 1.0)
+
+    def size_bytes(self) -> float:
+        if self.scheme in ("vap", "full"):
+            return 12.0 * float(int(self.vap.n_entries))
+        return 12.0 * float(int(vbp_n_entries(self.vbp)))
+
+
+@dataclass(frozen=True)
+class ScanPlan:
+    """One planned scan: the access path plus the index serving it.
+
+    ``path`` is 'table' | 'hybrid' | 'pure_vbp' | 'pure_vap'.  The
+    engine receives the raw index state via ``index_state`` so it
+    never touches catalog records.
+    """
+
+    path: str
+    index: Optional[BuiltIndex] = None
+
+    @property
+    def key_attrs(self) -> Tuple[int, ...]:
+        return self.index.desc.key_attrs if self.index is not None else ()
+
+    @property
+    def index_state(self):
+        """Raw sorted-entry state for the engine (None for table scans).
+
+        For the pure-VBP path over sharded storage the per-shard entry
+        arrays are re-wrapped as a ShardedIndex: the engine's pure
+        index scan only needs the entry shards, not the covering
+        metadata.
+        """
+        bi = self.index
+        if bi is None:
+            return None
+        if self.path == "pure_vbp":
+            if isinstance(bi.vbp, ShardedVbpState):
+                return ShardedIndex(bi.vbp.shards)
+            return bi.vbp.index
+        return bi.vap
+
+    @property
+    def group_key(self):
+        """Batch-compatibility key fragment (path + serving index)."""
+        return (self.path, self.index.desc.name if self.index else None)
+
+
+class QueryPlanner:
+    """Access-path planner over a Database's catalog.
+
+    Holds only references to live catalog state (tables + indexes), so
+    plans always reflect the current configuration; all methods are
+    host-side Python.
+    """
+
+    def __init__(self, db):
+        self.db = db
+
+    # -- selectivity -----------------------------------------------------
+    @staticmethod
+    def estimate_selectivity(q) -> float:
+        """Cheap uniform-assumption estimate from predicate ranges over
+        the TUNER attribute domain [1, 1m]; used only for plan choice
+        (measured selectivity feeds the monitor afterwards)."""
+        sel = 1.0
+        for lo, hi in zip(q.los, q.his):
+            width = max(float(hi) - float(lo) + 1.0, 0.0)
+            sel *= min(width / 1_000_000.0, 1.0)
+        return sel
+
+    # -- index choice ----------------------------------------------------
+    def choose_index(self, q) -> Optional[BuiltIndex]:
+        best, best_key = None, (-1, -1.0)
+        for bi in self.db.indexes.values():
+            if not cm.index_matches(bi.desc, q.table, q.attrs):
+                continue
+            if bi.scheme == "full" and not bi.complete:
+                continue
+            covered = len(set(bi.desc.key_attrs) & set(q.attrs))
+            frac = bi.built_fraction(self.db.tables[q.table])
+            if bi.scheme == "vbp":
+                lo, hi = self.vbp_host_bounds(bi, q)
+                if not bi.cov_union.covers(lo, hi):
+                    continue
+            key = (covered, frac)
+            if key > best_key:
+                best, best_key = bi, key
+        return best
+
+    def plan_scan(self, q) -> ScanPlan:
+        bi = None
+        if self.estimate_selectivity(q) <= HYBRID_SELECTIVITY_CUTOFF:
+            bi = self.choose_index(q)
+        if bi is None:
+            return ScanPlan("table")
+        if bi.scheme == "vbp":
+            return ScanPlan("pure_vbp", bi)
+        if bi.scheme == "full" and bi.complete:
+            return ScanPlan("pure_vap", bi)
+        return ScanPlan("hybrid", bi)  # VAP (or FULL still building)
+
+    # -- VBP key bounds --------------------------------------------------
+    @staticmethod
+    def vbp_host_key_bounds(bi: BuiltIndex, q):
+        """Host-side composite-key bounds ((hi,lo) int tuples)."""
+        pmap = {a: k for k, a in enumerate(q.attrs)}
+        ka = bi.desc.key_attrs
+        lo0, hi0 = int(q.los[pmap[ka[0]]]), int(q.his[pmap[ka[0]]])
+        if len(ka) == 2 and ka[1] in pmap:
+            lo1, hi1 = int(q.los[pmap[ka[1]]]), int(q.his[pmap[ka[1]]])
+        elif len(ka) == 2:
+            lo1, hi1 = -(2**31) + 1, 2**31 - 2
+        else:
+            lo1, hi1 = 0, 0
+        return (lo0, lo1), (hi0, hi1)
+
+    @classmethod
+    def vbp_host_bounds(cls, bi: BuiltIndex, q):
+        return cls.vbp_host_key_bounds(bi, q)
+
+    @classmethod
+    def vbp_bounds(cls, bi: BuiltIndex, q):
+        (lo0, lo1), (hi0, hi1) = cls.vbp_host_key_bounds(bi, q)
+        if len(bi.desc.key_attrs) == 2:
+            return key_range(lo0, hi0, lo1, hi1)
+        return key_range(lo0, hi0)
+
+
+def scan_cost(layout: LayoutState, accessed_attrs, page_size: int,
+              pages_scanned: int, entries_probed: float,
+              start_page: int) -> float:
+    """Tuple-touch cost of one executed scan.
+
+    Table-scan units scale with the layout's effective width
+    (width/n_attrs == 1 for untuned NSM pages); index probes are
+    narrow and layout-independent.
+    """
+    width = scan_width_factor(layout, accessed_attrs, from_page=start_page)
+    cost = float(pages_scanned) * page_size * (width / layout.n_attrs)
+    return cost + float(entries_probed) * cm.INDEX_PROBE_COST

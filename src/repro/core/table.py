@@ -224,3 +224,210 @@ def rid_page(rid, page_size: int):
 
 def rid_slot(rid, page_size: int):
     return rid % page_size
+
+
+# ---------------------------------------------------------------------------
+# Sharded storage: pages partitioned round-robin across a shard list
+# ---------------------------------------------------------------------------
+#
+# Global page ``p`` lives on shard ``p % S`` at local page ``p // S``.
+# Round-robin (not range) partitioning is load-bearing: the engine's
+# in-order VAP build walks global pages 0,1,2,..., so under round-robin
+# the globally built *prefix* [0, m) maps to a locally built prefix on
+# every shard -- which is exactly the invariant the hybrid scan's
+# stitch point relies on (see index.sharded_build_pages_vap).  Rows
+# keep their global rids; a shard's slots therefore fill in local rid
+# order and each shard is itself a well-formed ``Table`` with a local
+# append watermark, so every single-table operator applies per shard
+# unchanged.
+#
+# Contract (tested in tests/test_sharded_engine.py): for any shard
+# count, query results and all accounting are bit-identical to the
+# single-shard engine.  Sums stay int32 -- two's-complement addition is
+# associative and commutative, so per-shard partial sums reduce to the
+# exact single-shard value in any tree order.
+
+
+class ShardedTable(NamedTuple):
+    """Paged column store partitioned round-robin over page id.
+
+    ``shards`` are plain Tables holding local pages; ``n_rows`` is the
+    *global* append watermark (each shard additionally tracks its local
+    watermark, kept consistent by the sharded mutators).  The geometry
+    properties report global values so planner/cost code written
+    against ``Table`` works on either storage unchanged.
+    """
+
+    shards: Tuple[Table, ...]
+    n_rows: jax.Array          # () int32 global append watermark
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def page_size(self) -> int:
+        return self.shards[0].page_size
+
+    @property
+    def n_attrs(self) -> int:
+        return self.shards[0].n_attrs
+
+    @property
+    def n_pages(self) -> int:
+        return sum(t.n_pages for t in self.shards)
+
+    @property
+    def capacity(self) -> int:
+        return self.n_pages * self.page_size
+
+
+def local_n_rows(n_rows, shard: int, n_shards: int, page_size: int,
+                 local_pages: int) -> jax.Array:
+    """Local append watermark implied by the global watermark.
+
+    Global rids fill pages in order, so a shard's occupied slots are
+    exactly: its pages fully below the global watermark page, plus the
+    watermark page's partial fill if this shard owns it.
+    """
+    n = jnp.asarray(n_rows, jnp.int32)
+    watermark = n // page_size          # number of complete global pages
+    partial = n % page_size
+    full_local = jnp.clip((watermark - shard + n_shards - 1) // n_shards,
+                          0, local_pages)
+    owns = ((watermark % n_shards) == shard) & \
+        ((watermark // n_shards) < local_pages)
+    return (full_local * page_size + jnp.where(owns, partial, 0)
+            ).astype(jnp.int32)
+
+
+def global_rids(local_pages: int, shard: int, n_shards: int,
+                page_size: int) -> jax.Array:
+    """(local_pages * page_size,) global rid of each local flat slot."""
+    pages = jnp.arange(local_pages, dtype=jnp.int32) * n_shards + shard
+    slots = jnp.arange(page_size, dtype=jnp.int32)
+    return (pages[:, None] * page_size + slots[None, :]).reshape(-1)
+
+
+def shard_table(table: Table, num_shards: int) -> ShardedTable:
+    """Partition ``table`` round-robin by page id into ``num_shards``."""
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    if table.n_pages < num_shards:
+        raise ValueError(f"cannot spread {table.n_pages} pages over "
+                         f"{num_shards} shards")
+    shards = []
+    for s in range(num_shards):
+        data = table.data[s::num_shards]
+        shards.append(Table(
+            data=data,
+            begin_ts=table.begin_ts[s::num_shards],
+            end_ts=table.end_ts[s::num_shards],
+            n_rows=local_n_rows(table.n_rows, s, num_shards,
+                                table.page_size, data.shape[0])))
+    return ShardedTable(tuple(shards), jnp.asarray(table.n_rows, jnp.int32))
+
+
+def unshard_table(st: ShardedTable) -> Table:
+    """Reassemble the logical table (test oracle / resharding)."""
+    S = st.n_shards
+    t0 = st.shards[0]
+    data = jnp.zeros((st.n_pages, t0.page_size, t0.n_attrs), jnp.int32)
+    begin = jnp.zeros((st.n_pages, t0.page_size), jnp.int32)
+    end = jnp.zeros((st.n_pages, t0.page_size), jnp.int32)
+    for s, t in enumerate(st.shards):
+        data = data.at[s::S].set(t.data)
+        begin = begin.at[s::S].set(t.begin_ts)
+        end = end.at[s::S].set(t.end_ts)
+    return Table(data, begin, end, jnp.asarray(st.n_rows, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("max_new",))
+def sharded_insert_rows(st: ShardedTable, rows: jax.Array, ts, n_new,
+                        max_new: int) -> ShardedTable:
+    """Sharded INSERT: same append-at-watermark semantics as
+    ``insert_rows``; each row is scattered to the shard owning its
+    global page.  Parked (masked-off) writes target the owning shard's
+    last slot with its current value, mirroring the single-table op."""
+    del max_new
+    S = len(st.shards)
+    psz = st.page_size
+    capacity = st.capacity
+    ts = jnp.asarray(ts, jnp.int32)
+    base = st.n_rows
+    idx = base + jnp.arange(rows.shape[0], dtype=jnp.int32)
+    ok = (jnp.arange(rows.shape[0]) < n_new) & (idx < capacity)
+    idx = jnp.where(ok, idx, capacity - 1)
+    gp, sl = idx // psz, idx % psz
+    owner, lp = gp % S, gp // S
+    n_rows = jnp.minimum(base + jnp.asarray(n_new, jnp.int32),
+                         jnp.asarray(capacity, jnp.int32))
+    new_shards = []
+    for s, t in enumerate(st.shards):
+        ok_s = ok & (owner == s)
+        lp_s = jnp.where(ok_s, lp, t.n_pages - 1)
+        sl_s = jnp.where(ok_s, sl, psz - 1)
+        data = t.data.at[lp_s, sl_s].set(
+            jnp.where(ok_s[:, None], rows.astype(jnp.int32),
+                      t.data[lp_s, sl_s]))
+        begin = t.begin_ts.at[lp_s, sl_s].set(
+            jnp.where(ok_s, ts, t.begin_ts[lp_s, sl_s]))
+        end = t.end_ts.at[lp_s, sl_s].set(
+            jnp.where(ok_s, INF_TS, t.end_ts[lp_s, sl_s]))
+        new_shards.append(Table(data, begin, end,
+                                local_n_rows(n_rows, s, S, psz, t.n_pages)))
+    return ShardedTable(tuple(new_shards), n_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("attrs", "max_new"))
+def sharded_update_rows(st: ShardedTable, attrs: tuple, los, his, set_attrs,
+                        set_vals, ts, max_new: int
+                        ) -> Tuple[ShardedTable, jax.Array]:
+    """Sharded MVCC UPDATE, bit-identical to ``update_rows``.
+
+    The "first max_new matches in global rid order" selection cannot be
+    made per shard (matches interleave across shards in rid order), so
+    per-shard match masks are scattered into one global flat vector and
+    the selection runs on it exactly like the single-table op; the
+    chosen rids are then routed back to their owning shards for
+    version termination and the gather of pre-image rows.
+    """
+    S = len(st.shards)
+    psz = st.page_size
+    capacity = st.capacity
+    ts = jnp.asarray(ts, jnp.int32)
+    set_attrs = jnp.asarray(set_attrs, jnp.int32)
+    set_vals = jnp.asarray(set_vals, jnp.int32)
+
+    flat_match = jnp.zeros((capacity,), bool)
+    for s, t in enumerate(st.shards):
+        m = conj_predicate_mask(t, attrs, los, his) & visible_mask(t, ts)
+        rid_map = global_rids(t.n_pages, s, S, psz)
+        flat_match = flat_match.at[rid_map].set(m.reshape(-1))
+    n_match = jnp.sum(flat_match, dtype=jnp.int32)
+
+    order = jnp.argsort(~flat_match, stable=True)  # matches first
+    rids = order[:max_new].astype(jnp.int32)
+    sel_ok = jnp.arange(max_new) < jnp.minimum(n_match, max_new)
+    gp, sl = rids // psz, rids % psz
+    owner, lp = gp % S, gp // S
+
+    old_rows = jnp.zeros((max_new, st.n_attrs), jnp.int32)
+    new_shards = []
+    for s, t in enumerate(st.shards):
+        own_s = owner == s
+        ok_s = sel_ok & own_s
+        lp_s = jnp.where(ok_s, lp, t.n_pages - 1)
+        sl_s = jnp.where(ok_s, sl, psz - 1)
+        end = t.end_ts.at[lp_s, sl_s].set(
+            jnp.where(ok_s, ts, t.end_ts[lp_s, sl_s]))
+        vals = t.data[jnp.where(own_s, lp, 0).clip(0, t.n_pages - 1),
+                      jnp.where(own_s, sl, 0)]
+        old_rows = jnp.where(own_s[:, None], vals, old_rows)
+        new_shards.append(Table(t.data, t.begin_ts, end, t.n_rows))
+    new_rows = old_rows.at[:, set_attrs].set(
+        jnp.broadcast_to(set_vals, (old_rows.shape[0], set_vals.shape[0])))
+    n_upd = jnp.minimum(n_match, max_new)
+    st = ShardedTable(tuple(new_shards), st.n_rows)
+    st = sharded_insert_rows(st, new_rows, ts, n_upd, max_new=max_new)
+    return st, n_upd
