@@ -1,0 +1,71 @@
+"""Async tuning pipeline: read-burst p99 with builds overlapped vs
+serialized.
+
+The fig10 shifting workload (each phase rotates the predicate
+attribute, so the tuner keeps re-indexing) under FAST tuning, read
+bursts submitted through the batched engine.  Serialized scheduling
+charges every cycle's build work to the burst head (the latency-spike
+mechanism); ``RunConfig.async_tuning="overlap"`` drains the same work
+as build quanta between the burst's dispatches on the concurrent
+build lane, so the spike disappears from the read path.  The paper's
+claim in miniature: continuous lightweight changes only beat
+stop-the-world tuning if construction overlaps query processing.
+"""
+from __future__ import annotations
+
+from benchmarks.common import DEFAULT_PAGE, emit
+from repro.bench_db import QueryGen, RunConfig, make_tuner_db, run_workload
+from repro.bench_db.workloads import hybrid_workload
+from repro.core import Database, PredictiveTuner, TunerConfig
+
+
+def run(n_rows: int = 20_000, total: int = 1200, phase_len: int = 100,
+        batch: int = 8, quiet: bool = False):
+    # phase_len stays short relative to total (>= 1 shift per 100
+    # queries): each shift opens a re-index window whose burst heads
+    # pay the serialized build spike, which is the tail this benchmark
+    # measures.  Longer phases amortise the spikes below p99 for both
+    # modes and the comparison saturates at 1.0x.
+    db_src = make_tuner_db(n_rows=n_rows, page_size=DEFAULT_PAGE,
+                           headroom=2.5)
+    results = {}
+    for mode in (None, "deterministic", "overlap"):
+        gen = QueryGen(db_src, selectivity=0.01, seed=29)
+        wl = hybrid_workload(gen, "read_only", total=total,
+                             phase_len=phase_len, seed=7)
+        db = Database(dict(db_src.tables))
+        # Small per-cycle budgets stretch each re-index window over
+        # many cycles, so serialized scheduling keeps charging build
+        # work to burst heads that are still full-scanning -- the
+        # regime where overlap visibly cuts the read-burst tail.
+        tuner = PredictiveTuner(db, TunerConfig(
+            storage_budget_bytes=50e6, pages_per_cycle=8,
+            max_build_pages_per_cycle=16, candidate_min_count=2))
+        res = run_workload(db, tuner, wl, RunConfig(
+            tuning_interval_ms=25.0, read_batch_size=batch,
+            async_tuning=mode, build_quantum_pages=8))
+        results[mode or "serialized"] = res
+        if not quiet:
+            print(f"   {mode or 'serialized':13s}", res.summary())
+
+    ser = results["serialized"]
+    det = results["deterministic"]
+    ovl = results["overlap"]
+    emit("async_tuning.read_burst_p99",
+         ovl.p99_latency_ms * 1e3,
+         f"overlap={ovl.p99_latency_ms:.4f}ms vs "
+         f"serialized={ser.p99_latency_ms:.4f}ms "
+         f"({ser.p99_latency_ms / max(ovl.p99_latency_ms, 1e-12):.2f}x); "
+         f"blocked {ser.tuner_charged_ms:.2f}ms -> "
+         f"{ovl.tuner_charged_ms:.2f}ms "
+         f"(overlapped {ovl.tuner_overlapped_ms:.2f}ms)")
+    emit("async_tuning.deterministic_replay",
+         det.p99_latency_ms * 1e3,
+         f"bit-exact replay mode: p99 delta vs serialized = "
+         f"{abs(det.p99_latency_ms - ser.p99_latency_ms):.6f}ms "
+         f"(must be 0)")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -15,9 +15,8 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.bench_db import QueryGen, RunConfig, make_tuner_db
 from repro.bench_db.workloads import Workload
-from repro.core import Database, IndexDescriptor, Query
+from repro.core import Database, IndexDescriptor
 
 DEFAULT_ROWS = 20_000
 DEFAULT_PAGE = 256
@@ -107,7 +106,7 @@ def scheme_experiment(scheme: str, workload: Workload, db_src,
             elif scheme == "vbp_decoupled" and pending:
                 probe = pending[0]
                 db.vbp_populate(bi, probe, max_add=max(int(budget), 1))
-                lo, hi = db._vbp_host_bounds(bi, probe)
+                lo, hi = db.planner.vbp_host_bounds(bi, probe)
                 if bi.cov_union.covers(lo, hi):
                     pending.pop(0)
             next_cycle += tuning_interval_ms
@@ -121,7 +120,7 @@ def scheme_experiment(scheme: str, workload: Workload, db_src,
             db.clock_ms += work * time_per_unit_ms
         elif scheme == "vbp_decoupled" and q.kind == "scan" \
                 and not stats.used_index:
-            lo, hi = db._vbp_host_bounds(bi, q)
+            lo, hi = db.planner.vbp_host_bounds(bi, q)
             if not bi.cov_union.covers(lo, hi) and q not in pending:
                 pending.append(q)
         res.latencies_ms.append(lat)
@@ -137,7 +136,19 @@ def scheme_experiment(scheme: str, workload: Workload, db_src,
     return res
 
 
+# Every emit() is also recorded here so benchmark drivers can dump a
+# machine-readable artifact (benchmarks/run.py --json; the nightly CI
+# job uploads it to build a perf trajectory across runs).
+RECORDS: List[Dict[str, object]] = []
+
+
+def reset_records() -> None:
+    RECORDS.clear()
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
     """The run.py CSV contract: name,us_per_call,derived."""
+    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 3),
+                    "derived": derived})
     print(f"{name},{us_per_call:.3f},{derived}")
     sys.stdout.flush()

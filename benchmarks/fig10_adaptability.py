@@ -9,7 +9,6 @@ from __future__ import annotations
 
 from benchmarks.common import DEFAULT_PAGE, emit
 from repro.bench_db import QueryGen, RunConfig, make_tuner_db, run_workload
-from repro.bench_db.runner import TUNING_FREQ_MS
 from repro.bench_db.workloads import hybrid_workload
 from repro.core import Database, PredictiveTuner, TunerConfig
 from repro.core.baselines import DisabledTuner

@@ -10,7 +10,6 @@ what the page budget allowed.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import DEFAULT_PAGE, emit, scheme_experiment
 from repro.bench_db import QueryGen, make_tuner_db

@@ -8,7 +8,6 @@ proj/sel the tuners give 1.9x (index), 1.5x (layout), 2.7x (both); at
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit
 from repro.bench_db import QueryGen, RunConfig, make_tuner_db, run_workload

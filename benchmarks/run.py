@@ -16,7 +16,6 @@ def bench_kernels():
     """Pallas filter_agg vs pure-jnp reference (interpret mode on this
     container -- the comparison point is correctness + call overhead;
     TPU timings come from real deployments)."""
-    import numpy as np
     from benchmarks.common import emit
     from repro.bench_db.schema import make_tuner_db
     from repro.kernels import ops
@@ -76,12 +75,20 @@ def main() -> None:
     ap.add_argument("--all", action="store_true",
                     help="run every registered benchmark (the default; "
                          "spelled out for scripts)")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark by name (see --list)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the registered benchmark names and exit")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the emitted records as JSON "
+                         "(the nightly-CI perf artifact)")
     args = ap.parse_args()
 
-    from benchmarks import (batched_scan, fig2_schemes, fig6_decision_logic,
-                            fig7_holistic, fig8_affinity, fig9_layout,
-                            fig10_adaptability, sharded_scan)
+    from benchmarks import (async_tuning, batched_scan, fig2_schemes,
+                            fig6_decision_logic, fig7_holistic,
+                            fig8_affinity, fig9_layout, fig10_adaptability,
+                            sharded_scan)
+    from benchmarks import common
 
     quick = args.quick
     jobs = [
@@ -103,9 +110,23 @@ def main() -> None:
         ("sharded", lambda: sharded_scan.run(
             n_queries=32 if quick else 64,
             n_rows=10_000 if quick else 20_000, quiet=True)),
+        ("async", lambda: async_tuning.run(
+            total=400 if quick else 1200, quiet=True)),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),
     ]
+    names = [name for name, _ in jobs]
+    if args.list:
+        print("\n".join(names))
+        return
+    if args.only is not None and args.only not in names:
+        # A typo must not silently run *nothing* -- fail loudly with
+        # the registry so scripts and CI notice.
+        raise SystemExit(
+            f"run.py: unknown benchmark {args.only!r}; "
+            f"known benchmarks: {', '.join(names)}")
+
+    common.reset_records()
     failures = []
     for name, fn in jobs:
         if args.only and name != args.only:
@@ -118,6 +139,20 @@ def main() -> None:
             failures.append(name)
             traceback.print_exc()
             print(f"{name}.FAILED,0.0,{e!r}")
+    if args.json:
+        import json
+        import platform
+        payload = {
+            "created_unix_s": round(time.time(), 1),
+            "argv": sys.argv[1:],
+            "python": platform.python_version(),
+            "failures": failures,
+            "records": common.RECORDS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(common.RECORDS)} records to {args.json}",
+              file=sys.stderr)
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")
 

@@ -7,7 +7,6 @@ index is complete.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 
 from repro.bench_db import QueryGen, make_tuner_db
 from repro.core import Database, PredictiveTuner, TunerConfig

@@ -6,7 +6,6 @@ the production mesh; see src/repro/launch/train.py and DESIGN.md.)
     PYTHONPATH=src python examples/train_lm.py [--steps 300]
 """
 import argparse
-import sys
 
 from repro.launch.train import main as train_main
 

@@ -1,16 +1,42 @@
 #!/usr/bin/env bash
-# Canonical pre-merge check: the fast tier-1 slice on CPU with the
-# Pallas kernels in interpret mode (repro.kernels.ops.INTERPRET is
-# True by default on this container; TPU deployments flip it).
+# Canonical pre-merge check: lint gate + the fast tier-1 slice on CPU
+# with the Pallas kernels in interpret mode (repro.kernels.ops.INTERPRET
+# is True by default on this container; TPU deployments flip it).
 #
-#   scripts/ci.sh            fast slice (slow tests deselected)
-#   scripts/ci.sh --full     everything, including @pytest.mark.slow
+#   scripts/ci.sh            lint (if ruff installed) + fast slice
+#   scripts/ci.sh --full     lint + everything, incl. @pytest.mark.slow
+#   scripts/ci.sh --lint     lint only (fails hard if ruff is missing;
+#                            the CI workflow's dedicated lint job)
 #   scripts/ci.sh <args...>  extra args forwarded to pytest
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS=cpu
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Formatter adoption is incremental (see pyproject.toml): new modules
+# are kept `ruff format`-clean; legacy hand-aligned modules join this
+# list as they get reformatted.
+RUFF_FORMAT_PATHS=(
+    src/repro/core/build_service.py
+)
+
+lint() {
+    ruff check .
+    ruff format --check "${RUFF_FORMAT_PATHS[@]}"
+}
+
+if [[ "${1:-}" == "--lint" ]]; then
+    lint
+    exit 0
+fi
+
+if command -v ruff >/dev/null 2>&1; then
+    lint
+else
+    echo "ci.sh: ruff not installed; skipping lint gate" \
+         "(pip install -r requirements-dev.txt)" >&2
+fi
 
 if [[ "${1:-}" == "--full" ]]; then
     shift

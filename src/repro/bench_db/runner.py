@@ -26,6 +26,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.bench_db.workloads import Workload
+from repro.core.build_service import BuildService
 from repro.core.executor import Database
 
 TUNING_FREQ_MS = {"fast": 100.0, "mod": 1000.0, "slow": 10000.0, "dis": None}
@@ -46,6 +47,19 @@ class RunConfig:
     num_shards: int = 1                           # >1: partition tables
                                                   # round-robin and fan scans
                                                   # out per shard (engine)
+    # Async tuning pipeline (core.build_service).  None keeps the
+    # legacy serialized schedule (tuning_cycle at burst boundaries).
+    # "deterministic" routes every cycle through the decide/apply
+    # split but drains all build quanta at the boundary -- bit-
+    # identical results and accounting to serialized, for any shard
+    # count (the invariance-test replay mode).  "overlap" drains
+    # quanta on a concurrent build lane between the burst's batched
+    # dispatches: build work no longer blocks queries (it is recorded
+    # as tuner_overlapped_ms), undrained quanta carry over to the
+    # next burst.
+    async_tuning: Optional[str] = None            # None|'deterministic'
+                                                  # |'overlap'
+    build_quantum_pages: int = 8                  # overlap-mode slice size
 
 
 @dataclass
@@ -55,6 +69,7 @@ class RunResult:
     cumulative_ms: float = 0.0        # queries + charged tuner work
     tuner_work_units: float = 0.0
     tuner_charged_ms: float = 0.0
+    tuner_overlapped_ms: float = 0.0  # build work on the concurrent lane
     wall_s: float = 0.0
     index_counts: List[int] = field(default_factory=list)
     built_fraction: List[float] = field(default_factory=list)
@@ -83,6 +98,7 @@ class RunResult:
             "p99_latency_ms": round(self.p99_latency_ms, 5),
             "tuner_work_units": round(self.tuner_work_units, 1),
             "tuner_charged_ms": round(self.tuner_charged_ms, 3),
+            "tuner_overlapped_ms": round(self.tuner_overlapped_ms, 3),
             "wall_s": round(self.wall_s, 2),
         }
 
@@ -99,6 +115,19 @@ def run_workload(db: Database, tuner, workload: Workload,
     """
     if cfg.num_shards != getattr(db, "num_shards", 1):
         db.reshard(cfg.num_shards)
+    if cfg.async_tuning not in (None, "deterministic", "overlap"):
+        raise ValueError(f"async_tuning: {cfg.async_tuning!r}")
+
+    # Async tuning pipeline: route cycles through the decide/apply
+    # split.  Deterministic mode keeps the serialized quantum slices
+    # (bit-exact replay); overlap mode sub-slices them so the engine
+    # can drain fine-grained quanta between burst dispatches.
+    overlap = cfg.async_tuning == "overlap"
+    service = None
+    if cfg.async_tuning is not None:
+        service = BuildService(
+            db, tuner,
+            quantum_pages=cfg.build_quantum_pages if overlap else None)
 
     res = RunResult()
     next_cycle_ms = (db.clock_ms + cfg.tuning_interval_ms
@@ -108,6 +137,28 @@ def run_workload(db: Database, tuner, workload: Workload,
     blocking_ms = 0.0   # carried into the next query's latency
     prev_phase = 0
 
+    def run_cycle(idle: bool) -> float:
+        """One due tuning cycle's *synchronous* work units."""
+        if service is None:
+            return tuner.tuning_cycle(idle=idle)
+        if cfg.async_tuning == "deterministic":
+            # Decide, then drain the whole queue at the boundary: the
+            # exact serialized schedule through the split pipeline.
+            return service.decide(idle=idle) + service.drain()
+        return service.decide(idle=idle)  # overlap: quanta drain in-burst
+
+    def overlap_quantum() -> float:
+        """One build quantum on the concurrent build lane (the
+        engine's between-dispatch hook): work is recorded but never
+        enters the blocking path.  Returns the quantum's work-ms."""
+        units = service.apply_next()
+        if units <= 0.0:
+            return 0.0
+        u_ms = units * cfg.time_per_unit_ms
+        res.tuner_work_units += units
+        res.tuner_overlapped_ms += u_ms
+        return u_ms
+
     def run_due_cycles():
         nonlocal next_cycle_ms, idle_credit_ms, blocking_ms
         if cfg.tuning_interval_ms is None:
@@ -115,7 +166,7 @@ def run_workload(db: Database, tuner, workload: Workload,
         fired = 0
         while db.clock_ms >= next_cycle_ms and fired < cfg.max_cycles_per_gap:
             idle = (db.clock_ms < idle_until_ms) or idle_credit_ms > 0.0
-            work = tuner.tuning_cycle(idle=idle)
+            work = run_cycle(idle)
             work_ms = work * cfg.time_per_unit_ms
             res.tuner_work_units += work
             absorbed = min(idle_credit_ms, work_ms)
@@ -129,6 +180,21 @@ def run_workload(db: Database, tuner, workload: Workload,
         if db.clock_ms >= next_cycle_ms:  # drop missed slots
             k = int((db.clock_ms - next_cycle_ms) // cfg.tuning_interval_ms) + 1
             next_cycle_ms += k * cfg.tuning_interval_ms
+        if overlap:
+            # Idle windows feed the concurrent build lane too: drain
+            # carryover quanta against the idle credit (the always-on
+            # tuner's idle-resource exploitation, now spike-free).
+            while idle_credit_ms > 0.0 and service.pending():
+                idle_credit_ms = max(idle_credit_ms - overlap_quantum(),
+                                     0.0)
+            if cfg.read_batch_size <= 1:
+                # No burst dispatches to interleave with: the build
+                # lane drains whole cycles at the boundary instead
+                # (still concurrent -- never enters the blocking
+                # path), so the tuner cannot silently no-op and the
+                # queue cannot grow without bound.
+                while service.pending():
+                    overlap_quantum()
 
     def account(phase, q, stats):
         """Per-query bookkeeping shared by the single and batch paths."""
@@ -170,35 +236,42 @@ def run_workload(db: Database, tuner, workload: Workload,
 
     import time as _time
     t_start = _time.perf_counter()
-    for phase, q in workload:
-        if phase != prev_phase:
-            flush_burst()
-            if cfg.drop_indexes_at_phase_end:
-                for name in list(db.indexes):
-                    db.drop_index(name)
-            idle_until_ms = db.clock_ms + cfg.idle_at_phase_start_ms
-            idle_credit_ms += cfg.idle_at_phase_start_ms
-            if cfg.idle_at_phase_start_ms > 0:
-                # traverse the idle window so due cycles fire inside it
-                end = idle_until_ms
-                while db.clock_ms < end and cfg.tuning_interval_ms:
-                    db.clock_ms = min(end, max(next_cycle_ms, db.clock_ms))
-                    run_due_cycles()
-                    if next_cycle_ms > end:
-                        break
-                db.clock_ms = max(db.clock_ms, end)
-            prev_phase = phase
-
-        if batch_n > 1 and q.kind == "scan" and q.join_table is None:
-            staged.append((phase, q))
-            if len(staged) >= batch_n:
+    if overlap:
+        db.engine.after_dispatch = overlap_quantum
+    try:
+        for phase, q in workload:
+            if phase != prev_phase:
                 flush_burst()
-            continue
+                if cfg.drop_indexes_at_phase_end:
+                    for name in list(db.indexes):
+                        db.drop_index(name)
+                idle_until_ms = db.clock_ms + cfg.idle_at_phase_start_ms
+                idle_credit_ms += cfg.idle_at_phase_start_ms
+                if cfg.idle_at_phase_start_ms > 0:
+                    # traverse the idle window so due cycles fire inside
+                    end = idle_until_ms
+                    while db.clock_ms < end and cfg.tuning_interval_ms:
+                        db.clock_ms = min(end, max(next_cycle_ms,
+                                                   db.clock_ms))
+                        run_due_cycles()
+                        if next_cycle_ms > end:
+                            break
+                    db.clock_ms = max(db.clock_ms, end)
+                prev_phase = phase
 
+            if batch_n > 1 and q.kind == "scan" and q.join_table is None:
+                staged.append((phase, q))
+                if len(staged) >= batch_n:
+                    flush_burst()
+                continue
+
+            flush_burst()
+            run_due_cycles()
+            stats = db.execute(q)
+            account(phase, q, stats)
         flush_burst()
-        run_due_cycles()
-        stats = db.execute(q)
-        account(phase, q, stats)
-    flush_burst()
+    finally:
+        if overlap:
+            db.engine.after_dispatch = None
     res.wall_s = _time.perf_counter() - t_start
     return res

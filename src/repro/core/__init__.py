@@ -11,8 +11,12 @@ The paper's contribution as composable pieces:
   execution engine with optimizer-style access-path selection.
 * ``tuner`` / ``baselines`` -- the predictive tuner plus the online /
   adaptive / self-managing / holistic baselines on the same substrate.
+* ``build_service`` -- the async tuning pipeline: decide/apply split
+  with interleavable build quanta drained between burst dispatches.
 * ``layout`` -- the storage-layout tuner it cooperates with (Fig. 9).
 """
+from repro.core.build_service import (BuildQuantum, BuildService, CyclePlan,
+                                      apply_quantum)
 from repro.core.cost_model import IndexDescriptor
 from repro.core.engine import ScanEngine, ShardScanResult
 from repro.core.executor import Database, ExecStats, Query
@@ -35,7 +39,8 @@ from repro.core.table import (ShardedTable, Table, load_table, make_table,
 from repro.core.tuner import PredictiveTuner, TunerConfig, make_dl_tuner
 
 __all__ = [
-    "AdHocIndex", "BatchScanResult", "BuiltIndex", "Database", "ExecStats",
+    "AdHocIndex", "BatchScanResult", "BuildQuantum", "BuildService",
+    "BuiltIndex", "CyclePlan", "Database", "ExecStats", "apply_quantum",
     "HybridPrefixResult", "IndexDescriptor", "PredictiveTuner", "Query",
     "QueryPlanner", "ScanEngine", "ScanPlan", "ScanResult", "ShardScanResult",
     "ShardedIndex", "ShardedTable", "ShardedVbpState", "Table", "TunerConfig",

@@ -21,10 +21,6 @@ Differences vs. the predictive tuner (Table I):
 """
 from __future__ import annotations
 
-from collections import Counter
-from dataclasses import dataclass
-from typing import Dict, Optional
-
 import numpy as np
 
 from repro.core import cost_model as cm

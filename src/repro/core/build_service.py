@@ -1,0 +1,133 @@
+"""Async tuning pipeline: decide/apply split over incremental builds.
+
+The paper's core claim is that continuous, lightweight physical-design
+changes beat stop-the-world tuning -- which only holds if index
+construction proceeds *concurrently* with query processing.  This
+module is the pipeline between the tuner and the kernels:
+
+* ``PredictiveTuner.decide`` runs the pure decision stages of
+  Algorithm 1 (classification, what-if utilities, knapsack, drops and
+  creates, forecaster update) and returns a ``CyclePlan`` whose build
+  work is an ordered list of ``BuildQuantum`` records instead of being
+  executed inline.
+* ``BuildService`` queues those quanta and applies them one at a time
+  (``core.index.advance_build`` slices -- ``build_pages_vap`` /
+  ``sharded_build_pages_vap`` under the hood).  The scan engine drains
+  the queue between the batched dispatches of a read burst
+  (``ScanEngine.after_dispatch``), so builds overlap the exact hot
+  path instead of stalling it; in-flight queries keep planning against
+  the stable catalog snapshot the planner froze at burst start
+  (``QueryPlanner.begin_snapshot``) while quanta advance
+  ``built_pages`` underneath.  The hybrid scan's ``start_page`` prefix
+  makes a partially-advanced build safe by construction: every page
+  outside the indexed prefix is table-scanned.
+* Quanta that could not be drained inside a burst stay queued -- the
+  cycle-budget carryover -- and a quantum whose index was dropped (or
+  finished) by a later decide step is skipped at apply time.
+
+Bit-exactness contract (deterministic-interleave mode)
+------------------------------------------------------
+``RunConfig.async_tuning == "deterministic"`` replays today's
+serialized schedule through the split pipeline: every due cycle runs
+``decide`` and then drains the *whole* queue before the burst
+executes.  Because ``decide`` performs the exact arithmetic of the
+legacy ``tuning_cycle`` (same stage order, same knapsack inputs, same
+drop/create sequence) and the drained quanta are the identical
+``min(pages_per_cycle, budget)`` slices applied in the identical
+index order, the results AND the cost/clock/monitor accounting are
+bit-identical to serialized tuning for any shard count
+(tests/test_async_tuning.py enforces 1 and 4).  ``"overlap"`` mode
+relaxes only the *schedule*: decide still fires on cycle boundaries,
+but quanta ride a concurrent build lane between burst dispatches, so
+their work never enters the blocking path (that is the latency-spike
+fix the paper argues for).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional
+
+from repro.core.index import split_build_pages
+
+
+@dataclass(frozen=True)
+class BuildQuantum:
+    """One interleavable slice of index-build work."""
+
+    index_name: str
+    pages: int
+
+
+@dataclass
+class CyclePlan:
+    """Output of a tuner's decide step: pending build work + the work
+    units the decision stages themselves consumed (zero for the
+    predictive tuner -- its decision stages are model arithmetic)."""
+
+    quanta: List[BuildQuantum] = field(default_factory=list)
+    decide_work: float = 0.0
+
+
+def apply_quantum(db, quantum: BuildQuantum) -> float:
+    """Apply one build quantum against the live catalog; returns work
+    units.  Skips (0.0) when the index was dropped or finished since
+    the quantum was planned -- later decide steps may reshape the
+    configuration while quanta are still queued."""
+    bi = db.indexes.get(quantum.index_name)
+    if bi is None or not bi.building or bi.scheme not in ("vap", "full"):
+        return 0.0
+    return db.vap_build_step(bi, quantum.pages)
+
+
+class BuildService:
+    """Quantum queue between a tuner's decide step and the engine.
+
+    ``quantum_pages`` sub-slices each cycle's per-index build step for
+    finer interleaving (overlap mode); ``None`` keeps the serialized
+    slice sizes, which the deterministic mode requires.  Tuners
+    without a ``decide`` method (the baseline tuners) fall back to
+    their monolithic ``tuning_cycle`` inside ``decide`` -- they behave
+    exactly as under serialized scheduling.
+    """
+
+    def __init__(self, db, tuner, quantum_pages: Optional[int] = None):
+        self.db = db
+        self.tuner = tuner
+        self.quantum_pages = quantum_pages
+        self.queue: Deque[BuildQuantum] = deque()
+
+    # -- decide: enqueue the cycle's build work --------------------------
+    def decide(self, idle: bool = False) -> float:
+        """Run the tuner's decision stages; queue the build quanta.
+        Returns the decide-stage work units (charged by the caller
+        exactly like legacy cycle work)."""
+        decide_fn = getattr(self.tuner, "decide", None)
+        if decide_fn is None:
+            # Legacy tuner: the whole cycle is one non-interleavable
+            # unit of work, applied immediately.
+            return self.tuner.tuning_cycle(idle=idle)
+        plan = decide_fn(idle=idle)
+        for q in plan.quanta:
+            for pages in split_build_pages(q.pages, self.quantum_pages):
+                self.queue.append(BuildQuantum(q.index_name, pages))
+        return plan.decide_work
+
+    # -- apply: drain quanta ---------------------------------------------
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def apply_next(self) -> float:
+        """Apply the oldest queued quantum; returns its work units
+        (0.0 on an empty queue or a stale quantum)."""
+        if not self.queue:
+            return 0.0
+        return apply_quantum(self.db, self.queue.popleft())
+
+    def drain(self) -> float:
+        """Apply every queued quantum (the deterministic-interleave
+        boundary drain); returns total work units."""
+        work = 0.0
+        while self.queue:
+            work += apply_quantum(self.db, self.queue.popleft())
+        return work

@@ -38,7 +38,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.hybrid_scan import (BatchScanResult, ScanResult,
+from repro.core.hybrid_scan import (BatchScanResult,
                                     _predicate_key_bounds,
                                     batched_full_table_scan,
                                     batched_hybrid_index_prefix,
@@ -331,7 +331,19 @@ def pmap_batched_full_table_scan(st: ShardedTable, attrs: tuple, los, his,
 # ---------------------------------------------------------------------------
 
 class ScanEngine:
-    """Dispatch strategy for planned scans over either storage layout."""
+    """Dispatch strategy for planned scans over either storage layout.
+
+    ``after_dispatch``, when set, is invoked after every batched group
+    dispatch -- the async tuning pipeline hangs its build-quantum
+    drain here, so incremental index builds interleave *between* the
+    dispatches of one read burst instead of stalling at burst
+    boundaries.  The planner's catalog snapshot keeps the burst's
+    remaining plans stable while the drained quanta advance
+    ``built_pages`` on the live records.
+    """
+
+    def __init__(self):
+        self.after_dispatch = None      # () -> None, set by the runner
 
     def scan(self, table, plan, attrs: tuple, los, his, ts, agg_attr: int):
         """Single planned scan -> ScanResult | ShardScanResult."""
@@ -354,6 +366,13 @@ class ScanEngine:
                                    attrs, los, his, ts, agg_attr)
         return hybrid_scan(table, plan.index_state, plan.key_attrs, attrs,
                            los, his, ts, agg_attr)
+
+    def dispatch_complete(self) -> None:
+        """Between-dispatch drain point.  The executor calls this after
+        each batched group dispatch has been timed, so hook work (build
+        quanta) never pollutes the dispatch's measured wall time."""
+        if self.after_dispatch is not None:
+            self.after_dispatch()
 
     def scan_batch(self, table, path: str, index_state, key_attrs: tuple,
                    attrs: tuple, los, his, tss, agg_attr: int,

@@ -33,10 +33,8 @@ import numpy as np
 from repro.core import cost_model as cm
 from repro.core.cost_model import IndexDescriptor
 from repro.core.engine import ScanEngine, ShardScanResult
-from repro.core.index import (ShardedIndex, ShardedVbpState, build_pages_vap,
-                              make_index, make_sharded_index,
-                              make_sharded_vbp, make_vbp,
-                              sharded_build_pages_vap,
+from repro.core.index import (ShardedVbpState, advance_build, make_index,
+                              make_sharded_index, make_sharded_vbp, make_vbp,
                               sharded_vbp_populate_subdomain,
                               vbp_invalidate_coverage, vbp_n_entries,
                               vbp_populate_subdomain)
@@ -45,7 +43,7 @@ from repro.core.monitor import QueryRecord, WorkloadMonitor
 from repro.core.planner import (HYBRID_SELECTIVITY_CUTOFF,  # noqa: F401
                                 BuiltIndex, IntervalUnion, QueryPlanner,
                                 scan_cost)
-from repro.core.table import (ShardedTable, Table, insert_rows, shard_table,
+from repro.core.table import (ShardedTable, insert_rows, shard_table,
                               sharded_insert_rows, sharded_update_rows,
                               unshard_table, update_rows)
 
@@ -303,39 +301,52 @@ class Database:
         """Plan, group and execute one burst of batchable scans."""
         # Plan each query exactly like _exec_scan would, then group by
         # (table, attrs, agg_attr, access path, index).  Plans cannot
-        # change mid-burst: reads never mutate tables or index state.
-        groups: Dict[tuple, list] = {}
-        for pos, q in pending:
-            plan = self.planner.plan_scan(q)
-            key = (q.table, tuple(q.attrs), q.agg_attr) + plan.group_key
-            groups.setdefault(key, []).append((pos, q, plan))
+        # change mid-burst: reads never mutate tables, and the catalog
+        # snapshot (double buffer) keeps every plan resolving against
+        # the burst-start index states even while the async build
+        # service advances ``built_pages`` between the group
+        # dispatches below.
+        self.planner.begin_snapshot()
+        try:
+            groups: Dict[tuple, list] = {}
+            for pos, q in pending:
+                plan = self.planner.plan_scan(q)
+                key = (q.table, tuple(q.attrs), q.agg_attr) + plan.group_key
+                groups.setdefault(key, []).append((pos, q, plan))
 
-        # Run each group in one dispatch (one fan-out per shard when
-        # the table is sharded); gather per-position raw rows.
-        ts = self.clock_ms_i32()
-        raw: Dict[int, tuple] = {}   # pos -> (sum, count, pages, entries,
-                                     #         start_page, wall_share)
-        for (table_name, attrs, agg_attr, _path, _idx), members in \
-                groups.items():
-            t = self.tables[table_name]
-            los = jnp.asarray([q.los for _, q, _ in members], jnp.int32)
-            his = jnp.asarray([q.his for _, q, _ in members], jnp.int32)
-            tss = jnp.full((len(members),), ts, jnp.int32)
-            plan = members[0][2]
-            t0 = time.perf_counter()
-            r = self.engine.scan_batch(t, plan.path, plan.index_state,
-                                       plan.key_attrs, attrs, los, his, tss,
-                                       agg_attr, use_kernel=use_kernel)
-            wall = time.perf_counter() - t0
-            agg_sums = np.asarray(r.agg_sum)
-            counts = np.asarray(r.count)
-            pages = np.asarray(r.pages_scanned)
-            entries = np.asarray(r.entries_probed)
-            starts = np.asarray(r.start_page)
-            for k, (pos, _q, _plan) in enumerate(members):
-                raw[pos] = (int(agg_sums[k]), int(counts[k]),
-                            int(pages[k]), int(entries[k]),
-                            int(starts[k]), wall / len(members))
+            # Run each group in one dispatch (one fan-out per shard when
+            # the table is sharded); gather per-position raw rows.
+            ts = self.clock_ms_i32()
+            raw: Dict[int, tuple] = {}   # pos -> (sum, count, pages,
+                                         #  entries, start_page, wall_share)
+            for (table_name, attrs, agg_attr, _path, _idx), members in \
+                    groups.items():
+                t = self.tables[table_name]
+                los = jnp.asarray([q.los for _, q, _ in members], jnp.int32)
+                his = jnp.asarray([q.his for _, q, _ in members], jnp.int32)
+                tss = jnp.full((len(members),), ts, jnp.int32)
+                plan = members[0][2]
+                t0 = time.perf_counter()
+                r = self.engine.scan_batch(t, plan.path, plan.index_state,
+                                           plan.key_attrs, attrs, los, his,
+                                           tss, agg_attr,
+                                           use_kernel=use_kernel)
+                wall = time.perf_counter() - t0
+                # Drain point between this group's dispatch and the
+                # next (outside the timed region: quantum work must
+                # not be charged to the burst's measured wall time).
+                self.engine.dispatch_complete()
+                agg_sums = np.asarray(r.agg_sum)
+                counts = np.asarray(r.count)
+                pages = np.asarray(r.pages_scanned)
+                entries = np.asarray(r.entries_probed)
+                starts = np.asarray(r.start_page)
+                for k, (pos, _q, _plan) in enumerate(members):
+                    raw[pos] = (int(agg_sums[k]), int(counts[k]),
+                                int(pages[k]), int(entries[k]),
+                                int(starts[k]), wall / len(members))
+        finally:
+            self.planner.end_snapshot()
 
         # Accounting replay in input order (host-side, same arithmetic
         # and clock/monitor trajectory as the per-query loop).
@@ -481,18 +492,12 @@ class Database:
     # Tuner-side physical work, charged by the caller
     # ------------------------------------------------------------------
     def vap_build_step(self, bi: BuiltIndex, pages: int) -> float:
-        """Advance a VAP/FULL index by ``pages`` pages; returns work
-        units.  On sharded storage the budget round-robins across
-        shards in global page order (index.sharded_build_pages_vap)."""
+        """Advance a VAP/FULL index by one resumable build quantum of
+        ``pages`` pages (``index.advance_build``); returns work units.
+        On sharded storage the budget round-robins across shards in
+        global page order (index.sharded_build_pages_vap)."""
         t = self.tables[bi.desc.table]
-        before = int(bi.vap.built_pages)
-        if isinstance(bi.vap, ShardedIndex):
-            bi.vap = sharded_build_pages_vap(bi.vap, t, bi.desc.key_attrs,
-                                             pages_per_cycle=pages)
-        else:
-            bi.vap = build_pages_vap(bi.vap, t, bi.desc.key_attrs,
-                                     pages_per_cycle=pages)
-        done = int(bi.vap.built_pages) - before
+        bi.vap, done = advance_build(bi.vap, t, bi.desc.key_attrs, pages)
         full_pages = int(t.n_rows) // t.page_size
         if int(bi.vap.built_pages) >= full_pages:
             bi.complete = True

@@ -447,6 +447,61 @@ def sharded_vbp_populate_subdomain(state: ShardedVbpState,
 
 
 # ---------------------------------------------------------------------------
+# Resumable build quanta (the async tuning pipeline's apply step)
+# ---------------------------------------------------------------------------
+
+def advance_build(state, table, key_attrs: tuple, pages: int):
+    """One resumable build quantum: advance the built prefix by up to
+    ``pages`` pages from the current watermark.
+
+    Dispatches to ``build_pages_vap`` / ``sharded_build_pages_vap`` by
+    storage layout and returns ``(state, pages_done)``.  Because the
+    VAP build is a pure function of ``built_pages``, a cycle's budget
+    can be applied as one call or as any sequence of smaller quanta
+    (``split_build_pages``) interleaved with query dispatches: the
+    resulting entry set, ``built_pages`` watermark and total work are
+    identical, only the schedule differs.  ``pages_done < pages`` when
+    the build clamps at the table's full-page watermark (the unused
+    budget is the caller's to carry over).
+    """
+    before = int(state.built_pages)
+    if isinstance(state, ShardedIndex):
+        state = sharded_build_pages_vap(state, table, key_attrs,
+                                        pages_per_cycle=int(pages))
+    else:
+        state = build_pages_vap(state, table, key_attrs,
+                                pages_per_cycle=int(pages))
+    return state, int(state.built_pages) - before
+
+
+def build_pages_remaining(state, table) -> int:
+    """Fully-populated pages not yet covered by the built prefix."""
+    full_pages = int(table.n_rows) // table.page_size
+    return max(full_pages - int(state.built_pages), 0)
+
+
+def split_build_pages(pages: int, quantum_pages: int | None):
+    """Slice one cycle's page budget into resumable build quanta.
+
+    ``quantum_pages=None`` (or a quantum at least as large as the
+    budget) keeps the whole slice as a single quantum -- the
+    deterministic-interleave mode relies on this to reproduce the
+    serialized build-call sequence exactly.
+    """
+    if pages <= 0:
+        return []
+    if quantum_pages is None or quantum_pages <= 0 or quantum_pages >= pages:
+        return [pages]
+    out = []
+    left = pages
+    while left > 0:
+        step = min(quantum_pages, left)
+        out.append(step)
+        left -= step
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Duck-typing helpers (planner/catalog code handles either storage)
 # ---------------------------------------------------------------------------
 

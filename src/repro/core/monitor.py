@@ -12,7 +12,7 @@ from __future__ import annotations
 
 from collections import Counter, deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, Iterable, Tuple
+from typing import Deque, Iterable, Tuple
 
 import numpy as np
 

@@ -69,6 +69,16 @@ class IntervalUnion:
         self.ivs = []
 
 
+def built_fraction_of(scheme: str, vap, vbp, table) -> float:
+    """Built fraction from raw index state (shared by the live catalog
+    record and the planner's frozen snapshot view)."""
+    if scheme in ("vap", "full"):
+        full_pages = max(int(table.n_rows) // table.page_size, 1)
+        return min(int(vap.built_pages) / full_pages, 1.0)
+    n = max(int(table.n_rows), 1)
+    return min(int(vbp_n_entries(vbp)) / n, 1.0)
+
+
 @dataclass
 class BuiltIndex:
     """Catalog entry for one built (or building) index."""
@@ -84,11 +94,7 @@ class BuiltIndex:
     last_used_ms: float = 0.0
 
     def built_fraction(self, table) -> float:
-        if self.scheme == "vap" or self.scheme == "full":
-            full_pages = max(int(table.n_rows) // table.page_size, 1)
-            return min(int(self.vap.built_pages) / full_pages, 1.0)
-        n = max(int(table.n_rows), 1)
-        return min(int(vbp_n_entries(self.vbp)) / n, 1.0)
+        return built_fraction_of(self.scheme, self.vap, self.vbp, table)
 
     def size_bytes(self) -> float:
         if self.scheme in ("vap", "full"):
@@ -97,16 +103,50 @@ class BuiltIndex:
 
 
 @dataclass(frozen=True)
+class IndexSnapshot:
+    """Frozen (front-buffer) view of one BuiltIndex's usable state.
+
+    Index states are immutable pytrees, so a snapshot is a reference
+    capture: while build quanta replace ``BuiltIndex.vap`` underneath
+    a running burst (the back buffer), every plan minted under the
+    snapshot keeps resolving against these captured states.
+    """
+
+    vap: Optional[object]
+    vbp: Optional[object]
+    complete: bool
+
+
+def _engine_state(path: str, vap, vbp):
+    """Raw sorted-entry state for the engine given an access path.
+
+    For the pure-VBP path over sharded storage the per-shard entry
+    arrays are re-wrapped as a ShardedIndex: the engine's pure index
+    scan only needs the entry shards, not the covering metadata.
+    """
+    if path == "pure_vbp":
+        if isinstance(vbp, ShardedVbpState):
+            return ShardedIndex(vbp.shards)
+        return vbp.index
+    return vap
+
+
+@dataclass(frozen=True)
 class ScanPlan:
     """One planned scan: the access path plus the index serving it.
 
     ``path`` is 'table' | 'hybrid' | 'pure_vbp' | 'pure_vap'.  The
     engine receives the raw index state via ``index_state`` so it
-    never touches catalog records.
+    never touches catalog records.  ``pinned_state`` is the index
+    state the plan was minted against -- the planner pins it at plan
+    time so an in-flight burst keeps a stable view while build quanta
+    advance the live catalog underneath (double buffering); plans
+    constructed by hand without a pin fall back to the live record.
     """
 
     path: str
     index: Optional[BuiltIndex] = None
+    pinned_state: Optional[object] = None
 
     @property
     def key_attrs(self) -> Tuple[int, ...]:
@@ -114,21 +154,13 @@ class ScanPlan:
 
     @property
     def index_state(self):
-        """Raw sorted-entry state for the engine (None for table scans).
-
-        For the pure-VBP path over sharded storage the per-shard entry
-        arrays are re-wrapped as a ShardedIndex: the engine's pure
-        index scan only needs the entry shards, not the covering
-        metadata.
-        """
+        """Raw sorted-entry state for the engine (None for table scans)."""
         bi = self.index
         if bi is None:
             return None
-        if self.path == "pure_vbp":
-            if isinstance(bi.vbp, ShardedVbpState):
-                return ShardedIndex(bi.vbp.shards)
-            return bi.vbp.index
-        return bi.vap
+        if self.pinned_state is not None:
+            return self.pinned_state
+        return _engine_state(self.path, bi.vap, bi.vbp)
 
     @property
     def group_key(self):
@@ -146,6 +178,29 @@ class QueryPlanner:
 
     def __init__(self, db):
         self.db = db
+        self._snap: Optional[dict] = None   # name -> IndexSnapshot
+
+    # -- catalog double buffering ----------------------------------------
+    def begin_snapshot(self) -> None:
+        """Freeze the catalog front buffer: every plan minted until
+        ``end_snapshot`` resolves index state, built fraction and
+        completeness against the states captured here, while build
+        quanta keep advancing the live (back-buffer) records."""
+        self._snap = {name: IndexSnapshot(bi.vap, bi.vbp, bi.complete)
+                      for name, bi in self.db.indexes.items()}
+
+    def end_snapshot(self) -> None:
+        """Swap the buffers: the next burst plans against whatever the
+        drained quanta built."""
+        self._snap = None
+
+    def _states(self, bi: BuiltIndex):
+        """(vap, vbp, complete) from the active snapshot, else live."""
+        if self._snap is not None:
+            snap = self._snap.get(bi.desc.name)
+            if snap is not None:
+                return snap.vap, snap.vbp, snap.complete
+        return bi.vap, bi.vbp, bi.complete
 
     # -- selectivity -----------------------------------------------------
     @staticmethod
@@ -165,10 +220,12 @@ class QueryPlanner:
         for bi in self.db.indexes.values():
             if not cm.index_matches(bi.desc, q.table, q.attrs):
                 continue
-            if bi.scheme == "full" and not bi.complete:
+            vap, vbp, complete = self._states(bi)
+            if bi.scheme == "full" and not complete:
                 continue
             covered = len(set(bi.desc.key_attrs) & set(q.attrs))
-            frac = bi.built_fraction(self.db.tables[q.table])
+            frac = built_fraction_of(bi.scheme, vap, vbp,
+                                     self.db.tables[q.table])
             if bi.scheme == "vbp":
                 lo, hi = self.vbp_host_bounds(bi, q)
                 if not bi.cov_union.covers(lo, hi):
@@ -184,11 +241,14 @@ class QueryPlanner:
             bi = self.choose_index(q)
         if bi is None:
             return ScanPlan("table")
+        vap, vbp, complete = self._states(bi)
         if bi.scheme == "vbp":
-            return ScanPlan("pure_vbp", bi)
-        if bi.scheme == "full" and bi.complete:
-            return ScanPlan("pure_vap", bi)
-        return ScanPlan("hybrid", bi)  # VAP (or FULL still building)
+            return ScanPlan("pure_vbp", bi,
+                            pinned_state=_engine_state("pure_vbp", vap, vbp))
+        if bi.scheme == "full" and complete:
+            return ScanPlan("pure_vap", bi, pinned_state=vap)
+        return ScanPlan("hybrid", bi,    # VAP (or FULL still building)
+                        pinned_state=vap)
 
     # -- VBP key bounds --------------------------------------------------
     @staticmethod

@@ -16,13 +16,15 @@ builds on recurring (e.g. diurnal) workloads in Figure 6.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import cost_model as cm
 from repro.core import knapsack
+from repro.core.build_service import (BuildQuantum, CyclePlan,
+                                      apply_quantum)
 from repro.core.classifier import (READ_INTENSIVE, UNKNOWN, WRITE_INTENSIVE,
                                    CartClassifier, default_classifier)
 from repro.core.cost_model import IndexDescriptor
@@ -103,8 +105,24 @@ class PredictiveTuner:
 
     # ---- Algorithm 1 ---------------------------------------------------
     def tuning_cycle(self, idle: bool = False) -> float:
+        """One serialized cycle: decide, then apply every build
+        quantum inline.  Kept as the composition of the split steps so
+        the serialized and async schedules cannot drift."""
+        plan = self.decide(idle=idle)
+        work = plan.decide_work
+        for quantum in plan.quanta:
+            work += apply_quantum(self.db, quantum)
+        return work
+
+    def decide(self, idle: bool = False) -> CyclePlan:
+        """The pure decision stages of Algorithm 1 (the async
+        pipeline's *decide* step): classification, what-if utilities,
+        knapsack, drops/creates and the forecaster update -- with the
+        cycle's bounded build work returned as ``BuildQuantum``
+        records instead of being executed inline.  Accounting is
+        unchanged: applying the quanta in order performs exactly the
+        work the legacy monolithic cycle did."""
         db, cfg = self.db, self.cfg
-        work = 0.0
         db.monitor.prune(db.clock_ms)
 
         # Stage I: workload classification
@@ -192,7 +210,10 @@ class PredictiveTuner:
             if name not in db.indexes:
                 db.create_index(self.descs[name], scheme=self.scheme)
 
-        # Lightweight build work, bounded per cycle (prevents spikes).
+        # Lightweight build work, bounded per cycle (prevents spikes);
+        # emitted as quanta in catalog order, exactly the slices the
+        # legacy inline loop applied.
+        quanta: List[BuildQuantum] = []
         budget_pages = cfg.max_build_pages_per_cycle
         building = [b for b in db.indexes.values()
                     if b.scheme in ("vap",) and b.building]
@@ -200,7 +221,7 @@ class PredictiveTuner:
             if budget_pages <= 0:
                 break
             step = min(cfg.pages_per_cycle, budget_pages)
-            work += db.vap_build_step(b, step)
+            quanta.append(BuildQuantum(b.desc.name, step))
             budget_pages -= step
 
         # Stage III: index utility forecasting ------------------------
@@ -214,7 +235,7 @@ class PredictiveTuner:
                 self.models[name] = st
                 self.forecasts[name] = float(hw.forecast(st, 1))
         self.cycles += 1
-        return work
+        return CyclePlan(quanta=quanta)
 
 
 def make_dl_tuner(db: Database, dl: str, config: TunerConfig | None = None,

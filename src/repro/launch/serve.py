@@ -17,7 +17,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.models import init_cache
 from repro.serving import BatchScheduler, PredictivePrefixCache
 from repro.train.steps import make_serve_steps
 from repro.models import init_params

@@ -8,7 +8,7 @@ what lets 140B-parameter cells lower and compile on a CPU host.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +17,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import SHAPES
 from repro.models import init_cache, init_params
 from repro.models.config import ModelConfig
-from repro.parallel.sharding import param_specs
 from repro.train.optimizer import adamw_init
 from repro.train.steps import TrainState
 

@@ -6,7 +6,6 @@ materialised at the 40 assigned (arch x shape) cells.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Dict, Optional, Tuple
 

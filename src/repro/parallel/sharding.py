@@ -26,7 +26,6 @@ import re
 from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 # logical -> physical mesh axis (or tuple of axes)

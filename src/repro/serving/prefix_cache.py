@@ -24,7 +24,7 @@ waiting for full materialisation (no admission latency spikes).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
 import numpy as np
 

@@ -10,8 +10,7 @@ compression lives in parallel/compression.py.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -80,7 +79,9 @@ def adamw_update(grads, state: AdamWState, params, lr,
         v_out = _quantize8(v_f) if bits8 else v_f
         return new_p, m_out, v_out
 
-    is_q = lambda x: isinstance(x, Quant8)
+    def is_q(x):
+        return isinstance(x, Quant8)
+
     flat_g, tdef = jax.tree.flatten(grads)
     flat_m = jax.tree.flatten(state.mu, is_leaf=is_q)[0]
     flat_v = jax.tree.flatten(state.nu, is_leaf=is_q)[0]

@@ -13,14 +13,13 @@ distributed-optimization trick.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.models import loss_fn, prefill, decode_step, init_cache
+from repro.models import loss_fn, prefill, decode_step
 from repro.models.config import ModelConfig
 from repro.parallel import compression
 from repro.train.optimizer import (AdamWState, adamw_init, adamw_update,

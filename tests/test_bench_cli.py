@@ -1,0 +1,42 @@
+"""Benchmark-driver CLI contract: --only typos fail loudly with the
+registry, --list prints it, and --json writes the nightly perf
+artifact the CI workflow uploads."""
+import json
+import sys
+
+import pytest
+
+from benchmarks import common
+from benchmarks import run as bench_run
+
+
+def test_only_typo_errors_with_known_names(monkeypatch):
+    monkeypatch.setattr(sys, "argv", ["run.py", "--only", "fig99"])
+    with pytest.raises(SystemExit) as ei:
+        bench_run.main()
+    msg = str(ei.value)
+    assert "fig99" in msg
+    for name in ("fig2", "fig10", "batched", "sharded", "async", "kernels"):
+        assert name in msg
+
+
+def test_list_prints_registry(monkeypatch, capsys):
+    monkeypatch.setattr(sys, "argv", ["run.py", "--list"])
+    bench_run.main()
+    names = capsys.readouterr().out.split()
+    assert "fig10" in names and "async" in names and "roofline" in names
+
+
+def test_json_artifact_records_emitted_rows(monkeypatch, tmp_path):
+    # --only roofline is the cheapest job: without dryrun artifacts it
+    # emits exactly one placeholder record.
+    out = tmp_path / "bench.json"
+    monkeypatch.setattr(sys, "argv",
+                        ["run.py", "--only", "roofline", "--json", str(out)])
+    bench_run.main()
+    payload = json.loads(out.read_text())
+    assert payload["records"], "no records captured"
+    assert payload["failures"] == []
+    for rec in payload["records"]:
+        assert set(rec) == {"name", "us_per_call", "derived"}
+    assert payload["records"] == common.RECORDS

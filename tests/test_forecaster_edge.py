@@ -1,0 +1,85 @@
+"""HWState edge cases: degenerate seasonality, constant series, and
+NaN-freedom from the very first observation.
+
+The tuner bootstraps a fresh Holt-Winters model for every candidate
+index and reads a forecast after as little as one update, so the
+forecaster must stay finite on degenerate inputs (zero utilities,
+season_len=1, flat series).  Property tests run through the sampling
+shim in tests/_hypothesis_compat.py when hypothesis is absent.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import forecaster as hw
+
+
+def _finite(*xs) -> bool:
+    return all(
+        bool(np.all(np.isfinite(np.asarray(x).ravel()))) for x in xs
+    )
+
+
+def test_season_len_one_matches_reference_oracle():
+    """m=1 collapses the seasonal ring to a single slot (every update
+    rewrites it); the jitted path must still track the numpy oracle."""
+    ys = np.array([5.0, 6.0, 7.5, 7.0, 9.0])
+    state = hw.init_state(1)
+    fcs = []
+    for y in ys:
+        state = hw.update(state, y)
+        fcs.append(float(hw.forecast(state, 1)))
+    levels, ref_fcs = hw.ref_holt_winters(ys, season_len=1)
+    assert _finite(fcs)
+    np.testing.assert_allclose(fcs, ref_fcs, rtol=1e-5, atol=1e-5)
+    assert float(state.level) == pytest.approx(levels[-1], rel=1e-5)
+
+
+def test_constant_series_forecasts_the_constant():
+    for m in (1, 4):
+        state = hw.init_state(m)
+        for _ in range(3 * m + 2):
+            state = hw.update(state, 42.0)
+        f = float(hw.forecast(state, 1))
+        assert _finite(state.level, state.trend, state.season, f)
+        assert f == pytest.approx(42.0, rel=1e-4)
+        assert float(state.trend) == pytest.approx(0.0, abs=1e-3)
+
+
+def test_single_update_is_nan_free():
+    """One observation bootstraps level=y, trend=0, seasonal factor 1:
+    the forecast is y itself and every state field is finite -- even
+    for a zero observation (floored at EPS)."""
+    for m in (1, 2, 16):
+        for y in (0.0, 1.0, 7.25, 1e6):
+            state = hw.update(hw.init_state(m), y)
+            assert _finite(state.level, state.trend, state.season)
+            f = float(hw.forecast(state, 1))
+            assert _finite(f)
+            assert f == pytest.approx(max(y, hw.EPS), rel=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    season_len=st.integers(1, 8),
+    n=st.integers(1, 24),
+    scale=st.floats(0.1, 1e5),
+    seed=st.integers(0, 10_000),
+)
+def test_update_tracks_reference_and_stays_finite(season_len, n, scale, seed):
+    """Random non-negative utility series: the jitted update/forecast
+    pair matches ref_holt_winters and never produces NaN/inf, for any
+    season length including the degenerate m=1."""
+    rng = np.random.default_rng(seed)
+    ys = rng.uniform(0.0, scale, size=n)
+    ys[rng.uniform(size=n) < 0.2] = 0.0  # zero utilities are common
+    state = hw.init_state(season_len)
+    fcs = []
+    for y in ys:
+        state = hw.update(state, y)
+        fcs.append(float(hw.forecast(state, 1)))
+    assert _finite(fcs)
+    assert _finite(state.level, state.trend, state.season)
+    assert all(f >= 0.0 for f in fcs)
+    _, ref_fcs = hw.ref_holt_winters(ys, season_len)
+    np.testing.assert_allclose(fcs, ref_fcs, rtol=1e-3, atol=1e-2)

@@ -6,12 +6,11 @@ much of the index is built, interleaved with MVCC updates/inserts.
 """
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.hybrid_scan import full_table_scan, hybrid_scan
 from repro.core.index import build_pages_vap, make_index
-from repro.core.table import insert_rows, load_table, update_rows
+from repro.core.table import load_table, update_rows
 
 PAGE = 8
 ATTRS = 4

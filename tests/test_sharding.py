@@ -5,7 +5,6 @@ import json
 import os
 import subprocess
 import sys
-import textwrap
 
 import pytest
 from jax.sharding import PartitionSpec as P
@@ -184,7 +183,8 @@ def test_spmd_8device_end_to_end():
                          capture_output=True, text=True, env=env,
                          timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]
-    line = [l for l in out.stdout.splitlines() if l.startswith("RESULTS:")]
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("RESULTS:")]
     assert line, out.stdout
     results = json.loads(line[0][len("RESULTS:"):])
     assert all(results.values()), results

@@ -1,13 +1,11 @@
 """End-to-end behaviour tests: the predictive tuner on workloads
 (detection, ahead-of-time builds, write-shift pruning), the baseline
 tuners, and the layout tuner."""
-import numpy as np
 import pytest
 
 from repro.bench_db import (QueryGen, RunConfig, make_tuner_db, run_workload)
-from repro.bench_db.workloads import (affinity_workload, hybrid_workload,
-                                      segments_workload)
-from repro.core import (Database, PredictiveTuner, Query, TunerConfig,
+from repro.bench_db.workloads import affinity_workload, hybrid_workload
+from repro.core import (Database, PredictiveTuner, TunerConfig,
                         make_dl_tuner)
 from repro.core.baselines import (AdaptiveTuner, DisabledTuner,
                                   HolisticTuner, OnlineTuner, SmixTuner)
