@@ -64,7 +64,8 @@ def run(n_queries: int = 128, n_rows: int = 20_000, page_size: int = 256,
         emit(f"batched_scan.{label}.execute_batch", us_q_batch,
              f"{n_queries}-query burst, grouped dispatches")
         emit(f"batched_scan.{label}.speedup", speedup,
-             f"{speedup:.2f}x queries/s vs per-query dispatch")
+             f"{speedup:.2f}x queries/s vs per-query dispatch",
+             speedup=speedup, direction="higher")
         if not quiet:
             print(f"# {label}: {us_q_loop:.1f} us/q -> {us_q_batch:.1f} us/q "
                   f"({speedup:.2f}x)")

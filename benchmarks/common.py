@@ -146,9 +146,30 @@ def reset_records() -> None:
     RECORDS.clear()
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
-    """The run.py CSV contract: name,us_per_call,derived."""
-    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 3),
-                    "derived": derived})
+def emit(name: str, us_per_call: float, derived: str,
+         speedup: float | None = None,
+         direction: str = "lower") -> None:
+    """The run.py CSV contract: name,us_per_call,derived.
+
+    ``us_per_call`` is the benchmark's central (median-style) latency
+    metric; ``speedup`` optionally records the benchmark's headline
+    ratio vs its own baseline.  Both land in the machine-readable
+    record (``--json``) that the nightly trajectory gate compares
+    across runs (benchmarks/trajectory.py).
+
+    ``direction`` declares how the gate should read ``us_per_call``:
+    "lower" (the default: a latency, lower is better), "higher" (a
+    throughput/speedup ratio, higher is better) or "info" (a count or
+    environment fact the gate must not judge).  Only non-default
+    directions are written into the record."""
+    if direction not in ("lower", "higher", "info"):
+        raise ValueError(f"emit direction: {direction!r}")
+    rec = {"name": name, "us_per_call": round(us_per_call, 3),
+           "median_ms": round(us_per_call / 1e3, 6), "derived": derived}
+    if speedup is not None:
+        rec["speedup"] = round(speedup, 4)
+    if direction != "lower":
+        rec["direction"] = direction
+    RECORDS.append(rec)
     print(f"{name},{us_per_call:.3f},{derived}")
     sys.stdout.flush()

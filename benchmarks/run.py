@@ -87,7 +87,7 @@ def main() -> None:
     from benchmarks import (async_tuning, batched_scan, fig2_schemes,
                             fig6_decision_logic, fig7_holistic,
                             fig8_affinity, fig9_layout, fig10_adaptability,
-                            sharded_scan)
+                            shard_tuning, sharded_scan)
     from benchmarks import common
 
     quick = args.quick
@@ -112,6 +112,9 @@ def main() -> None:
             n_rows=10_000 if quick else 20_000, quiet=True)),
         ("async", lambda: async_tuning.run(
             total=400 if quick else 1200, quiet=True)),
+        ("shard_tuning", lambda: shard_tuning.run(
+            total=240 if quick else 360,
+            phase_len=120 if quick else 180, quiet=True)),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),
     ]
@@ -142,7 +145,13 @@ def main() -> None:
     if args.json:
         import json
         import platform
+        # Stable BENCH_<prnum>.json schema (benchmarks/trajectory.py
+        # compares these run over run): bump "schema" only on
+        # incompatible record changes.  Each record carries name, the
+        # median-style latency (us_per_call / median_ms) and, where a
+        # benchmark has a baseline, its headline speedup.
         payload = {
+            "schema": 1,
             "created_unix_s": round(time.time(), 1),
             "argv": sys.argv[1:],
             "python": platform.python_version(),

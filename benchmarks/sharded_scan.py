@@ -80,7 +80,8 @@ def run(n_queries: int = 64, n_rows: int = 20_000, page_size: int = 256,
     devs = shard_fanout_devices(max(shard_counts))
     emit("sharded_scan.fanout_devices",
          float(len(devs) if devs else 1),
-         "devices available for one-device-per-shard pmap fan-out")
+         "devices available for one-device-per-shard pmap fan-out",
+         direction="info")
     return results
 
 

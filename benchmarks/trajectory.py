@@ -1,0 +1,98 @@
+"""Benchmark-trajectory gate: compare two BENCH_<prnum>.json records.
+
+The nightly CI job writes ``benchmarks.run --json`` records under a
+stable schema (see run.py) and compares them against the previous
+run's artifact:
+
+    PYTHONPATH=src python -m benchmarks.trajectory OLD.json NEW.json
+
+Exit status is non-zero when any benchmark present in BOTH records
+regressed by more than ``--threshold`` (default 15%) in its
+``us_per_call`` metric, or when the new run recorded failures.  A
+record's optional ``direction`` field declares how to judge it:
+"lower" (default: latency, an increase regresses), "higher"
+(throughput/speedup ratio, a decrease regresses) or "info" (never
+gated).  Benchmarks that only exist on one side are reported but
+never gate (the registry grows PR over PR); zero-valued placeholder
+records (e.g. roofline with no dryrun artifacts) are skipped.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_THRESHOLD = 0.15
+
+
+def load_records(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    if "records" not in payload:
+        raise SystemExit(f"trajectory: {path} has no 'records' "
+                         f"(not a benchmarks.run --json artifact?)")
+    return payload
+
+
+def compare(old: dict, new: dict, threshold: float = DEFAULT_THRESHOLD):
+    """Returns (regressions, report_lines)."""
+    old_by = {r["name"]: r for r in old["records"]}
+    new_by = {r["name"]: r for r in new["records"]}
+    lines, regressions = [], []
+    for name in sorted(set(old_by) | set(new_by)):
+        if name not in new_by:
+            lines.append(f"  - {name}: dropped from the registry")
+            continue
+        if name not in old_by:
+            lines.append(f"  + {name}: new benchmark "
+                         f"({new_by[name]['us_per_call']:.3f}us)")
+            continue
+        was, now = old_by[name]["us_per_call"], new_by[name]["us_per_call"]
+        direction = new_by[name].get("direction", "lower")
+        if was <= 0.0 or now <= 0.0 or direction == "info":
+            lines.append(f"    {name}: skipped "
+                         f"({'info record' if direction == 'info' else 'placeholder record'})")
+            continue
+        delta = (now - was) / was
+        # "higher" records (throughput/speedup ratios) regress when
+        # they DROP; flip the sign so the threshold reads one way.
+        regression = -delta if direction == "higher" else delta
+        marker = "    "
+        if regression > threshold:
+            marker = " !! "
+            regressions.append((name, was, now, delta))
+        lines.append(f"{marker}{name}: {was:.3f} -> {now:.3f} "
+                     f"({delta:+.1%}, {direction})")
+    return regressions, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("old", help="previous run's JSON artifact")
+    ap.add_argument("new", help="this run's JSON artifact")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="max tolerated fractional latency regression "
+                         "per benchmark (default 0.15)")
+    args = ap.parse_args(argv)
+
+    old, new = load_records(args.old), load_records(args.new)
+    regressions, lines = compare(old, new, args.threshold)
+    print(f"trajectory: {args.old} -> {args.new} "
+          f"(threshold {args.threshold:.0%})")
+    print("\n".join(lines))
+    if new.get("failures"):
+        print(f"trajectory: FAIL -- new run recorded benchmark failures: "
+              f"{new['failures']}")
+        return 1
+    if regressions:
+        print(f"trajectory: FAIL -- {len(regressions)} benchmark(s) "
+              f"regressed beyond {args.threshold:.0%}:")
+        for name, was, now, delta in regressions:
+            print(f"  {name}: {was:.3f} -> {now:.3f} ({delta:+.1%})")
+        return 1
+    print("trajectory: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

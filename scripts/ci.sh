@@ -19,9 +19,30 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # list as they get reformatted.
 RUFF_FORMAT_PATHS=(
     src/repro/core/build_service.py
+    src/repro/core/cost_model.py
+    src/repro/core/forecaster.py
+    src/repro/core/tuner.py
 )
 
+# Tracked-artifact gate: bytecode, pytest caches and benchmark JSON
+# must never be committed (.gitignore covers them; this catches
+# force-adds and stale history).
+tracked_artifacts() {
+    git ls-files | grep -E '(^|/)__pycache__/|\.pyc$|(^|/)\.pytest_cache/|(^|/)BENCH_[^/]*\.json$|(^|/)bench-[^/]*\.json$' || true
+}
+
+artifact_gate() {
+    local bad
+    bad="$(tracked_artifacts)"
+    if [[ -n "$bad" ]]; then
+        echo "ci.sh: tracked build artifacts found (purge with git rm --cached):" >&2
+        echo "$bad" >&2
+        exit 1
+    fi
+}
+
 lint() {
+    artifact_gate
     ruff check .
     ruff format --check "${RUFF_FORMAT_PATHS[@]}"
 }
@@ -34,6 +55,7 @@ fi
 if command -v ruff >/dev/null 2>&1; then
     lint
 else
+    artifact_gate   # the tracked-artifact gate needs no ruff
     echo "ci.sh: ruff not installed; skipping lint gate" \
          "(pip install -r requirements-dev.txt)" >&2
 fi

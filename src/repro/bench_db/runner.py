@@ -60,6 +60,15 @@ class RunConfig:
     async_tuning: Optional[str] = None            # None|'deterministic'
                                                   # |'overlap'
     build_quantum_pages: int = 8                  # overlap-mode slice size
+    build_queue_cap: int = 64                     # overlap-mode backpressure:
+                                                  # queue depth above which the
+                                                  # build lane escalates drains
+    # Shard-aware tuning: scans record per-shard page-access counters,
+    # the tuner forecasts per-shard heat and sizes per-shard build
+    # quanta by utility, and hybrid scans over diverged prefixes use
+    # the engine's per-shard stitch.  False keeps every path
+    # bit-identical to the legacy engine for any shard count.
+    shard_aware_tuning: bool = False
 
 
 @dataclass
@@ -73,6 +82,10 @@ class RunResult:
     wall_s: float = 0.0
     index_counts: List[int] = field(default_factory=list)
     built_fraction: List[float] = field(default_factory=list)
+    # build-lane telemetry (overlap mode): measured drain throughput
+    # and how often backpressure escalated the drain frequency
+    build_pages_per_ms: float = 0.0
+    build_escalations: int = 0
 
     def percentile(self, p: float) -> float:
         """Latency percentile, 0.0 on empty runs (np.percentile raises
@@ -99,6 +112,8 @@ class RunResult:
             "tuner_work_units": round(self.tuner_work_units, 1),
             "tuner_charged_ms": round(self.tuner_charged_ms, 3),
             "tuner_overlapped_ms": round(self.tuner_overlapped_ms, 3),
+            "build_pages_per_ms": round(self.build_pages_per_ms, 2),
+            "build_escalations": self.build_escalations,
             "wall_s": round(self.wall_s, 2),
         }
 
@@ -122,12 +137,14 @@ def run_workload(db: Database, tuner, workload: Workload,
     # split.  Deterministic mode keeps the serialized quantum slices
     # (bit-exact replay); overlap mode sub-slices them so the engine
     # can drain fine-grained quanta between burst dispatches.
+    db.shard_aware_tuning = bool(cfg.shard_aware_tuning)
     overlap = cfg.async_tuning == "overlap"
     service = None
     if cfg.async_tuning is not None:
         service = BuildService(
             db, tuner,
-            quantum_pages=cfg.build_quantum_pages if overlap else None)
+            quantum_pages=cfg.build_quantum_pages if overlap else None,
+            max_queue_depth=cfg.build_queue_cap if overlap else None)
 
     res = RunResult()
     next_cycle_ms = (db.clock_ms + cfg.tuning_interval_ms
@@ -148,16 +165,21 @@ def run_workload(db: Database, tuner, workload: Workload,
         return service.decide(idle=idle)  # overlap: quanta drain in-burst
 
     def overlap_quantum() -> float:
-        """One build quantum on the concurrent build lane (the
+        """One drain opportunity on the concurrent build lane (the
         engine's between-dispatch hook): work is recorded but never
-        enters the blocking path.  Returns the quantum's work-ms."""
-        units = service.apply_next()
-        if units <= 0.0:
-            return 0.0
-        u_ms = units * cfg.time_per_unit_ms
-        res.tuner_work_units += units
-        res.tuner_overlapped_ms += u_ms
-        return u_ms
+        enters the blocking path.  Applies ``drain_burst_size()``
+        quanta -- one in steady state, more while backpressure says
+        the queue is over its cap.  Returns the drained work-ms."""
+        total_ms = 0.0
+        for _ in range(service.drain_burst_size()):
+            units = service.apply_next()
+            if units <= 0.0:
+                continue
+            u_ms = units * cfg.time_per_unit_ms
+            res.tuner_work_units += units
+            res.tuner_overlapped_ms += u_ms
+            total_ms += u_ms
+        return total_ms
 
     def run_due_cycles():
         nonlocal next_cycle_ms, idle_credit_ms, blocking_ms
@@ -184,17 +206,14 @@ def run_workload(db: Database, tuner, workload: Workload,
             # Idle windows feed the concurrent build lane too: drain
             # carryover quanta against the idle credit (the always-on
             # tuner's idle-resource exploitation, now spike-free).
+            # Non-burst (single-dispatch) workloads need no boundary
+            # special-case any more: Database.execute now exposes the
+            # same between-dispatch drain point as the batched path,
+            # and backpressure (drain_burst_size) escalates those
+            # drains whenever the queue falls behind its cap.
             while idle_credit_ms > 0.0 and service.pending():
                 idle_credit_ms = max(idle_credit_ms - overlap_quantum(),
                                      0.0)
-            if cfg.read_batch_size <= 1:
-                # No burst dispatches to interleave with: the build
-                # lane drains whole cycles at the boundary instead
-                # (still concurrent -- never enters the blocking
-                # path), so the tuner cannot silently no-op and the
-                # queue cannot grow without bound.
-                while service.pending():
-                    overlap_quantum()
 
     def account(phase, q, stats):
         """Per-query bookkeeping shared by the single and batch paths."""
@@ -273,5 +292,8 @@ def run_workload(db: Database, tuner, workload: Workload,
     finally:
         if overlap:
             db.engine.after_dispatch = None
+    if service is not None:
+        res.build_pages_per_ms = service.pages_per_ms
+        res.build_escalations = service.escalations
     res.wall_s = _time.perf_counter() - t_start
     return res

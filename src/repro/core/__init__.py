@@ -28,9 +28,11 @@ from repro.core.hybrid_scan import (BatchScanResult, HybridPrefixResult,
                                     full_table_scan, hybrid_scan,
                                     pure_index_scan)
 from repro.core.index import (AdHocIndex, ShardedIndex, ShardedVbpState,
-                              VbpState, build_full, build_pages_vap,
-                              make_index, make_sharded_index,
-                              make_sharded_vbp, make_vbp,
+                              VbpState, advance_build_shard, build_full,
+                              build_pages_vap, make_index,
+                              make_sharded_index, make_sharded_vbp,
+                              make_vbp, prefix_is_round_robin,
+                              shard_full_pages, shard_remaining_pages,
                               sharded_build_pages_vap)
 from repro.core.planner import (BuiltIndex, QueryPlanner, ScanPlan,
                                 scan_cost)

@@ -44,19 +44,33 @@ fix the paper argues for).
 """
 from __future__ import annotations
 
+import itertools
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, List, Optional
 
 from repro.core.index import split_build_pages
 
+# EWMA weight for the build-lane throughput model (pages/ms).
+THROUGHPUT_EWMA_ALPHA = 0.25
+# Wall-time budget for one escalated drain opportunity: backpressure
+# raises how many quanta a drain applies, but the measured throughput
+# model caps the burst so the concurrent lane's real time per
+# opportunity stays bounded (an unbounded burst would be a stall).
+MAX_DRAIN_BURST_MS = 5.0
+
 
 @dataclass(frozen=True)
 class BuildQuantum:
-    """One interleavable slice of index-build work."""
+    """One interleavable slice of index-build work.
+
+    ``shard`` targets one shard's local built prefix (shard-aware
+    tuning); ``None`` keeps the legacy global-page-order build."""
 
     index_name: str
     pages: int
+    shard: Optional[int] = None
 
 
 @dataclass
@@ -77,7 +91,7 @@ def apply_quantum(db, quantum: BuildQuantum) -> float:
     bi = db.indexes.get(quantum.index_name)
     if bi is None or not bi.building or bi.scheme not in ("vap", "full"):
         return 0.0
-    return db.vap_build_step(bi, quantum.pages)
+    return db.vap_build_step(bi, quantum.pages, shard=quantum.shard)
 
 
 class BuildService:
@@ -89,13 +103,32 @@ class BuildService:
     without a ``decide`` method (the baseline tuners) fall back to
     their monolithic ``tuning_cycle`` inside ``decide`` -- they behave
     exactly as under serialized scheduling.
+
+    The service also maintains a *throughput model* for the build lane
+    (an EWMA of measured pages/ms per drained quantum) and applies
+    *backpressure*: when the queue depth exceeds ``max_queue_depth``,
+    ``drain_burst_size`` escalates how many quanta each drain
+    opportunity applies, so a tuner outpacing the lane bends the drain
+    frequency up instead of growing the queue without bound (or
+    blocking queries, which overlap mode never does).
     """
 
-    def __init__(self, db, tuner, quantum_pages: Optional[int] = None):
+    def __init__(
+        self,
+        db,
+        tuner,
+        quantum_pages: Optional[int] = None,
+        max_queue_depth: Optional[int] = None,
+    ):
         self.db = db
         self.tuner = tuner
         self.quantum_pages = quantum_pages
+        self.max_queue_depth = max_queue_depth
         self.queue: Deque[BuildQuantum] = deque()
+        # throughput model + backpressure telemetry
+        self.pages_per_ms: float = 0.0   # EWMA; 0.0 until first drain
+        self.drained_quanta: int = 0
+        self.escalations: int = 0
 
     # -- decide: enqueue the cycle's build work --------------------------
     def decide(self, idle: bool = False) -> float:
@@ -110,7 +143,7 @@ class BuildService:
         plan = decide_fn(idle=idle)
         for q in plan.quanta:
             for pages in split_build_pages(q.pages, self.quantum_pages):
-                self.queue.append(BuildQuantum(q.index_name, pages))
+                self.queue.append(BuildQuantum(q.index_name, pages, q.shard))
         return plan.decide_work
 
     # -- apply: drain quanta ---------------------------------------------
@@ -119,15 +152,68 @@ class BuildService:
 
     def apply_next(self) -> float:
         """Apply the oldest queued quantum; returns its work units
-        (0.0 on an empty queue or a stale quantum)."""
+        (0.0 on an empty queue or a stale quantum).  Every applied
+        quantum feeds the throughput model with its measured wall
+        time (pure telemetry: simulated accounting never reads it)."""
         if not self.queue:
             return 0.0
-        return apply_quantum(self.db, self.queue.popleft())
+        quantum = self.queue.popleft()
+        t0 = time.perf_counter()
+        work = apply_quantum(self.db, quantum)
+        if work > 0.0:
+            dt_ms = max((time.perf_counter() - t0) * 1e3, 1e-6)
+            rate = quantum.pages / dt_ms
+            a = THROUGHPUT_EWMA_ALPHA
+            if self.pages_per_ms == 0.0:
+                self.pages_per_ms = rate
+            else:
+                self.pages_per_ms = (1.0 - a) * self.pages_per_ms + a * rate
+            self.drained_quanta += 1
+        return work
+
+    # -- throughput model + backpressure ---------------------------------
+    def drain_burst_size(self) -> int:
+        """How many quanta the next drain opportunity should apply.
+
+        One per opportunity in steady state; when the queue depth
+        exceeds ``max_queue_depth`` the factor scales with the excess
+        (ceil(depth / cap)), which escalates the effective drain
+        frequency until the queue is back under the cap.  The
+        throughput model bounds the escalation: the burst shrinks
+        until its ``estimated_drain_ms`` fits ``MAX_DRAIN_BURST_MS``,
+        so catching up never turns into a stall of its own."""
+        depth = len(self.queue)
+        if depth == 0:
+            return 0
+        if self.max_queue_depth is None or depth <= self.max_queue_depth:
+            return 1
+        self.escalations += 1
+        burst = -(-depth // self.max_queue_depth)
+        if self.pages_per_ms > 0.0:
+            pages = [q.pages for q in itertools.islice(self.queue, burst)]
+            while burst > 1:
+                est = self.estimated_drain_ms(sum(pages[:burst]))
+                if est <= MAX_DRAIN_BURST_MS:
+                    break
+                burst -= 1
+        return burst
+
+    def estimated_drain_ms(self, pages: Optional[int] = None) -> float:
+        """Measured-throughput estimate of draining ``pages`` build
+        pages (default: the whole queue); inf before the model has a
+        measurement."""
+        if pages is None:
+            pages = sum(q.pages for q in self.queue)
+        if pages <= 0:
+            return 0.0
+        if self.pages_per_ms <= 0.0:
+            return float("inf")
+        return pages / self.pages_per_ms
 
     def drain(self) -> float:
         """Apply every queued quantum (the deterministic-interleave
         boundary drain); returns total work units."""
         work = 0.0
         while self.queue:
-            work += apply_quantum(self.db, self.queue.popleft())
+            work += self.apply_next()
         return work

@@ -14,13 +14,16 @@ reinforcement signal be bootstrapped from what-if estimates (Algorithm
     IMC(I, W) = sum_w  tau(w, I)                 (index maintenance cost)
     OverallUtility = QPU - IMC
 """
+
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Iterable
+from typing import Iterable, Sequence
 
-from repro.core.monitor import QueryRecord, AttrSet
+import numpy as np
+
+from repro.core.monitor import AttrSet, QueryRecord
 
 # Relative per-tuple cost constants.  An index entry probe is cheaper
 # than a heap-tuple inspection (sorted, narrow); maintenance writes are
@@ -42,20 +45,30 @@ class IndexDescriptor:
         return f"{self.table}:{','.join(map(str, self.key_attrs))}"
 
 
-def index_matches(desc: IndexDescriptor, table: str, pred_attrs: AttrSet) -> bool:
+def index_matches(
+    desc: IndexDescriptor, table: str, pred_attrs: AttrSet
+) -> bool:
     """Can ``desc`` accelerate a predicate over ``pred_attrs``?  The
     index's *leading* attribute must be constrained (classic B-tree /
     sorted-run matching rule)."""
-    return (desc.table == table and len(desc.key_attrs) > 0
-            and desc.key_attrs[0] in pred_attrs)
+    return (
+        desc.table == table
+        and len(desc.key_attrs) > 0
+        and desc.key_attrs[0] in pred_attrs
+    )
 
 
 def eta_table_scan(n_rows: int) -> float:
     return float(n_rows) * (1.0 + PAGE_OVERHEAD)
 
 
-def eta_with_index(n_rows: int, selectivity: float, built_fraction: float,
-                   covered_attrs: int, pred_attrs: int) -> float:
+def eta_with_index(
+    n_rows: int,
+    selectivity: float,
+    built_fraction: float,
+    covered_attrs: int,
+    pred_attrs: int,
+) -> float:
     """Cost of the (hybrid) scan using a partially built index.
 
     The indexed prefix costs selectivity * rows_indexed entry probes;
@@ -69,7 +82,8 @@ def eta_with_index(n_rows: int, selectivity: float, built_fraction: float,
     f = min(max(built_fraction, 0.0), 1.0)
     sel = min(max(selectivity, 0.0), 1.0)
     coverage_discount = 1.0 if covered_attrs >= pred_attrs else 1.25
-    probe = math.log2(n + 1.0) + sel * n * f * INDEX_PROBE_COST * coverage_discount
+    probe_cost = INDEX_PROBE_COST * coverage_discount
+    probe = math.log2(n + 1.0) + sel * n * f * probe_cost
     rest = (1.0 - f) * n
     return probe + rest
 
@@ -78,8 +92,12 @@ def tau_maintenance(rows_modified: int) -> float:
     return MAINT_COST_PER_ROW * float(rows_modified)
 
 
-def qpu(desc: IndexDescriptor, scans: Iterable[QueryRecord],
-        n_rows: int, built_fraction: float = 1.0) -> float:
+def qpu(
+    desc: IndexDescriptor,
+    scans: Iterable[QueryRecord],
+    n_rows: int,
+    built_fraction: float = 1.0,
+) -> float:
     """Query-processing utility of ``desc`` over the scan set (what-if:
     compares a plain table scan against the index at built_fraction)."""
     total = 0.0
@@ -87,8 +105,9 @@ def qpu(desc: IndexDescriptor, scans: Iterable[QueryRecord],
         if not index_matches(desc, r.table, r.pred_attrs):
             continue
         covered = len(set(desc.key_attrs) & set(r.pred_attrs))
-        with_idx = eta_with_index(n_rows, r.selectivity, built_fraction,
-                                  covered, len(r.pred_attrs))
+        with_idx = eta_with_index(
+            n_rows, r.selectivity, built_fraction, covered, len(r.pred_attrs)
+        )
         without = eta_table_scan(n_rows)
         total += max(without - with_idx, 0.0)
     return total
@@ -104,24 +123,31 @@ def imc(desc: IndexDescriptor, mutators: Iterable[QueryRecord]) -> float:
     return total
 
 
-def overall_utility(desc: IndexDescriptor, scans, mutators, n_rows: int,
-                    built_fraction: float = 1.0) -> float:
-    return (qpu(desc, scans, n_rows, built_fraction)
-            - imc(desc, mutators))
+def overall_utility(
+    desc: IndexDescriptor,
+    scans,
+    mutators,
+    n_rows: int,
+    built_fraction: float = 1.0,
+) -> float:
+    return qpu(desc, scans, n_rows, built_fraction) - imc(desc, mutators)
 
 
-def update_lookup_utility(desc: IndexDescriptor,
-                          mutators: Iterable[QueryRecord],
-                          n_rows: int) -> float:
+def update_lookup_utility(
+    desc: IndexDescriptor, mutators: Iterable[QueryRecord], n_rows: int
+) -> float:
     """Utility an index provides to UPDATE row lookup (the paper keeps
     such indexes even in write-intensive phases, footnote 1)."""
     total = 0.0
     for w in mutators:
-        if w.kind != "update" or not index_matches(desc, w.table, w.pred_attrs):
+        if w.kind != "update":
+            continue
+        if not index_matches(desc, w.table, w.pred_attrs):
             continue
         covered = len(set(desc.key_attrs) & set(w.pred_attrs))
-        with_idx = eta_with_index(n_rows, w.selectivity, 1.0, covered,
-                                  len(w.pred_attrs))
+        with_idx = eta_with_index(
+            n_rows, w.selectivity, 1.0, covered, len(w.pred_attrs)
+        )
         total += max(eta_table_scan(n_rows) - with_idx, 0.0)
     return total
 
@@ -130,3 +156,76 @@ def index_size_bytes(n_rows: int) -> float:
     """Estimated storage footprint: 12 bytes/entry (two int32 key
     components + int32 rid)."""
     return 12.0 * float(n_rows)
+
+
+# ---------------------------------------------------------------------------
+# Per-shard build utility (shard-aware tuning)
+# ---------------------------------------------------------------------------
+#
+# On sharded storage the what-if utility of ONE more built page is not
+# uniform: a page on a shard whose table-scan suffix the workload keeps
+# touching saves ``page_size`` tuple-touches per future scan, while a
+# page on a cold (or already fully built) shard saves nothing.  The
+# monitor's per-shard page-access counters measure the former; the
+# remaining-unbuilt-page vector caps the latter.  These are advisory
+# signals -- they drive the tuner's build *schedule*, never query
+# results or accounting.
+
+
+def shard_build_utility(
+    heat: Sequence[float], remaining: Sequence[int], page_size: int
+) -> np.ndarray:
+    """Forecast utility of the next built page, per shard.
+
+    ``heat`` is (forecast) pages-scanned per shard over the window;
+    ``remaining`` the unbuilt fully-populated pages per shard.  A shard
+    with nothing left to build has zero utility regardless of heat; a
+    shard with work left keeps a small floor so fresh shards (no
+    observations yet) still receive budget."""
+    heat = np.asarray(heat, np.float64)
+    remaining = np.asarray(remaining, np.int64)
+    util = (heat + 1.0) * float(page_size)
+    return np.where(remaining > 0, util, 0.0)
+
+
+def allocate_build_pages(
+    utilities: Sequence[float], remaining: Sequence[int], budget: int
+) -> np.ndarray:
+    """Split one cycle's page ``budget`` across shards proportionally
+    to forecast utility, capped by each shard's remaining pages.
+
+    Deterministic (largest-remainder rounding, ties to the lower shard
+    id) so serialized and deterministic-async schedules emit identical
+    per-shard quanta.  Unplaceable budget -- every positive-utility
+    shard already full -- is simply not allocated: unlike the global
+    round-robin this never wastes cycles on complete shards."""
+    util = np.asarray(utilities, np.float64)
+    remaining = np.asarray(remaining, np.int64)
+    alloc = np.zeros(len(util), np.int64)
+    budget = int(budget)
+    while budget > 0:
+        open_mask = (remaining - alloc > 0) & (util > 0.0)
+        if not open_mask.any():
+            break
+        w = np.where(open_mask, util, 0.0)
+        share = w * (budget / w.sum())
+        floor = np.minimum(np.floor(share).astype(np.int64), remaining - alloc)
+        left = budget - int(floor.sum())
+        if left > 0:
+            # largest fractional remainder first; ties to lower shard id
+            frac = np.where(
+                open_mask & (floor < remaining - alloc),
+                share - np.floor(share),
+                -1.0,
+            )
+            order = np.lexsort((np.arange(len(util)), -frac))
+            for s in order:
+                if left <= 0 or frac[s] < 0.0:
+                    break
+                floor[s] += 1
+                left -= 1
+        if floor.sum() == 0:
+            break  # nothing placeable this round
+        alloc += floor
+        budget = left
+    return alloc

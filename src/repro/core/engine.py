@@ -185,6 +185,105 @@ def sharded_pure_index_scan(st: ShardedTable, index: ShardedIndex,
 
 
 # ---------------------------------------------------------------------------
+# Per-shard hybrid stitch (shard-aware tuning: relaxed prefix invariant)
+# ---------------------------------------------------------------------------
+#
+# When build budget is routed per shard (or the table's layout is not
+# round-robin), the union of shard-local built prefixes is no longer
+# one global page prefix, so the global stitch point is meaningless --
+# and, on skewed layouts, unsound.  The per-shard stitch needs no
+# cross-shard reduction at all: each shard's entries are local, so the
+# single-table stitch rule (start = max(rho_m, built), index prefix
+# below it, table scan at/after it) applies shard by shard.  Aggregates
+# stay bit-exact: the same rows are counted exactly once, only the
+# *schedule* of which pages ride the index differs.  ``pages_scanned``
+# sums the per-shard table suffixes; the reported ``start_page`` is the
+# smallest global-equivalent stitch point (``lstart * S + s`` is the
+# first table-scanned global page of shard s), which degenerates to the
+# global stitch point whenever the prefixes are round-robin-consistent.
+
+
+def _pershard_stitch(t: Table, ix: AdHocIndex, s: int, S: int,
+                     key_attrs: tuple, attrs: tuple, lo, hi, ts):
+    """One shard's local hybrid stitch: (idx_keep, pg, sl, entry_mask,
+    tbl_mask, pages_suffix, global_equiv_start)."""
+    idx_match, _gpg, pg, sl, entry_mask, _ = _shard_index_probe(
+        t, ix, s, S, key_attrs, attrs, lo, hi, ts)
+    lrho = jnp.max(jnp.where(idx_match, pg, -1))
+    lstart = jnp.maximum(lrho, ix.built_pages)
+    idx_keep = idx_match & (pg < lstart)
+    page_ids = jnp.arange(t.n_pages, dtype=jnp.int32)[:, None]
+    tbl_mask = (conj_predicate_mask(t, attrs, lo, hi)
+                & visible_mask(t, ts) & (page_ids >= lstart))
+    lused = ((t.n_rows + t.page_size - 1) // t.page_size).astype(jnp.int32)
+    pages = jnp.clip(lused - lstart, 0, None).astype(jnp.int32)
+    gstart = (lstart * S + s).astype(jnp.int32)
+    return idx_keep, pg, sl, entry_mask, tbl_mask, pages, gstart
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def sharded_hybrid_scan_pershard(st: ShardedTable, index: ShardedIndex,
+                                 key_attrs: tuple, attrs: tuple, los, his,
+                                 ts, agg_attr: int) -> ShardScanResult:
+    S = len(st.shards)
+    sums, cnts, ents, contribs, pages, gstarts = [], [], [], [], [], []
+    for s, (t, ix) in enumerate(zip(st.shards, index.shards)):
+        idx_keep, pg, sl, entry_mask, tbl_mask, pages_s, gstart = \
+            _pershard_stitch(t, ix, s, S, key_attrs, attrs, los, his, ts)
+        vals = t.data[:, :, agg_attr]
+        sums.append(jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0),
+                            dtype=jnp.int32)
+                    + jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32))
+        cnts.append(jnp.sum(idx_keep, dtype=jnp.int32)
+                    + jnp.sum(tbl_mask, dtype=jnp.int32))
+        ents.append(jnp.sum(entry_mask, dtype=jnp.int32))
+        contrib = jnp.zeros((t.n_pages, t.page_size), jnp.int32)
+        contrib = contrib.at[pg, sl].add(idx_keep.astype(jnp.int32))
+        contribs.append(contrib + tbl_mask.astype(jnp.int32))
+        pages.append(pages_s)
+        gstarts.append(gstart)
+    return ShardScanResult(tree_reduce(sums), tree_reduce(cnts),
+                           tuple(contribs), tree_reduce(pages),
+                           tree_reduce(ents),
+                           tree_reduce(gstarts, jnp.minimum))
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def sharded_batched_hybrid_scan_pershard(st: ShardedTable,
+                                         index: ShardedIndex,
+                                         key_attrs: tuple, attrs: tuple,
+                                         los, his, tss, agg_attr: int
+                                         ) -> BatchScanResult:
+    """B hybrid scans with shard-local stitch points: no cross-shard
+    rho_m reduction pass -- each shard stitches its own index prefix to
+    its own table suffix, so the fan-out is a single pass."""
+    S = len(st.shards)
+    sums, cnts, ents, pages, gstarts = [], [], [], [], []
+    for s, (t, ix) in enumerate(zip(st.shards, index.shards)):
+        def one(lo, hi, ts, t=t, ix=ix, s=s):
+            idx_keep, pg, sl, entry_mask, tbl_mask, pages_s, gstart = \
+                _pershard_stitch(t, ix, s, S, key_attrs, attrs, lo, hi, ts)
+            vals = t.data[:, :, agg_attr]
+            s_ = jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0),
+                         dtype=jnp.int32) \
+                + jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
+            c_ = jnp.sum(idx_keep, dtype=jnp.int32) \
+                + jnp.sum(tbl_mask, dtype=jnp.int32)
+            return s_, c_, jnp.sum(entry_mask, dtype=jnp.int32), \
+                pages_s, gstart
+
+        s_, c_, e_, p_, g_ = jax.vmap(one)(los, his, tss)
+        sums.append(s_)
+        cnts.append(c_)
+        ents.append(e_)
+        pages.append(p_)
+        gstarts.append(g_)
+    return BatchScanResult(tree_reduce(sums), tree_reduce(cnts),
+                           tree_reduce(pages), tree_reduce(ents),
+                           tree_reduce(gstarts, jnp.minimum))
+
+
+# ---------------------------------------------------------------------------
 # Sharded batched scans (the read-burst fan-out)
 # ---------------------------------------------------------------------------
 
@@ -356,6 +455,10 @@ class ScanEngine:
                 return sharded_pure_index_scan(table, plan.index_state,
                                                plan.key_attrs, attrs, los,
                                                his, ts, agg_attr)
+            if path == "hybrid_ps":
+                return sharded_hybrid_scan_pershard(table, plan.index_state,
+                                                    plan.key_attrs, attrs,
+                                                    los, his, ts, agg_attr)
             return sharded_hybrid_scan(table, plan.index_state,
                                        plan.key_attrs, attrs, los, his, ts,
                                        agg_attr)
@@ -391,7 +494,7 @@ class ScanEngine:
                                               agg_attr)
             return batched_full_table_scan(table, attrs, los, his, tss,
                                            agg_attr)
-        if path == "hybrid":
+        if path in ("hybrid", "hybrid_ps"):  # plain tables have no shards
             if kernel_ok:
                 return self._kernel_hybrid_scan(table, index_state,
                                                 key_attrs, attrs, los, his,
@@ -449,5 +552,8 @@ class ScanEngine:
         if path == "hybrid":
             return sharded_batched_hybrid_scan(table, index_state, key_attrs,
                                                attrs, los, his, tss, agg_attr)
+        if path == "hybrid_ps":
+            return sharded_batched_hybrid_scan_pershard(
+                table, index_state, key_attrs, attrs, los, his, tss, agg_attr)
         return sharded_batched_pure_index_scan(table, index_state, key_attrs,
                                                attrs, los, his, tss, agg_attr)

@@ -33,8 +33,10 @@ import numpy as np
 from repro.core import cost_model as cm
 from repro.core.cost_model import IndexDescriptor
 from repro.core.engine import ScanEngine, ShardScanResult
-from repro.core.index import (ShardedVbpState, advance_build, make_index,
+from repro.core.index import (ShardedIndex, ShardedVbpState, advance_build,
+                              advance_build_shard, make_index,
                               make_sharded_index, make_sharded_vbp, make_vbp,
+                              shard_full_pages,
                               sharded_vbp_populate_subdomain,
                               vbp_invalidate_coverage, vbp_n_entries,
                               vbp_populate_subdomain)
@@ -43,7 +45,8 @@ from repro.core.monitor import QueryRecord, WorkloadMonitor
 from repro.core.planner import (HYBRID_SELECTIVITY_CUTOFF,  # noqa: F401
                                 BuiltIndex, IntervalUnion, QueryPlanner,
                                 scan_cost)
-from repro.core.table import (ShardedTable, insert_rows, shard_table,
+from repro.core.table import (ShardedTable, insert_rows,
+                              round_robin_layout, shard_table,
                               sharded_insert_rows, sharded_update_rows,
                               unshard_table, update_rows)
 
@@ -83,6 +86,8 @@ class ExecStats:
     count: int = 0
     rows_modified: int = 0
     populate_units: float = 0.0     # in-query VBP population work (spikes)
+    shard_pages: Tuple[int, ...] = ()  # per-shard pages the access path
+                                       # touched (shard-aware tuning only)
 
 
 class Database:
@@ -104,6 +109,15 @@ class Database:
         self.clock_ms: float = 0.0
         self.time_per_unit_ms = time_per_unit_ms
         self.update_cap = 512       # max rows materialised per UPDATE
+        # Shard-aware tuning (RunConfig.shard_aware_tuning): when set,
+        # scans record per-shard page-access counters and build quanta
+        # may target single shards.  ``pershard_built`` tracks indexes
+        # whose shard-local prefixes have diverged from the global
+        # round-robin prefix -- their hybrid scans must use the
+        # per-shard stitch (planner._needs_pershard_stitch).
+        self.shard_aware_tuning: bool = False
+        self.pershard_built: set = set()
+        self._round_robin_cache: Dict[str, bool] = {}
         self.planner = QueryPlanner(self)
         self.engine = ScanEngine()
         counts = {t.n_shards for t in self.tables.values()
@@ -139,6 +153,18 @@ class Database:
             self.tables[name] = shard_table(t, num_shards) \
                 if num_shards > 1 else t
         self.num_shards = num_shards
+        self._round_robin_cache.clear()
+
+    def table_is_round_robin(self, name: str) -> bool:
+        """Cached: does ``name``'s shard layout follow the round-robin
+        page map?  Mutators preserve the property either way, so the
+        answer only changes on reshard (which clears the cache)."""
+        got = self._round_robin_cache.get(name)
+        if got is None:
+            t = self.tables[name]
+            got = not isinstance(t, ShardedTable) or round_robin_layout(t)
+            self._round_robin_cache[name] = got
+        return got
 
     # ------------------------------------------------------------------
     # Index configuration actions (used by tuners)
@@ -160,6 +186,7 @@ class Database:
 
     def drop_index(self, name: str) -> None:
         self.indexes.pop(name, None)
+        self.pershard_built.discard(name)
 
     def indexes_on(self, table: str):
         return [b for b in self.indexes.values() if b.desc.table == table]
@@ -186,6 +213,11 @@ class Database:
             stats = self._exec_insert(q)
         else:
             raise ValueError(q.kind)
+        # Non-burst drain point: single-dispatch workloads feed the
+        # concurrent build lane exactly like the batched path does
+        # between group dispatches (no-op unless overlap scheduling
+        # installed a hook; the statement's timed region is closed).
+        self.engine.dispatch_complete()
         self.clock_ms += stats.latency_ms
         if observe:
             n_rows = int(self.tables[q.table].n_rows)
@@ -197,7 +229,8 @@ class Database:
                 tuples_scanned=int(stats.cost_units),
                 used_index=stats.used_index,
                 rows_modified=stats.rows_modified,
-                ts_ms=self.clock_ms, template=q.template))
+                ts_ms=self.clock_ms, template=q.template,
+                shard_pages=stats.shard_pages))
             if q.join_table is not None:
                 # The inner side of an equi-join is an indexable access
                 # path too (HIGH-S benefits from join-attribute indexes).
@@ -227,7 +260,7 @@ class Database:
 
         if plan.path == "table":
             start_page, entries = 0, 0.0
-        elif plan.path == "hybrid":
+        elif plan.path in ("hybrid", "hybrid_ps"):
             start_page = int(r.start_page)
             entries = float(int(r.entries_probed))
         else:  # pure index scan: no table pages touched
@@ -247,7 +280,26 @@ class Database:
         return ExecStats(cost_units=cost,
                          latency_ms=cost * self.time_per_unit_ms,
                          wall_s=wall, used_index=used,
-                         agg_sum=int(r.agg_sum), count=count)
+                         agg_sum=int(r.agg_sum), count=count,
+                         shard_pages=self._shard_pages_of(t, plan))
+
+    def _shard_pages_of(self, t, plan) -> Tuple[int, ...]:
+        """Per-shard pages the planned access path table-scans -- the
+        monitor's shard-heat signal (advisory: it sizes build quanta,
+        never results or accounting, so the cheap host-side form
+        ignores the transient rho_m component of the stitch)."""
+        if not (self.shard_aware_tuning and isinstance(t, ShardedTable)):
+            return ()
+        psz = t.page_size
+        lused = [(int(x.n_rows) + psz - 1) // psz for x in t.shards]
+        if plan.path == "table":
+            return tuple(lused)
+        state = plan.index_state
+        if plan.path in ("hybrid", "hybrid_ps") \
+                and isinstance(state, ShardedIndex):
+            return tuple(max(u - int(ix.built_pages), 0)
+                         for u, ix in zip(lused, state.shards))
+        return (0,) * len(t.shards)  # pure index scan
 
     # ------------------------------------------------------------------
     # Batched execution (read bursts)
@@ -350,13 +402,14 @@ class Database:
 
         # Accounting replay in input order (host-side, same arithmetic
         # and clock/monitor trajectory as the per-query loop).
-        plan_by_pos = {pos: plan.index for ms in groups.values()
+        plan_by_pos = {pos: plan for ms in groups.values()
                        for pos, _q, plan in ms}
         for pos, q in pending:
             agg_sum, count, n_pages, n_entries, start_page, wall = raw[pos]
             t = self.tables[q.table]
             layout = self.layouts[q.table]
-            bi_q = plan_by_pos[pos]
+            plan_q = plan_by_pos[pos]
+            bi_q = plan_q.index
             cost = scan_cost(layout, q.accessed_attrs, t.page_size,
                              n_pages, float(n_entries), start_page)
             used = bi_q is not None
@@ -365,7 +418,8 @@ class Database:
             stats = ExecStats(
                 cost_units=cost, latency_ms=cost * self.time_per_unit_ms,
                 wall_s=wall, used_index=used,
-                agg_sum=agg_sum, count=count)
+                agg_sum=agg_sum, count=count,
+                shard_pages=self._shard_pages_of(t, plan_q))
             self.clock_ms += stats.latency_ms
             if observe:
                 n_rows = int(t.n_rows)
@@ -376,7 +430,8 @@ class Database:
                     tuples_scanned=int(stats.cost_units),
                     used_index=stats.used_index,
                     rows_modified=0, ts_ms=self.clock_ms,
-                    template=q.template))
+                    template=q.template,
+                    shard_pages=stats.shard_pages))
             out[pos] = stats
 
     def _exec_join(self, q: Query, outer):
@@ -491,14 +546,24 @@ class Database:
     # ------------------------------------------------------------------
     # Tuner-side physical work, charged by the caller
     # ------------------------------------------------------------------
-    def vap_build_step(self, bi: BuiltIndex, pages: int) -> float:
+    def vap_build_step(self, bi: BuiltIndex, pages: int,
+                       shard: Optional[int] = None) -> float:
         """Advance a VAP/FULL index by one resumable build quantum of
         ``pages`` pages (``index.advance_build``); returns work units.
         On sharded storage the budget round-robins across shards in
-        global page order (index.sharded_build_pages_vap)."""
+        global page order (index.sharded_build_pages_vap) -- unless
+        ``shard`` targets one shard's local prefix (shard-aware
+        tuning), which relaxes the global prefix invariant and flips
+        the index's hybrid scans to the per-shard stitch."""
         t = self.tables[bi.desc.table]
-        bi.vap, done = advance_build(bi.vap, t, bi.desc.key_attrs, pages)
-        full_pages = int(t.n_rows) // t.page_size
+        if shard is None:
+            bi.vap, done = advance_build(bi.vap, t, bi.desc.key_attrs, pages)
+            full_pages = int(t.n_rows) // t.page_size
+        else:
+            bi.vap, done = advance_build_shard(bi.vap, t, bi.desc.key_attrs,
+                                               shard, pages)
+            self.pershard_built.add(bi.desc.name)
+            full_pages = sum(shard_full_pages(t))
         if int(bi.vap.built_pages) >= full_pages:
             bi.complete = True
             bi.building = False

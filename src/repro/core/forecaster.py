@@ -19,6 +19,7 @@ model in one fused step per tuning cycle.
 Utilities are non-negative; observations are floored at ``EPS`` so the
 multiplicative seasonal ratios stay finite.
 """
+
 from __future__ import annotations
 
 import functools
@@ -34,21 +35,28 @@ EPS = 1e-6
 class HWState(NamedTuple):
     """Holt-Winters state for one (or, batched, many) time series."""
 
-    level: jax.Array    # ()  or (n,)
-    trend: jax.Array    # ()  or (n,)
-    season: jax.Array   # (m,) or (n, m) multiplicative seasonal factors
-    t: jax.Array        # () or (n,) int32 -- observations consumed
+    level: jax.Array  # ()  or (n,)
+    trend: jax.Array  # ()  or (n,)
+    season: jax.Array  # (m,) or (n, m) multiplicative seasonal factors
+    t: jax.Array  # () or (n,) int32 -- observations consumed
 
 
 def init_state(season_len: int, batch: int | None = None) -> HWState:
     """Fresh state: level/trend unset (bootstrapped on first obs),
     seasonal factors start at 1 (no seasonality assumed)."""
     if batch is None:
-        return HWState(jnp.zeros(()), jnp.zeros(()),
-                       jnp.ones((season_len,)), jnp.zeros((), jnp.int32))
-    return HWState(jnp.zeros((batch,)), jnp.zeros((batch,)),
-                   jnp.ones((batch, season_len)),
-                   jnp.zeros((batch,), jnp.int32))
+        return HWState(
+            jnp.zeros(()),
+            jnp.zeros(()),
+            jnp.ones((season_len,)),
+            jnp.zeros((), jnp.int32),
+        )
+    return HWState(
+        jnp.zeros((batch,)),
+        jnp.zeros((batch,)),
+        jnp.ones((batch, season_len)),
+        jnp.zeros((batch,), jnp.int32),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=())
@@ -74,8 +82,8 @@ def update(state: HWState, y, alpha=0.5, beta=0.3, gamma=0.4) -> HWState:
     level = jnp.where(first, y, l_new)
     trend = jnp.where(first, 0.0, b_new)
     s_val = jnp.where(first, 1.0, s_new)
-    season = state.season.at[..., pos].set(
-        jnp.clip(s_val, 0.05, 20.0))  # keep factors sane on noisy series
+    # keep factors sane on noisy series
+    season = state.season.at[..., pos].set(jnp.clip(s_val, 0.05, 20.0))
     return HWState(level, trend, season, state.t + 1)
 
 
@@ -93,17 +101,65 @@ def forecast(state: HWState, h=1):
 
 # Batched variants: the tuner tracks one forecaster per candidate
 # index; vmapping the update keeps the per-cycle cost at one kernel.
-update_batch = jax.jit(jax.vmap(update, in_axes=(0, 0, None, None, None)),
-                       static_argnums=())
+update_batch = jax.jit(
+    jax.vmap(update, in_axes=(0, 0, None, None, None)), static_argnums=()
+)
 forecast_batch = jax.jit(jax.vmap(forecast, in_axes=(0, None)))
+
+
+class ShardHeatForecaster:
+    """Per-shard scan-cost forecaster (shard-aware tuning).
+
+    One batched Holt-Winters state over a table's shards, observed once
+    per tuning cycle with the monitor's per-shard page-access counters
+    and queried for next-cycle heat.  The same seasonal machinery that
+    predicts per-index utility (Section IV-C) here predicts *where* in
+    the shard space the scan cost will land, which is what lets the
+    tuner route build quanta to shards ahead of their hot window
+    instead of round-robining the budget.
+    """
+
+    def __init__(
+        self,
+        n_shards: int,
+        season_len: int = 8,
+        alpha: float = 0.5,
+        beta: float = 0.3,
+        gamma: float = 0.4,
+    ):
+        self.n_shards = n_shards
+        self.params = (alpha, beta, gamma)
+        self.state = init_state(season_len, batch=n_shards)
+
+    def observe(self, heat) -> None:
+        """Consume one cycle's per-shard pages-scanned vector."""
+        n = self.n_shards
+        y = jnp.asarray(np.asarray(heat, np.float32)[:n])
+        a, b, g = self.params
+        self.state = update_batch(self.state, y, a, b, g)
+
+    def predict(self, h: int = 1) -> np.ndarray:
+        """Next-cycle per-shard heat forecast (non-negative floats).
+        Uniform (all-ones) before the first observation so fresh
+        tables still spread budget sensibly."""
+        if int(self.state.t[0]) == 0:
+            return np.ones(self.n_shards)
+        return np.asarray(forecast_batch(self.state, h), np.float64)
 
 
 # ---------------------------------------------------------------------------
 # Pure-numpy reference (oracle for property tests)
 # ---------------------------------------------------------------------------
 
-def ref_holt_winters(ys: np.ndarray, season_len: int, alpha=0.5, beta=0.3,
-                     gamma=0.4, h: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+
+def ref_holt_winters(
+    ys: np.ndarray,
+    season_len: int,
+    alpha=0.5,
+    beta=0.3,
+    gamma=0.4,
+    h: int = 1,
+) -> Tuple[np.ndarray, np.ndarray]:
     """Reference: consume ``ys`` one at a time; return (levels, forecasts)
     where forecasts[i] is the h-step forecast after observing ys[:i+1].
     Mirrors ``update``/``forecast`` exactly (including the bootstrap
@@ -122,8 +178,8 @@ def ref_holt_winters(ys: np.ndarray, season_len: int, alpha=0.5, beta=0.3,
             prev = max(level + trend, EPS)
             l_new = alpha * (y / max(season[pos], EPS)) + (1 - alpha) * prev
             trend = beta * (l_new - level) + (1 - beta) * trend
-            season[pos] = min(max(gamma * (y / prev) + (1 - gamma) * season[pos],
-                                  0.05), 20.0)
+            s_new = gamma * (y / prev) + (1 - gamma) * season[pos]
+            season[pos] = min(max(s_new, 0.05), 20.0)
             level = l_new
         levels.append(level)
         fpos = (t + 1 + h - 1) % m

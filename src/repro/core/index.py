@@ -480,6 +480,56 @@ def build_pages_remaining(state, table) -> int:
     return max(full_pages - int(state.built_pages), 0)
 
 
+# ---------------------------------------------------------------------------
+# Per-shard build quanta (shard-aware tuning: relaxed prefix invariant)
+# ---------------------------------------------------------------------------
+#
+# ``sharded_build_pages_vap`` keeps the union of the shard-local
+# prefixes a *global* page prefix -- the invariant the global hybrid
+# stitch relies on.  Shard-aware tuning relaxes it: each shard's local
+# prefix advances independently (budget routed by forecast per-shard
+# utility), and the hybrid scan stitches per shard instead
+# (engine.sharded_hybrid_scan_pershard).  Every shard still builds its
+# own local pages strictly in order, so the per-shard in-order
+# invariant -- the one correctness actually needs -- is untouched.
+
+
+def shard_full_pages(table: ShardedTable) -> list:
+    """Fully-populated (indexable) page count per shard."""
+    return [int(t.n_rows) // t.page_size for t in table.shards]
+
+
+def shard_remaining_pages(state: ShardedIndex, table: ShardedTable) -> list:
+    """Unbuilt fully-populated pages per shard."""
+    return [max(f - int(ix.built_pages), 0)
+            for f, ix in zip(shard_full_pages(table), state.shards)]
+
+
+def prefix_is_round_robin(state: ShardedIndex) -> bool:
+    """True iff the shard-local prefixes still partition one global
+    page prefix under the round-robin page map -- i.e. the legacy
+    global stitch is sound for this index state."""
+    S = len(state.shards)
+    built = [int(ix.built_pages) for ix in state.shards]
+    total = sum(built)
+    return all(b == _count_owned_below(total, s, S)
+               for s, b in enumerate(built))
+
+
+def advance_build_shard(state: ShardedIndex, table: ShardedTable,
+                        key_attrs: tuple, shard: int, pages: int):
+    """One shard-targeted build quantum: advance ``shard``'s local
+    built prefix by up to ``pages`` pages.  Returns (state, pages_done)
+    exactly like ``advance_build``; the quantum clamps at the shard's
+    own full-page watermark."""
+    ix, t = state.shards[shard], table.shards[shard]
+    before = int(ix.built_pages)
+    ix = build_pages_vap(ix, t, key_attrs, pages_per_cycle=int(pages))
+    shards = list(state.shards)
+    shards[shard] = ix
+    return ShardedIndex(tuple(shards)), int(ix.built_pages) - before
+
+
 def split_build_pages(pages: int, quantum_pages: int | None):
     """Slice one cycle's page budget into resumable build quanta.
 

@@ -33,6 +33,9 @@ class QueryRecord:
     rows_modified: int = 0    # for mutators
     ts_ms: float = 0.0        # simulated wall clock
     template: str = ""        # benchmark template id (diagnostics only)
+    shard_pages: Tuple[int, ...] = ()  # pages this statement scanned per
+                                       # shard (shard-aware tuning only;
+                                       # () on unsharded/legacy runs)
 
 
 @dataclass
@@ -103,3 +106,17 @@ class WorkloadMonitor:
 
     def tables(self) -> Iterable[str]:
         return sorted({r.table for r in self.records})
+
+    # ---- per-shard page-access counters (shard-aware tuning) -----------
+    def shard_page_counts(self, table: str, n_shards: int) -> np.ndarray:
+        """Pages scanned per shard over the window's scan records --
+        the access-heat signal behind per-shard build scheduling.
+        Records without shard accounting (unsharded runs, mutators,
+        pure index scans) contribute nothing."""
+        heat = np.zeros(n_shards, np.float64)
+        for r in self.records:
+            if r.table != table or r.kind != "scan" or not r.shard_pages:
+                continue
+            sp = r.shard_pages[:n_shards]
+            heat[: len(sp)] += sp
+        return heat

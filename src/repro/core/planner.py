@@ -27,6 +27,7 @@ from repro.core.cost_model import IndexDescriptor
 from repro.core.index import (ShardedIndex, ShardedVbpState, key_range,
                               vbp_n_entries)
 from repro.core.layout import LayoutState, scan_width_factor
+from repro.core.table import ShardedTable
 
 HYBRID_SELECTIVITY_CUTOFF = 0.20  # optimizer switches to table scan above this
 
@@ -247,8 +248,24 @@ class QueryPlanner:
                             pinned_state=_engine_state("pure_vbp", vap, vbp))
         if bi.scheme == "full" and complete:
             return ScanPlan("pure_vap", bi, pinned_state=vap)
-        return ScanPlan("hybrid", bi,    # VAP (or FULL still building)
-                        pinned_state=vap)
+        path = "hybrid"                  # VAP (or FULL still building)
+        if self._needs_pershard_stitch(bi, vap):
+            path = "hybrid_ps"
+        return ScanPlan(path, bi, pinned_state=vap)
+
+    def _needs_pershard_stitch(self, bi: BuiltIndex, vap) -> bool:
+        """The global hybrid stitch is sound only while the shard-local
+        built prefixes partition one global page prefix under the
+        round-robin page map.  Shard-targeted build quanta (shard-aware
+        tuning) and adopted non-round-robin shard layouts both break
+        that, so those scans stitch per shard instead."""
+        if not isinstance(vap, ShardedIndex):
+            return False
+        if bi.desc.name in getattr(self.db, "pershard_built", ()):
+            return True
+        t = self.db.tables.get(bi.desc.table)
+        return isinstance(t, ShardedTable) and \
+            not self.db.table_is_round_robin(bi.desc.table)
 
     # -- VBP key bounds --------------------------------------------------
     @staticmethod

@@ -328,6 +328,29 @@ def shard_table(table: Table, num_shards: int) -> ShardedTable:
     return ShardedTable(tuple(shards), jnp.asarray(table.n_rows, jnp.int32))
 
 
+def round_robin_layout(st: ShardedTable) -> bool:
+    """True iff the occupied pages follow the round-robin page map
+    (the layout ``shard_table`` produces): each shard's fully
+    populated pages are exactly its share of one global page prefix,
+    and at most the global watermark page is partially filled.
+
+    Adopted pre-sharded tables may violate this (range/tenant
+    partitioning with skewed shard sizes); the planner then routes
+    hybrid scans through the per-shard stitch, whose soundness does
+    not depend on the global prefix invariant.
+    """
+    S = st.n_shards
+    psz = st.page_size
+    rows = [int(t.n_rows) for t in st.shards]
+    full = [r // psz for r in rows]
+    total_full = sum(full)
+    for s, f in enumerate(full):
+        if f != max(0, -(-(total_full - s) // S)):
+            return False
+    partial = [s for s, r in enumerate(rows) if r % psz]
+    return not partial or partial == [total_full % S]
+
+
 def unshard_table(st: ShardedTable) -> Table:
     """Reassemble the logical table (test oracle / resharding)."""
     S = st.n_shards

@@ -13,7 +13,16 @@ Every tuning cycle runs the observe-react-learn template:
 The tuner retains forecaster state for dropped indexes so their future
 utility remains predictable, which is what enables the ahead-of-time
 builds on recurring (e.g. diurnal) workloads in Figure 6.
+
+Shard-aware scheduling (``Database.shard_aware_tuning``): on sharded
+storage the cycle's build budget is no longer round-robined across
+shards in global page order -- each building index's slice is split
+into per-shard quanta sized by forecast utility (predicted per-shard
+scan heat x remaining unbuilt pages), so cold or complete shards stop
+absorbing budget.  See ``cost_model.shard_build_utility`` and
+``forecaster.ShardHeatForecaster``.
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -22,34 +31,41 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import cost_model as cm
+from repro.core import forecaster as hw
 from repro.core import knapsack
-from repro.core.build_service import (BuildQuantum, CyclePlan,
-                                      apply_quantum)
-from repro.core.classifier import (READ_INTENSIVE, UNKNOWN, WRITE_INTENSIVE,
-                                   CartClassifier, default_classifier)
+from repro.core.build_service import BuildQuantum, CyclePlan, apply_quantum
+from repro.core.classifier import (
+    READ_INTENSIVE,
+    UNKNOWN,
+    WRITE_INTENSIVE,
+    CartClassifier,
+    default_classifier,
+)
 from repro.core.cost_model import IndexDescriptor
 from repro.core.executor import Database, ExecStats, Query
-from repro.core import forecaster as hw
+from repro.core.index import ShardedIndex, shard_remaining_pages
+from repro.core.table import ShardedTable
 
 
 @dataclass
 class TunerConfig:
     storage_budget_bytes: float = 256e6
-    pages_per_cycle: int = 32          # VAP lightweight build step
+    pages_per_cycle: int = 32  # VAP lightweight build step
     max_build_pages_per_cycle: int = 64  # total across all building indexes
-    season_len: int = 16               # Holt-Winters seasonality period (cycles)
+    season_len: int = 16  # Holt-Winters seasonality period (cycles)
     alpha: float = 0.5
     beta: float = 0.3
     gamma: float = 0.4
-    u_min_read: float = 0.0            # min forecast utility to keep an index
-    u_min_write: float = 0.25          # scaled-up threshold in write phases
-    candidate_min_count: int = 3       # appearances in window before considering
+    u_min_read: float = 0.0  # min forecast utility to keep an index
+    u_min_write: float = 0.25  # scaled-up threshold in write phases
+    candidate_min_count: int = 3  # appearances in window before considering
     max_candidates: int = 16
-    redundancy_dampening: float = 0.5  # utility factor for correlated candidates
+    redundancy_dampening: float = 0.5  # utility factor for correlated cands
 
 
-def enumerate_candidates(db: Database, min_count: int, max_candidates: int
-                         ) -> List[Tuple[IndexDescriptor, int]]:
+def enumerate_candidates(
+    db: Database, min_count: int, max_candidates: int
+) -> List[Tuple[IndexDescriptor, int]]:
     """Candidate single- and two-attribute indexes from the monitor's
     predicate statistics (Section IV-B): attribute sets seen at least
     ``min_count`` times in the window, most frequent first."""
@@ -85,17 +101,24 @@ class PredictiveTuner:
     name = "predictive"
     scheme = "vap"
 
-    def __init__(self, db: Database, config: TunerConfig | None = None,
-                 classifier: Optional[CartClassifier] = None,
-                 use_forecaster: bool = True, immediate: bool = False):
+    def __init__(
+        self,
+        db: Database,
+        config: TunerConfig | None = None,
+        classifier: Optional[CartClassifier] = None,
+        use_forecaster: bool = True,
+        immediate: bool = False,
+    ):
         self.db = db
         self.cfg = config or TunerConfig()
         self.classifier = classifier or default_classifier()
         self.use_forecaster = use_forecaster
         self.immediate = immediate
-        self.models: Dict[str, hw.HWState] = {}       # per-index forecaster
-        self.descs: Dict[str, IndexDescriptor] = {}   # every desc ever seen
-        self.forecasts: Dict[str, float] = {}         # U from last Stage III
+        self.models: Dict[str, hw.HWState] = {}  # per-index forecaster
+        self.descs: Dict[str, IndexDescriptor] = {}  # every desc ever seen
+        self.forecasts: Dict[str, float] = {}  # U from last Stage III
+        # per-(table, n_shards) heat forecaster (shard-aware tuning)
+        self.shard_heat: Dict[Tuple[str, int], hw.ShardHeatForecaster] = {}
         self.last_label: int = UNKNOWN
         self.cycles: int = 0
 
@@ -124,6 +147,9 @@ class PredictiveTuner:
         work the legacy monolithic cycle did."""
         db, cfg = self.db, self.cfg
         db.monitor.prune(db.clock_ms)
+        shard_aware = bool(getattr(db, "shard_aware_tuning", False))
+        if shard_aware:
+            self._observe_shard_heat()
 
         # Stage I: workload classification
         feats, n = db.monitor.snapshot_features()
@@ -133,8 +159,9 @@ class PredictiveTuner:
 
         # Stage II: action generation ---------------------------------
         min_count = 1 if self.immediate else cfg.candidate_min_count
-        for desc, _count in enumerate_candidates(db, min_count,
-                                                 cfg.max_candidates):
+        for desc, _count in enumerate_candidates(
+            db, min_count, cfg.max_candidates
+        ):
             self.descs.setdefault(desc.name, desc)
 
         if self.immediate:
@@ -143,16 +170,20 @@ class PredictiveTuner:
             scans = {}
             muts = {}
             for r in recs:
-                (scans if r.kind == "scan" else muts).setdefault(
-                    r.table, []).append(r)
+                bucket = scans if r.kind == "scan" else muts
+                bucket.setdefault(r.table, []).append(r)
                 if r.pred_attrs:
                     d = IndexDescriptor(r.table, tuple(r.pred_attrs[:2]))
                     self.descs.setdefault(d.name, d)
         else:
-            scans = {t: list(db.monitor.scan_records(t))
-                     for t in db.monitor.tables()}
-            muts = {t: list(db.monitor.mutator_records(t))
-                    for t in db.monitor.tables()}
+            scans = {
+                t: list(db.monitor.scan_records(t))
+                for t in db.monitor.tables()
+            }
+            muts = {
+                t: list(db.monitor.mutator_records(t))
+                for t in db.monitor.tables()
+            }
 
         names = list(self.descs)
         utilities, sizes, force = [], [], []
@@ -161,10 +192,15 @@ class PredictiveTuner:
             desc = self.descs[name]
             t = db.tables[desc.table]
             n_rows = int(t.n_rows)
-            o = cm.overall_utility(desc, scans.get(desc.table, ()),
-                                   muts.get(desc.table, ()), n_rows)
-            upd_u = cm.update_lookup_utility(desc, muts.get(desc.table, ()),
-                                             n_rows)
+            o = cm.overall_utility(
+                desc,
+                scans.get(desc.table, ()),
+                muts.get(desc.table, ()),
+                n_rows,
+            )
+            upd_u = cm.update_lookup_utility(
+                desc, muts.get(desc.table, ()), n_rows
+            )
             o = max(o, 0.0) + upd_u
             observed[name] = o
             # knapsack utility: forecast if a model exists, else bootstrap
@@ -181,25 +217,31 @@ class PredictiveTuner:
 
         # Redundancy dampening: correlated candidates (same leading
         # attribute as an already-built index) get discounted.
-        built_leading = {(b.desc.table, b.desc.key_attrs[0])
-                         for b in db.indexes.values()}
+        built_leading = {
+            (b.desc.table, b.desc.key_attrs[0]) for b in db.indexes.values()
+        }
         for i, name in enumerate(names):
             d = self.descs[name]
-            if name not in db.indexes and \
-                    (d.table, d.key_attrs[0]) in built_leading:
+            correlated = (d.table, d.key_attrs[0]) in built_leading
+            if name not in db.indexes and correlated:
                 utilities[i] *= cfg.redundancy_dampening
 
         # Minimum-utility pruning threshold scales with workload type.
-        u_min = {WRITE_INTENSIVE: cfg.u_min_write,
-                 READ_INTENSIVE: cfg.u_min_read}.get(
-                     self.last_label, cfg.u_min_read)
+        thresholds = {
+            WRITE_INTENSIVE: cfg.u_min_write,
+            READ_INTENSIVE: cfg.u_min_read,
+        }
+        u_min = thresholds.get(self.last_label, cfg.u_min_read)
         u_arr = np.asarray(utilities, np.float64)
         scale = max(u_arr.max(), 1.0)
         eligible = (u_arr / scale) > u_min
 
-        keep = knapsack.solve(np.where(eligible, u_arr, 0.0),
-                              np.asarray(sizes), cfg.storage_budget_bytes,
-                              force_keep=np.asarray(force, bool))
+        keep = knapsack.solve(
+            np.where(eligible, u_arr, 0.0),
+            np.asarray(sizes),
+            cfg.storage_budget_bytes,
+            force_keep=np.asarray(force, bool),
+        )
 
         # State transition (amortised): drops now, builds via VAP steps.
         chosen = {names[i] for i in range(len(names)) if keep[i]}
@@ -212,35 +254,92 @@ class PredictiveTuner:
 
         # Lightweight build work, bounded per cycle (prevents spikes);
         # emitted as quanta in catalog order, exactly the slices the
-        # legacy inline loop applied.
+        # legacy inline loop applied.  Shard-aware tuning splits each
+        # index's slice into per-shard quanta sized by forecast
+        # per-shard utility instead of the global round-robin, so no
+        # budget lands on cold or already-complete shards.
         quanta: List[BuildQuantum] = []
         budget_pages = cfg.max_build_pages_per_cycle
-        building = [b for b in db.indexes.values()
-                    if b.scheme in ("vap",) and b.building]
+        building = [
+            b
+            for b in db.indexes.values()
+            if b.scheme in ("vap",) and b.building
+        ]
         for b in building:
             if budget_pages <= 0:
                 break
             step = min(cfg.pages_per_cycle, budget_pages)
-            quanta.append(BuildQuantum(b.desc.name, step))
+            t = db.tables[b.desc.table]
+            per_shard = (
+                shard_aware
+                and isinstance(t, ShardedTable)
+                and isinstance(b.vap, ShardedIndex)
+            )
+            if per_shard:
+                alloc = self._shard_step_allocation(b, t, step)
+                quanta.extend(
+                    BuildQuantum(b.desc.name, p, shard=s) for s, p in alloc
+                )
+            else:
+                quanta.append(BuildQuantum(b.desc.name, step))
             budget_pages -= step
 
         # Stage III: index utility forecasting ------------------------
+        # (the per-shard heat models were advanced at cycle start so
+        # this cycle's allocation already saw the newest window)
         if self.use_forecaster:
             for name in names:
                 st = self.models.get(name)
                 if st is None:
                     st = hw.init_state(self.cfg.season_len)
-                st = hw.update(st, observed[name], cfg.alpha, cfg.beta,
-                               cfg.gamma)
+                st = hw.update(
+                    st, observed[name], cfg.alpha, cfg.beta, cfg.gamma
+                )
                 self.models[name] = st
                 self.forecasts[name] = float(hw.forecast(st, 1))
         self.cycles += 1
         return CyclePlan(quanta=quanta)
 
+    # ---- shard-aware build scheduling ---------------------------------
+    def _observe_shard_heat(self) -> None:
+        """Feed every sharded table's per-shard page-access counters
+        (monitor window) into its Holt-Winters heat forecaster --
+        one batched update per table per cycle."""
+        for name, t in self.db.tables.items():
+            if not isinstance(t, ShardedTable):
+                continue
+            key = (name, t.n_shards)
+            fc = self.shard_heat.get(key)
+            if fc is None:
+                fc = hw.ShardHeatForecaster(
+                    t.n_shards,
+                    season_len=self.cfg.season_len,
+                    alpha=self.cfg.alpha,
+                    beta=self.cfg.beta,
+                    gamma=self.cfg.gamma,
+                )
+                self.shard_heat[key] = fc
+            fc.observe(self.db.monitor.shard_page_counts(name, t.n_shards))
 
-def make_dl_tuner(db: Database, dl: str, config: TunerConfig | None = None,
-                  classifier: Optional[CartClassifier] = None
-                  ) -> "PredictiveTuner":
+    def _shard_step_allocation(self, b, t: ShardedTable, step: int):
+        """Split one index's cycle slice across shards by forecast
+        utility: predicted per-shard heat x pages left to build.
+        Deterministic, and never allocates to complete shards."""
+        key = (b.desc.table, t.n_shards)
+        fc = self.shard_heat.get(key)
+        heat = fc.predict() if fc is not None else np.ones(t.n_shards)
+        remaining = shard_remaining_pages(b.vap, t)
+        util = cm.shard_build_utility(heat, remaining, t.page_size)
+        alloc = cm.allocate_build_pages(util, remaining, step)
+        return [(s, int(p)) for s, p in enumerate(alloc) if p > 0]
+
+
+def make_dl_tuner(
+    db: Database,
+    dl: str,
+    config: TunerConfig | None = None,
+    classifier: Optional[CartClassifier] = None,
+) -> "PredictiveTuner":
     """Figure 6 factory: the three decision logics on identical VAP
     substrate.  dl in {'predictive', 'retrospective', 'immediate'}."""
     if dl == "predictive":
@@ -248,8 +347,9 @@ def make_dl_tuner(db: Database, dl: str, config: TunerConfig | None = None,
     elif dl == "retrospective":
         t = PredictiveTuner(db, config, classifier, use_forecaster=False)
     elif dl == "immediate":
-        t = PredictiveTuner(db, config, classifier, use_forecaster=False,
-                            immediate=True)
+        t = PredictiveTuner(
+            db, config, classifier, use_forecaster=False, immediate=True
+        )
     else:
         raise ValueError(dl)
     t.name = dl

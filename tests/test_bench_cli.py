@@ -35,8 +35,49 @@ def test_json_artifact_records_emitted_rows(monkeypatch, tmp_path):
                         ["run.py", "--only", "roofline", "--json", str(out)])
     bench_run.main()
     payload = json.loads(out.read_text())
+    assert payload["schema"] == 1  # the BENCH_<prnum>.json contract
     assert payload["records"], "no records captured"
     assert payload["failures"] == []
     for rec in payload["records"]:
-        assert set(rec) == {"name", "us_per_call", "derived"}
+        # stable trajectory schema: speedup only where a benchmark
+        # reports a headline ratio vs its own baseline
+        assert {"name", "us_per_call", "median_ms", "derived"} <= set(rec)
+        assert set(rec) <= {"name", "us_per_call", "median_ms",
+                            "derived", "speedup", "direction"}
+        assert rec["median_ms"] == pytest.approx(rec["us_per_call"] / 1e3,
+                                                 abs=1e-6)
     assert payload["records"] == common.RECORDS
+
+
+def test_trajectory_gate_respects_record_direction():
+    """lower-is-better latencies gate on increases, higher-is-better
+    ratios gate on decreases, info records never gate."""
+    from benchmarks import trajectory
+
+    def payload(recs):
+        return {"schema": 1, "failures": [], "records": recs}
+
+    old = payload([
+        {"name": "lat", "us_per_call": 100.0},
+        {"name": "spd", "us_per_call": 3.0, "direction": "higher"},
+        {"name": "env", "us_per_call": 1.0, "direction": "info"},
+    ])
+    improved = payload([
+        {"name": "lat", "us_per_call": 80.0},
+        {"name": "spd", "us_per_call": 4.0, "direction": "higher"},
+        {"name": "env", "us_per_call": 8.0, "direction": "info"},
+    ])
+    regs, _ = trajectory.compare(old, improved)
+    assert regs == []
+    regressed = payload([
+        {"name": "lat", "us_per_call": 120.0},
+        {"name": "spd", "us_per_call": 2.0, "direction": "higher"},
+        {"name": "env", "us_per_call": 0.1, "direction": "info"},
+    ])
+    regs, _ = trajectory.compare(old, regressed)
+    assert {r[0] for r in regs} == {"lat", "spd"}
+    # within threshold passes
+    ok = payload([{"name": "lat", "us_per_call": 110.0}])
+    regs, _ = trajectory.compare(payload([{"name": "lat",
+                                           "us_per_call": 100.0}]), ok)
+    assert regs == []
