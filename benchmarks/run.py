@@ -87,7 +87,7 @@ def main() -> None:
     from benchmarks import (async_tuning, batched_scan, fig2_schemes,
                             fig6_decision_logic, fig7_holistic,
                             fig8_affinity, fig9_layout, fig10_adaptability,
-                            shard_tuning, sharded_scan)
+                            fused_shard_scan, shard_tuning, sharded_scan)
     from benchmarks import common
 
     quick = args.quick
@@ -115,6 +115,8 @@ def main() -> None:
         ("shard_tuning", lambda: shard_tuning.run(
             total=240 if quick else 360,
             phase_len=120 if quick else 180, quiet=True)),
+        ("fused_shard", lambda: fused_shard_scan.run(
+            bursts=2 if quick else 3, quiet=True)),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),
     ]

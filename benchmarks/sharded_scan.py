@@ -1,15 +1,15 @@
 """Microbenchmark: per-shard scan fan-out over sharded storage.
 
 ``Database(num_shards=S)`` partitions pages round-robin across S
-shards; ``execute_batch`` then fans each plan group out per shard
-(one dispatch per shard on CPU -- a loop inside one jitted program --
-or one device per shard via ``jax.pmap`` when the host exposes enough
-devices) and tree-reduces per-query aggregates.  Results are
-bit-identical across shard counts (asserted here against the 1-shard
-engine), so this bench isolates the *dispatch* cost of the fan-out:
-on one CPU core the shards serialise and the fan-out should be
-roughly flat vs. 1 shard; on multi-device deployments each shard scans
-1/S of the pages in parallel.
+shards; ``execute_batch`` then runs each plan group as ONE stacked
+single dispatch for any shard count (PR 5's fused layout; see
+benchmarks/fused_shard_scan.py for fused-vs-loop), or one device per
+shard via ``jax.pmap`` when the host exposes enough devices.  Results
+are bit-identical across shard counts (asserted here against the
+1-shard engine), so this bench isolates the *dispatch* cost of
+sharding: on one CPU core it should be roughly flat vs. 1 shard; on
+multi-device deployments each shard scans 1/S of the pages in
+parallel.
 
     PYTHONPATH=src python -m benchmarks.sharded_scan
     # pmap fan-out on a CPU host:
@@ -69,7 +69,7 @@ def run(n_queries: int = 64, n_rows: int = 20_000, page_size: int = 256,
                 f"{label}: {S}-shard results diverge from 1-shard"
 
             fanout = "pmap" if shard_fanout_devices(S) is not None \
-                else f"loop x{S}"
+                else "fused single dispatch"
             rel = base_us / us_q
             results[(label, S)] = us_q
             emit(f"sharded_scan.{label}.shards{S}", us_q,

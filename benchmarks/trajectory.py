@@ -9,6 +9,17 @@ run's artifact:
 Exit status is non-zero when any benchmark present in BOTH records
 regressed by more than ``--threshold`` (default 15%) in its
 ``us_per_call`` metric, or when the new run recorded failures.  A
+*missing* OLD artifact is not an error: the new run seeds the
+trajectory and the gate passes vacuously (the new run's own failures
+still fail it) -- so the nightly can point at the committed seed
+(benchmarks/baselines/BENCH_<prnum>.json) or a cache path that may
+not exist yet without shell-side existence checks.  ``--advisory``
+reports the comparison but never fails on regressions (new-run
+failures still fail): the nightly uses it when its only baseline is
+the committed seed, whose absolute latencies came from a DIFFERENT
+machine -- a slower runner must not fail forever against them; the
+advisory run's own artifact then becomes the first same-machine
+gating point.  A
 record's optional ``direction`` field declares how to judge it:
 "lower" (default: latency, an increase regresses), "higher"
 (throughput/speedup ratio, a decrease regresses) or "info" (never
@@ -20,6 +31,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 DEFAULT_THRESHOLD = 0.15
@@ -73,9 +85,24 @@ def main(argv=None) -> int:
     ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
                     help="max tolerated fractional latency regression "
                          "per benchmark (default 0.15)")
+    ap.add_argument("--advisory", action="store_true",
+                    help="report regressions but do not fail on them "
+                         "(cross-machine baseline, e.g. the committed "
+                         "seed); new-run failures still fail")
     args = ap.parse_args(argv)
 
-    old, new = load_records(args.old), load_records(args.new)
+    new = load_records(args.new)
+    if not os.path.exists(args.old):
+        # First point of the trajectory: nothing to compare against.
+        print(f"trajectory: no baseline at {args.old}; "
+              f"{args.new} seeds the trajectory (gate passes)")
+        if new.get("failures"):
+            print(f"trajectory: FAIL -- seed run recorded benchmark "
+                  f"failures: {new['failures']}")
+            return 1
+        print("trajectory: OK (seed)")
+        return 0
+    old = load_records(args.old)
     regressions, lines = compare(old, new, args.threshold)
     print(f"trajectory: {args.old} -> {args.new} "
           f"(threshold {args.threshold:.0%})")
@@ -85,11 +112,15 @@ def main(argv=None) -> int:
               f"{new['failures']}")
         return 1
     if regressions:
-        print(f"trajectory: FAIL -- {len(regressions)} benchmark(s) "
+        verdict = "ADVISORY" if args.advisory else "FAIL"
+        print(f"trajectory: {verdict} -- {len(regressions)} benchmark(s) "
               f"regressed beyond {args.threshold:.0%}:")
         for name, was, now, delta in regressions:
             print(f"  {name}: {was:.3f} -> {now:.3f} ({delta:+.1%})")
-        return 1
+        if not args.advisory:
+            return 1
+        print("trajectory: OK (advisory baseline; not gating)")
+        return 0
     print("trajectory: OK")
     return 0
 

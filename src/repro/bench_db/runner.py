@@ -69,6 +69,13 @@ class RunConfig:
     # the engine's per-shard stitch.  False keeps every path
     # bit-identical to the legacy engine for any shard count.
     shard_aware_tuning: bool = False
+    # Adaptive cycle sizing (overlap mode only): resize
+    # TunerConfig.pages_per_cycle each cycle from the build lane's
+    # measured EWMA throughput (BuildService.suggested_pages_per_cycle)
+    # so cycle budgets track real build speed.  Never used under
+    # serialized/deterministic scheduling -- the budget would depend on
+    # wall clock, which breaks the bit-exact replay contract.
+    adaptive_build_budget: bool = False
 
 
 @dataclass
@@ -86,6 +93,9 @@ class RunResult:
     # and how often backpressure escalated the drain frequency
     build_pages_per_ms: float = 0.0
     build_escalations: int = 0
+    # adaptive cycle sizing: pages_per_cycle after the final resize
+    # (0 when adaptive_build_budget is off or never fired)
+    build_pages_per_cycle: int = 0
 
     def percentile(self, p: float) -> float:
         """Latency percentile, 0.0 on empty runs (np.percentile raises
@@ -154,6 +164,22 @@ def run_workload(db: Database, tuner, workload: Workload,
     blocking_ms = 0.0   # carried into the next query's latency
     prev_phase = 0
 
+    # Adaptive cycle sizing: only the overlap lane measures real drain
+    # throughput, and only its schedule may depend on the wall clock.
+    adaptive = (overlap and cfg.adaptive_build_budget
+                and hasattr(tuner, "cfg"))
+
+    def resize_cycle_budget() -> None:
+        """Feed the lane's measured EWMA throughput (pages/ms) back
+        into TunerConfig.pages_per_cycle so cycle budgets track real
+        build speed; clamped to [1, max_build_pages_per_cycle]."""
+        pages = service.suggested_pages_per_cycle()
+        if pages is None:
+            return
+        cap = tuner.cfg.max_build_pages_per_cycle
+        tuner.cfg.pages_per_cycle = min(max(pages, 1), cap)
+        res.build_pages_per_cycle = tuner.cfg.pages_per_cycle
+
     def run_cycle(idle: bool) -> float:
         """One due tuning cycle's *synchronous* work units."""
         if service is None:
@@ -162,6 +188,8 @@ def run_workload(db: Database, tuner, workload: Workload,
             # Decide, then drain the whole queue at the boundary: the
             # exact serialized schedule through the split pipeline.
             return service.decide(idle=idle) + service.drain()
+        if adaptive:
+            resize_cycle_budget()
         return service.decide(idle=idle)  # overlap: quanta drain in-burst
 
     def overlap_quantum() -> float:

@@ -59,6 +59,13 @@ THROUGHPUT_EWMA_ALPHA = 0.25
 # model caps the burst so the concurrent lane's real time per
 # opportunity stays bounded (an unbounded burst would be a stall).
 MAX_DRAIN_BURST_MS = 5.0
+# Adaptive cycle sizing (RunConfig.adaptive_build_budget): target wall
+# time for draining ONE cycle's build slice on the concurrent lane.
+# The tuner's ``pages_per_cycle`` is resized so a cycle's work fits
+# this budget at the lane's measured throughput -- a fast lane gets
+# bigger cycles (builds converge sooner), a slow lane smaller ones
+# (the queue stops outrunning the drain opportunities).
+CYCLE_DRAIN_TARGET_MS = 10.0
 
 
 @dataclass(frozen=True)
@@ -209,6 +216,18 @@ class BuildService:
         if self.pages_per_ms <= 0.0:
             return float("inf")
         return pages / self.pages_per_ms
+
+    def suggested_pages_per_cycle(
+        self, target_ms: float = CYCLE_DRAIN_TARGET_MS
+    ) -> Optional[int]:
+        """Cycle-budget suggestion from the measured lane throughput:
+        the page count whose drain fits ``target_ms`` at the current
+        EWMA pages/ms.  None before the model has a measurement (the
+        caller keeps its configured budget).  Callers clamp to their
+        own [1, max_build_pages_per_cycle] bounds."""
+        if self.pages_per_ms <= 0.0:
+            return None
+        return max(int(self.pages_per_ms * target_ms), 1)
 
     def drain(self) -> float:
         """Apply every queued quantum (the deterministic-interleave

@@ -9,18 +9,26 @@ bounds, and owns the dispatch strategy:
   (vmapped jnp forms on CPU, the multi-query Pallas kernel via
   ``kernels.ops`` on TPU; the hybrid path stitches the kernel's
   per-query ``start_pages`` table suffix to the jnp index prefix).
-* ``ShardedTable``  -- one scan fan-out per shard with a tree-reduce
-  of per-query partial aggregates.  On CPU the fan-out is a loop over
-  shards inside one jitted program (XLA sees one dispatch per shard);
-  with enough devices the uniform-shard full-scan path fans out via
-  ``jax.pmap`` (see ``parallel.sharding.shard_fanout_devices``).
+* ``ShardedTable``  -- ONE dispatch regardless of shard count: the
+  shards are stacked on a leading axis (``table.stacked_shards``, a
+  cached padded pytree) and every batched scan family vmaps over that
+  axis, so trace size, compile time and dispatch count stay flat as S
+  grows.  With ``use_kernel`` the fused Pallas kernel runs the same
+  layout as a (shard, page-block, query) grid with a per-(shard,
+  query) scalar-prefetched ``start_pages`` table
+  (``kernels.batched_filter_agg.sharded_batched_filter_agg``).  The
+  legacy per-shard loop fan-out survives as the ``*_loop`` forms --
+  the parity oracle (tests/test_fused_shard_scan.py) and the
+  benchmark baseline (benchmarks/fused_shard_scan.py).
 
 Bit-identity contract (tests/test_sharded_engine.py): for any shard
 count, every aggregate and accounting field equals the single-shard
 value.  int32 sums wrap associatively/commutatively, so per-shard
-partials reduce to the exact single-shard bit pattern in any order;
-stitch points are computed from *global* page ids, so per-query
-``start_page``/``pages_scanned`` match by construction.
+partials reduce to the exact single-shard bit pattern in any order --
+which is also why the stacked forms' axis reductions and the loop
+forms' pairwise tree reductions agree bit for bit, and why the padded
+shard grid is safe: padding pages carry ``begin_ts == NEVER_TS``, are
+invisible to every snapshot, and contribute exact int32 zeros.
 
 The hybrid scan's cross-shard stitch works in two passes inside one
 program: pass 1 probes each shard's local index and reduces the
@@ -28,8 +36,11 @@ per-query max global matched page (rho_m) across shards together with
 the global built prefix (rho_i + 1 == sum of shard-local
 ``built_pages``); pass 2 re-walks each shard with the global stitch
 point, deduplicating index matches and masking the table suffix
-exactly like the single-table operator.
+exactly like the single-table operator.  The per-shard stitch
+(``hybrid_ps``) needs no cross-shard reduction at all -- see the
+section note below.
 """
+
 from __future__ import annotations
 
 import functools
@@ -38,18 +49,36 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.hybrid_scan import (BatchScanResult,
-                                    _predicate_key_bounds,
-                                    batched_full_table_scan,
-                                    batched_hybrid_index_prefix,
-                                    batched_hybrid_scan,
-                                    batched_pure_index_scan,
-                                    full_table_scan, hybrid_scan,
-                                    pure_index_scan)
-from repro.core.index import AdHocIndex, ShardedIndex, index_range_scan
-from repro.core.table import (ShardedTable, Table, conj_predicate_mask,
-                              visible_mask)
+from repro.core.hybrid_scan import (
+    BatchScanResult,
+    _predicate_key_bounds,
+    batched_full_table_scan,
+    batched_hybrid_index_prefix,
+    batched_hybrid_scan,
+    batched_pure_index_scan,
+    full_table_scan,
+    hybrid_scan,
+    pure_index_scan,
+)
+from repro.core.index import (
+    AdHocIndex,
+    ShardedIndex,
+    index_range_scan,
+    stacked_shard_indexes,
+)
+from repro.core.table import (
+    ShardedTable,
+    StackedShards,
+    Table,
+    conj_predicate_mask,
+    stacked_shards,
+    visible_mask,
+)
 from repro.parallel.sharding import shard_fanout_devices
+
+# vmap/pmap axis prefixes: map the leading shard axis of every leaf.
+_TABLE_AXES = Table(0, 0, 0, 0)
+_INDEX_AXES = AdHocIndex(0, 0, 0, 0, 0)
 
 
 class ShardScanResult(NamedTuple):
@@ -86,11 +115,11 @@ def _used_pages(st: ShardedTable) -> jax.Array:
     return ((st.n_rows + st.page_size - 1) // st.page_size).astype(jnp.int32)
 
 
-def _shard_index_probe(t: Table, ix: AdHocIndex, s: int, S: int,
-                       key_attrs: tuple, attrs: tuple, lo, hi, ts):
+def _shard_index_probe(t, ix, s, S, key_attrs, attrs, lo, hi, ts):
     """Probe one shard's local index: masks, local page/slot of each
     entry, and this shard's contribution to the per-query rho_m (in
-    *global* page ids)."""
+    *global* page ids).  ``s`` may be a Python int (loop fan-out) or a
+    traced scalar (stacked fan-out); the arithmetic is identical."""
     psz = t.page_size
     lo_key, hi_key = _predicate_key_bounds(key_attrs, attrs, lo, hi)
     entry_mask, rids = index_range_scan(ix, lo_key, hi_key)
@@ -103,8 +132,7 @@ def _shard_index_probe(t: Table, ix: AdHocIndex, s: int, S: int,
     return idx_match, gpg, pg, sl, entry_mask, rho_m
 
 
-def _shard_table_mask(t: Table, s: int, S: int, attrs: tuple, lo, hi, ts,
-                      start_page):
+def _shard_table_mask(t, s, S, attrs, lo, hi, ts, start_page):
     """Predicate+visibility mask over one shard's pages whose *global*
     page id is >= the stitch point."""
     g_page_ids = (jnp.arange(t.n_pages, dtype=jnp.int32) * S + s)[:, None]
@@ -116,9 +144,11 @@ def _shard_table_mask(t: Table, s: int, S: int, attrs: tuple, lo, hi, ts,
 # Sharded single-query scans (contrib planes for the join path)
 # ---------------------------------------------------------------------------
 
+
 @functools.partial(jax.jit, static_argnames=("attrs", "agg_attr"))
-def sharded_full_table_scan(st: ShardedTable, attrs: tuple, los, his, ts,
-                            agg_attr: int) -> ShardScanResult:
+def sharded_full_table_scan(
+    st: ShardedTable, attrs: tuple, los, his, ts, agg_attr: int
+) -> ShardScanResult:
     sums, cnts, contribs = [], [], []
     for t in st.shards:
         mask = conj_predicate_mask(t, attrs, los, his) & visible_mask(t, ts)
@@ -127,17 +157,32 @@ def sharded_full_table_scan(st: ShardedTable, attrs: tuple, los, his, ts,
         cnts.append(jnp.sum(mask, dtype=jnp.int32))
         contribs.append(mask.astype(jnp.int32))
     z = jnp.zeros((), jnp.int32)
-    return ShardScanResult(tree_reduce(sums), tree_reduce(cnts),
-                           tuple(contribs), _used_pages(st), z, z)
+    return ShardScanResult(
+        tree_reduce(sums),
+        tree_reduce(cnts),
+        tuple(contribs),
+        _used_pages(st),
+        z,
+        z,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
-def sharded_hybrid_scan(st: ShardedTable, index: ShardedIndex,
-                        key_attrs: tuple, attrs: tuple, los, his, ts,
-                        agg_attr: int) -> ShardScanResult:
+def sharded_hybrid_scan(
+    st: ShardedTable,
+    index: ShardedIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    ts,
+    agg_attr: int,
+) -> ShardScanResult:
     S = len(st.shards)
-    probes = [_shard_index_probe(t, ix, s, S, key_attrs, attrs, los, his, ts)
-              for s, (t, ix) in enumerate(zip(st.shards, index.shards))]
+    probes = [
+        _shard_index_probe(t, ix, s, S, key_attrs, attrs, los, his, ts)
+        for s, (t, ix) in enumerate(zip(st.shards, index.shards))
+    ]
     rho_m = tree_reduce([p[5] for p in probes], jnp.maximum)
     start_page = jnp.maximum(rho_m, index.built_pages)  # rho_i + 1
 
@@ -147,41 +192,59 @@ def sharded_hybrid_scan(st: ShardedTable, index: ShardedIndex,
         idx_keep = idx_match & (gpg < start_page)
         tbl_mask = _shard_table_mask(t, s, S, attrs, los, his, ts, start_page)
         vals = t.data[:, :, agg_attr]
-        sums.append(jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0),
-                            dtype=jnp.int32)
-                    + jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32))
-        cnts.append(jnp.sum(idx_keep, dtype=jnp.int32)
-                    + jnp.sum(tbl_mask, dtype=jnp.int32))
+        keep_vals = jnp.where(idx_keep, vals[pg, sl], 0)
+        idx_sum = jnp.sum(keep_vals, dtype=jnp.int32)
+        tbl_sum = jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
+        sums.append(idx_sum + tbl_sum)
+        idx_cnt = jnp.sum(idx_keep, dtype=jnp.int32)
+        cnts.append(idx_cnt + jnp.sum(tbl_mask, dtype=jnp.int32))
         ents.append(jnp.sum(entry_mask, dtype=jnp.int32))
         contrib = jnp.zeros((t.n_pages, t.page_size), jnp.int32)
         contrib = contrib.at[pg, sl].add(idx_keep.astype(jnp.int32))
         contribs.append(contrib + tbl_mask.astype(jnp.int32))
     pages = jnp.clip(_used_pages(st) - start_page, 0, None).astype(jnp.int32)
-    return ShardScanResult(tree_reduce(sums), tree_reduce(cnts),
-                           tuple(contribs), pages, tree_reduce(ents),
-                           start_page.astype(jnp.int32))
+    return ShardScanResult(
+        tree_reduce(sums),
+        tree_reduce(cnts),
+        tuple(contribs),
+        pages,
+        tree_reduce(ents),
+        start_page.astype(jnp.int32),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
-def sharded_pure_index_scan(st: ShardedTable, index: ShardedIndex,
-                            key_attrs: tuple, attrs: tuple, los, his, ts,
-                            agg_attr: int) -> ShardScanResult:
+def sharded_pure_index_scan(
+    st: ShardedTable,
+    index: ShardedIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    ts,
+    agg_attr: int,
+) -> ShardScanResult:
     S = len(st.shards)
     sums, cnts, ents, contribs = [], [], [], []
     for s, (t, ix) in enumerate(zip(st.shards, index.shards)):
         idx_match, _gpg, pg, sl, entry_mask, _ = _shard_index_probe(
-            t, ix, s, S, key_attrs, attrs, los, his, ts)
+            t, ix, s, S, key_attrs, attrs, los, his, ts
+        )
         vals = t.data[:, :, agg_attr]
-        sums.append(jnp.sum(jnp.where(idx_match, vals[pg, sl], 0),
-                            dtype=jnp.int32))
+        match_vals = jnp.where(idx_match, vals[pg, sl], 0)
+        sums.append(jnp.sum(match_vals, dtype=jnp.int32))
         cnts.append(jnp.sum(idx_match, dtype=jnp.int32))
         ents.append(jnp.sum(entry_mask, dtype=jnp.int32))
         contrib = jnp.zeros((t.n_pages, t.page_size), jnp.int32)
         contribs.append(contrib.at[pg, sl].add(idx_match.astype(jnp.int32)))
-    return ShardScanResult(tree_reduce(sums), tree_reduce(cnts),
-                           tuple(contribs), jnp.zeros((), jnp.int32),
-                           tree_reduce(ents),
-                           jnp.asarray(st.n_pages, jnp.int32))
+    return ShardScanResult(
+        tree_reduce(sums),
+        tree_reduce(cnts),
+        tuple(contribs),
+        jnp.zeros((), jnp.int32),
+        tree_reduce(ents),
+        jnp.asarray(st.n_pages, jnp.int32),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -203,18 +266,18 @@ def sharded_pure_index_scan(st: ShardedTable, index: ShardedIndex,
 # global stitch point whenever the prefixes are round-robin-consistent.
 
 
-def _pershard_stitch(t: Table, ix: AdHocIndex, s: int, S: int,
-                     key_attrs: tuple, attrs: tuple, lo, hi, ts):
+def _pershard_stitch(t, ix, s, S, key_attrs, attrs, lo, hi, ts):
     """One shard's local hybrid stitch: (idx_keep, pg, sl, entry_mask,
     tbl_mask, pages_suffix, global_equiv_start)."""
     idx_match, _gpg, pg, sl, entry_mask, _ = _shard_index_probe(
-        t, ix, s, S, key_attrs, attrs, lo, hi, ts)
+        t, ix, s, S, key_attrs, attrs, lo, hi, ts
+    )
     lrho = jnp.max(jnp.where(idx_match, pg, -1))
     lstart = jnp.maximum(lrho, ix.built_pages)
     idx_keep = idx_match & (pg < lstart)
     page_ids = jnp.arange(t.n_pages, dtype=jnp.int32)[:, None]
-    tbl_mask = (conj_predicate_mask(t, attrs, lo, hi)
-                & visible_mask(t, ts) & (page_ids >= lstart))
+    tbl_mask = conj_predicate_mask(t, attrs, lo, hi) & visible_mask(t, ts)
+    tbl_mask &= page_ids >= lstart
     lused = ((t.n_rows + t.page_size - 1) // t.page_size).astype(jnp.int32)
     pages = jnp.clip(lused - lstart, 0, None).astype(jnp.int32)
     gstart = (lstart * S + s).astype(jnp.int32)
@@ -222,83 +285,424 @@ def _pershard_stitch(t: Table, ix: AdHocIndex, s: int, S: int,
 
 
 @functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
-def sharded_hybrid_scan_pershard(st: ShardedTable, index: ShardedIndex,
-                                 key_attrs: tuple, attrs: tuple, los, his,
-                                 ts, agg_attr: int) -> ShardScanResult:
+def sharded_hybrid_scan_pershard(
+    st: ShardedTable,
+    index: ShardedIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    ts,
+    agg_attr: int,
+) -> ShardScanResult:
     S = len(st.shards)
     sums, cnts, ents, contribs, pages, gstarts = [], [], [], [], [], []
     for s, (t, ix) in enumerate(zip(st.shards, index.shards)):
-        idx_keep, pg, sl, entry_mask, tbl_mask, pages_s, gstart = \
+        idx_keep, pg, sl, entry_mask, tbl_mask, pages_s, gstart = (
             _pershard_stitch(t, ix, s, S, key_attrs, attrs, los, his, ts)
+        )
         vals = t.data[:, :, agg_attr]
-        sums.append(jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0),
-                            dtype=jnp.int32)
-                    + jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32))
-        cnts.append(jnp.sum(idx_keep, dtype=jnp.int32)
-                    + jnp.sum(tbl_mask, dtype=jnp.int32))
+        keep_vals = jnp.where(idx_keep, vals[pg, sl], 0)
+        idx_sum = jnp.sum(keep_vals, dtype=jnp.int32)
+        tbl_sum = jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
+        sums.append(idx_sum + tbl_sum)
+        idx_cnt = jnp.sum(idx_keep, dtype=jnp.int32)
+        cnts.append(idx_cnt + jnp.sum(tbl_mask, dtype=jnp.int32))
         ents.append(jnp.sum(entry_mask, dtype=jnp.int32))
         contrib = jnp.zeros((t.n_pages, t.page_size), jnp.int32)
         contrib = contrib.at[pg, sl].add(idx_keep.astype(jnp.int32))
         contribs.append(contrib + tbl_mask.astype(jnp.int32))
         pages.append(pages_s)
         gstarts.append(gstart)
-    return ShardScanResult(tree_reduce(sums), tree_reduce(cnts),
-                           tuple(contribs), tree_reduce(pages),
-                           tree_reduce(ents),
-                           tree_reduce(gstarts, jnp.minimum))
+    return ShardScanResult(
+        tree_reduce(sums),
+        tree_reduce(cnts),
+        tuple(contribs),
+        tree_reduce(pages),
+        tree_reduce(ents),
+        tree_reduce(gstarts, jnp.minimum),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stacked batched scans: ONE dispatch for any shard count
+# ---------------------------------------------------------------------------
+#
+# The read-burst fan-out.  Each family vmaps the per-shard body over
+# the stacked pytree's leading shard axis instead of unrolling a
+# Python loop, so the traced program -- and the compiled dispatch --
+# is the same size for 1 shard and 64.  Padding pages (uniform page
+# grid) are invisible (begin_ts == NEVER_TS) and padded index slots
+# sit beyond ``n_entries``, so they add exact int32 zeros; axis
+# reductions replace the loop's pairwise tree reductions bit-exactly
+# because int32 add / max / min are associative and commutative.
+
+
+def _shard_axis_map(fn, stk: StackedShards, six=None):
+    """vmap ``fn`` over the leading shard axis (+ the shard id)."""
+    if six is None:
+        return jax.vmap(fn, in_axes=(_TABLE_AXES, 0))(
+            stk.table, stk.shard_ids
+        )
+    return jax.vmap(fn, in_axes=(_TABLE_AXES, _INDEX_AXES, 0))(
+        stk.table, six, stk.shard_ids
+    )
+
+
+def _sum0(x):
+    return jnp.sum(x, axis=0, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("attrs", "agg_attr"))
+def _stacked_batched_full(
+    stk: StackedShards, n_rows, attrs: tuple, los, his, tss, agg_attr: int
+) -> BatchScanResult:
+    def shard(t, _s):
+        def one(lo, hi, ts):
+            mask = conj_predicate_mask(t, attrs, lo, hi) & visible_mask(t, ts)
+            vals = t.data[:, :, agg_attr]
+            return (
+                jnp.sum(jnp.where(mask, vals, 0), dtype=jnp.int32),
+                jnp.sum(mask, dtype=jnp.int32),
+            )
+
+        return jax.vmap(one)(los, his, tss)
+
+    sums, cnts = _shard_axis_map(shard, stk)
+    B = los.shape[0]
+    psz = stk.table.data.shape[2]
+    used = ((n_rows + psz - 1) // psz).astype(jnp.int32)
+    z = jnp.zeros((B,), jnp.int32)
+    return BatchScanResult(
+        _sum0(sums), _sum0(cnts), jnp.full((B,), used, jnp.int32), z, z
+    )
+
+
+def _stacked_start_pages(stk, six, key_attrs, attrs, los, his, tss):
+    """Pass 1 of the global stitch: per-query global stitch points."""
+    S = stk.shard_ids.shape[0]
+
+    def shard(t, ix, s):
+        def one(lo, hi, ts):
+            probe = _shard_index_probe(
+                t, ix, s, S, key_attrs, attrs, lo, hi, ts
+            )
+            return probe[5]
+
+        return jax.vmap(one)(los, his, tss)
+
+    rho = _shard_axis_map(shard, stk, six)
+    rho_m = jnp.max(rho, axis=0)
+    built = jnp.sum(six.built_pages, dtype=jnp.int32)
+    return jnp.maximum(rho_m, built)  # rho_i + 1
 
 
 @functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
-def sharded_batched_hybrid_scan_pershard(st: ShardedTable,
-                                         index: ShardedIndex,
-                                         key_attrs: tuple, attrs: tuple,
-                                         los, his, tss, agg_attr: int
-                                         ) -> BatchScanResult:
-    """B hybrid scans with shard-local stitch points: no cross-shard
-    rho_m reduction pass -- each shard stitches its own index prefix to
-    its own table suffix, so the fan-out is a single pass."""
-    S = len(st.shards)
-    sums, cnts, ents, pages, gstarts = [], [], [], [], []
-    for s, (t, ix) in enumerate(zip(st.shards, index.shards)):
-        def one(lo, hi, ts, t=t, ix=ix, s=s):
-            idx_keep, pg, sl, entry_mask, tbl_mask, pages_s, gstart = \
-                _pershard_stitch(t, ix, s, S, key_attrs, attrs, lo, hi, ts)
+def _stacked_batched_hybrid(
+    stk: StackedShards,
+    six: AdHocIndex,
+    n_rows,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+) -> BatchScanResult:
+    S = stk.shard_ids.shape[0]
+    start_pages = _stacked_start_pages(
+        stk, six, key_attrs, attrs, los, his, tss
+    )
+
+    def shard(t, ix, s):
+        def one(lo, hi, ts, sp):
+            idx_match, gpg, pg, sl, entry_mask, _ = _shard_index_probe(
+                t, ix, s, S, key_attrs, attrs, lo, hi, ts
+            )
+            idx_keep = idx_match & (gpg < sp)
+            tbl_mask = _shard_table_mask(t, s, S, attrs, lo, hi, ts, sp)
             vals = t.data[:, :, agg_attr]
-            s_ = jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0),
-                         dtype=jnp.int32) \
-                + jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
-            c_ = jnp.sum(idx_keep, dtype=jnp.int32) \
-                + jnp.sum(tbl_mask, dtype=jnp.int32)
-            return s_, c_, jnp.sum(entry_mask, dtype=jnp.int32), \
-                pages_s, gstart
+            s_ = jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32)
+            s_ = s_ + jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
+            c_ = jnp.sum(idx_keep, dtype=jnp.int32)
+            c_ = c_ + jnp.sum(tbl_mask, dtype=jnp.int32)
+            return s_, c_, jnp.sum(entry_mask, dtype=jnp.int32)
 
-        s_, c_, e_, p_, g_ = jax.vmap(one)(los, his, tss)
-        sums.append(s_)
-        cnts.append(c_)
-        ents.append(e_)
-        pages.append(p_)
-        gstarts.append(g_)
-    return BatchScanResult(tree_reduce(sums), tree_reduce(cnts),
-                           tree_reduce(pages), tree_reduce(ents),
-                           tree_reduce(gstarts, jnp.minimum))
+        return jax.vmap(one)(los, his, tss, start_pages)
+
+    sums, cnts, ents = _shard_axis_map(shard, stk, six)
+    psz = stk.table.data.shape[2]
+    used = ((n_rows + psz - 1) // psz).astype(jnp.int32)
+    pages = jnp.clip(used - start_pages, 0, None).astype(jnp.int32)
+    return BatchScanResult(
+        _sum0(sums),
+        _sum0(cnts),
+        pages,
+        _sum0(ents),
+        start_pages.astype(jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def _stacked_batched_hybrid_ps(
+    stk: StackedShards,
+    six: AdHocIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+) -> BatchScanResult:
+    S = stk.shard_ids.shape[0]
+
+    def shard(t, ix, s):
+        def one(lo, hi, ts):
+            idx_keep, pg, sl, entry_mask, tbl_mask, pages_s, gstart = (
+                _pershard_stitch(t, ix, s, S, key_attrs, attrs, lo, hi, ts)
+            )
+            vals = t.data[:, :, agg_attr]
+            s_ = jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32)
+            s_ = s_ + jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
+            c_ = jnp.sum(idx_keep, dtype=jnp.int32)
+            c_ = c_ + jnp.sum(tbl_mask, dtype=jnp.int32)
+            e_ = jnp.sum(entry_mask, dtype=jnp.int32)
+            return s_, c_, e_, pages_s, gstart
+
+        return jax.vmap(one)(los, his, tss)
+
+    sums, cnts, ents, pages, gstarts = _shard_axis_map(shard, stk, six)
+    return BatchScanResult(
+        _sum0(sums),
+        _sum0(cnts),
+        _sum0(pages),
+        _sum0(ents),
+        jnp.min(gstarts, axis=0).astype(jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def _stacked_batched_pure_index(
+    stk: StackedShards,
+    six: AdHocIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+) -> BatchScanResult:
+    S = stk.shard_ids.shape[0]
+
+    def shard(t, ix, s):
+        def one(lo, hi, ts):
+            idx_match, _gpg, pg, sl, entry_mask, _ = _shard_index_probe(
+                t, ix, s, S, key_attrs, attrs, lo, hi, ts
+            )
+            vals = t.data[:, :, agg_attr]
+            match_vals = jnp.where(idx_match, vals[pg, sl], 0)
+            return (
+                jnp.sum(match_vals, dtype=jnp.int32),
+                jnp.sum(idx_match, dtype=jnp.int32),
+                jnp.sum(entry_mask, dtype=jnp.int32),
+            )
+
+        return jax.vmap(one)(los, his, tss)
+
+    sums, cnts, ents = _shard_axis_map(shard, stk, six)
+    B = los.shape[0]
+    n_pages = jnp.sum(stk.local_pages)
+    return BatchScanResult(
+        _sum0(sums),
+        _sum0(cnts),
+        jnp.zeros((B,), jnp.int32),
+        _sum0(ents),
+        jnp.full((B,), n_pages, jnp.int32),
+    )
+
+
+# -- hybrid index prefixes for the fused-kernel table suffix ---------------
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def _stacked_hybrid_prefix(
+    stk: StackedShards,
+    six: AdHocIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+):
+    """Global-stitch index prefix + per-(shard, query) local start
+    pages for the fused kernel: (sums, cnts, ents, start_pages (B,),
+    local_starts (S, B))."""
+    S = stk.shard_ids.shape[0]
+    start_pages = _stacked_start_pages(
+        stk, six, key_attrs, attrs, los, his, tss
+    )
+
+    def shard(t, ix, s):
+        def one(lo, hi, ts, sp):
+            idx_match, gpg, pg, sl, entry_mask, _ = _shard_index_probe(
+                t, ix, s, S, key_attrs, attrs, lo, hi, ts
+            )
+            idx_keep = idx_match & (gpg < sp)
+            vals = t.data[:, :, agg_attr]
+            s_ = jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32)
+            c_ = jnp.sum(idx_keep, dtype=jnp.int32)
+            return s_, c_, jnp.sum(entry_mask, dtype=jnp.int32)
+
+        return jax.vmap(one)(los, his, tss, start_pages)
+
+    sums, cnts, ents = _shard_axis_map(shard, stk, six)
+    # Local pages of shard s with global id < start:
+    # ceil((start - s) / S), clipped at 0 (floor division rounds
+    # toward -inf, so the +S-1 form is exact ceil for any sign).
+    local = start_pages[None, :] - stk.shard_ids[:, None] + S - 1
+    local_starts = jnp.maximum(local // S, 0).astype(jnp.int32)
+    return (
+        _sum0(sums),
+        _sum0(cnts),
+        _sum0(ents),
+        start_pages.astype(jnp.int32),
+        local_starts,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def _stacked_hybrid_prefix_ps(
+    stk: StackedShards,
+    six: AdHocIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+):
+    """Per-shard-stitch index prefix for the fused kernel:
+    (sums, cnts, ents, local_starts (S, B), pages (B,), gstart (B,))."""
+    S = stk.shard_ids.shape[0]
+
+    def shard(t, ix, s):
+        def one(lo, hi, ts):
+            idx_keep, pg, sl, entry_mask, _tbl, pages_s, gstart = (
+                _pershard_stitch(t, ix, s, S, key_attrs, attrs, lo, hi, ts)
+            )
+            vals = t.data[:, :, agg_attr]
+            s_ = jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32)
+            c_ = jnp.sum(idx_keep, dtype=jnp.int32)
+            e_ = jnp.sum(entry_mask, dtype=jnp.int32)
+            return s_, c_, e_, gstart // S, pages_s, gstart
+
+        return jax.vmap(one)(los, his, tss)
+
+    sums, cnts, ents, lstarts, pages, gstarts = _shard_axis_map(
+        shard, stk, six
+    )
+    return (
+        _sum0(sums),
+        _sum0(cnts),
+        _sum0(ents),
+        lstarts.astype(jnp.int32),
+        _sum0(pages),
+        jnp.min(gstarts, axis=0).astype(jnp.int32),
+    )
+
+
+# -- public single-dispatch entry points -----------------------------------
+
+
+def sharded_batched_full_table_scan(
+    st: ShardedTable, attrs: tuple, los, his, tss, agg_attr: int
+) -> BatchScanResult:
+    """B plain table scans over every shard in ONE dispatch."""
+    stk = stacked_shards(st)
+    return _stacked_batched_full(
+        stk, st.n_rows, attrs, los, his, tss, agg_attr
+    )
+
+
+def sharded_batched_hybrid_scan(
+    st: ShardedTable,
+    index: ShardedIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+) -> BatchScanResult:
+    """B hybrid scans (global stitch) in ONE dispatch: the rho_m
+    reduction, the global stitch point and both sub-scans all live on
+    the stacked shard axis."""
+    stk = stacked_shards(st)
+    six = stacked_shard_indexes(index)
+    return _stacked_batched_hybrid(
+        stk, six, st.n_rows, key_attrs, attrs, los, his, tss, agg_attr
+    )
+
+
+def sharded_batched_hybrid_scan_pershard(
+    st: ShardedTable,
+    index: ShardedIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+) -> BatchScanResult:
+    """B hybrid scans with shard-local stitch points in ONE dispatch
+    (no cross-shard reduction pass at all)."""
+    stk = stacked_shards(st)
+    six = stacked_shard_indexes(index)
+    return _stacked_batched_hybrid_ps(
+        stk, six, key_attrs, attrs, los, his, tss, agg_attr
+    )
+
+
+def sharded_batched_pure_index_scan(
+    st: ShardedTable,
+    index: ShardedIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+) -> BatchScanResult:
+    """B index-only scans in ONE dispatch."""
+    stk = stacked_shards(st)
+    six = stacked_shard_indexes(index)
+    return _stacked_batched_pure_index(
+        stk, six, key_attrs, attrs, los, his, tss, agg_attr
+    )
 
 
 # ---------------------------------------------------------------------------
-# Sharded batched scans (the read-burst fan-out)
+# Per-shard loop fan-out (legacy dispatch strategy, kept as the parity
+# oracle and benchmark baseline for the stacked forms above)
 # ---------------------------------------------------------------------------
+
 
 @functools.partial(jax.jit, static_argnames=("attrs", "agg_attr"))
-def sharded_batched_full_table_scan(st: ShardedTable, attrs: tuple, los,
-                                    his, tss, agg_attr: int
-                                    ) -> BatchScanResult:
+def sharded_batched_full_table_scan_loop(
+    st: ShardedTable, attrs: tuple, los, his, tss, agg_attr: int
+) -> BatchScanResult:
     """B plain table scans, one fan-out per shard, tree-reduced."""
     sums, cnts = [], []
     for t in st.shards:
+
         def one(lo, hi, ts, t=t):
             mask = conj_predicate_mask(t, attrs, lo, hi) & visible_mask(t, ts)
             vals = t.data[:, :, agg_attr]
-            return (jnp.sum(jnp.where(mask, vals, 0), dtype=jnp.int32),
-                    jnp.sum(mask, dtype=jnp.int32))
+            return (
+                jnp.sum(jnp.where(mask, vals, 0), dtype=jnp.int32),
+                jnp.sum(mask, dtype=jnp.int32),
+            )
 
         s_, c_ = jax.vmap(one)(los, his, tss)
         sums.append(s_)
@@ -310,9 +714,16 @@ def sharded_batched_full_table_scan(st: ShardedTable, attrs: tuple, los,
 
 
 @functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
-def sharded_batched_hybrid_scan(st: ShardedTable, index: ShardedIndex,
-                                key_attrs: tuple, attrs: tuple, los, his,
-                                tss, agg_attr: int) -> BatchScanResult:
+def sharded_batched_hybrid_scan_loop(
+    st: ShardedTable,
+    index: ShardedIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+) -> BatchScanResult:
     """B hybrid scans over per-shard partial indexes: pass 1 reduces
     per-query rho_m across shards into the global stitch point, pass 2
     fans the deduped index prefix + table suffix out per shard."""
@@ -320,9 +731,11 @@ def sharded_batched_hybrid_scan(st: ShardedTable, index: ShardedIndex,
 
     rho_list = []
     for s, (t, ix) in enumerate(zip(st.shards, index.shards)):
+
         def rho_of(lo, hi, ts, t=t, ix=ix, s=s):
-            return _shard_index_probe(t, ix, s, S, key_attrs, attrs,
-                                      lo, hi, ts)[5]
+            return _shard_index_probe(
+                t, ix, s, S, key_attrs, attrs, lo, hi, ts
+            )[5]
 
         rho_list.append(jax.vmap(rho_of)(los, his, tss))
     rho_m = tree_reduce(rho_list, jnp.maximum)
@@ -330,17 +743,18 @@ def sharded_batched_hybrid_scan(st: ShardedTable, index: ShardedIndex,
 
     sums, cnts, ents = [], [], []
     for s, (t, ix) in enumerate(zip(st.shards, index.shards)):
+
         def two(lo, hi, ts, sp, t=t, ix=ix, s=s):
             idx_match, gpg, pg, sl, entry_mask, _ = _shard_index_probe(
-                t, ix, s, S, key_attrs, attrs, lo, hi, ts)
+                t, ix, s, S, key_attrs, attrs, lo, hi, ts
+            )
             idx_keep = idx_match & (gpg < sp)
             tbl_mask = _shard_table_mask(t, s, S, attrs, lo, hi, ts, sp)
             vals = t.data[:, :, agg_attr]
-            s_ = jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0),
-                         dtype=jnp.int32) \
-                + jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
-            c_ = jnp.sum(idx_keep, dtype=jnp.int32) \
-                + jnp.sum(tbl_mask, dtype=jnp.int32)
+            s_ = jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32)
+            s_ = s_ + jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
+            c_ = jnp.sum(idx_keep, dtype=jnp.int32)
+            c_ = c_ + jnp.sum(tbl_mask, dtype=jnp.int32)
             return s_, c_, jnp.sum(entry_mask, dtype=jnp.int32)
 
         s_, c_, e_ = jax.vmap(two)(los, his, tss, start_pages)
@@ -348,86 +762,157 @@ def sharded_batched_hybrid_scan(st: ShardedTable, index: ShardedIndex,
         cnts.append(c_)
         ents.append(e_)
     pages = jnp.clip(_used_pages(st) - start_pages, 0, None).astype(jnp.int32)
-    return BatchScanResult(tree_reduce(sums), tree_reduce(cnts), pages,
-                           tree_reduce(ents), start_pages.astype(jnp.int32))
+    return BatchScanResult(
+        tree_reduce(sums),
+        tree_reduce(cnts),
+        pages,
+        tree_reduce(ents),
+        start_pages.astype(jnp.int32),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
-def sharded_batched_pure_index_scan(st: ShardedTable, index: ShardedIndex,
-                                    key_attrs: tuple, attrs: tuple, los,
-                                    his, tss, agg_attr: int
-                                    ) -> BatchScanResult:
+def sharded_batched_hybrid_scan_pershard_loop(
+    st: ShardedTable,
+    index: ShardedIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+) -> BatchScanResult:
+    """B hybrid scans with shard-local stitch points, one vmapped
+    dispatch per shard."""
+    S = len(st.shards)
+    sums, cnts, ents, pages, gstarts = [], [], [], [], []
+    for s, (t, ix) in enumerate(zip(st.shards, index.shards)):
+
+        def one(lo, hi, ts, t=t, ix=ix, s=s):
+            idx_keep, pg, sl, entry_mask, tbl_mask, pages_s, gstart = (
+                _pershard_stitch(t, ix, s, S, key_attrs, attrs, lo, hi, ts)
+            )
+            vals = t.data[:, :, agg_attr]
+            s_ = jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32)
+            s_ = s_ + jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
+            c_ = jnp.sum(idx_keep, dtype=jnp.int32)
+            c_ = c_ + jnp.sum(tbl_mask, dtype=jnp.int32)
+            e_ = jnp.sum(entry_mask, dtype=jnp.int32)
+            return s_, c_, e_, pages_s, gstart
+
+        s_, c_, e_, p_, g_ = jax.vmap(one)(los, his, tss)
+        sums.append(s_)
+        cnts.append(c_)
+        ents.append(e_)
+        pages.append(p_)
+        gstarts.append(g_)
+    return BatchScanResult(
+        tree_reduce(sums),
+        tree_reduce(cnts),
+        tree_reduce(pages),
+        tree_reduce(ents),
+        tree_reduce(gstarts, jnp.minimum),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def sharded_batched_pure_index_scan_loop(
+    st: ShardedTable,
+    index: ShardedIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+) -> BatchScanResult:
     S = len(st.shards)
     sums, cnts, ents = [], [], []
     for s, (t, ix) in enumerate(zip(st.shards, index.shards)):
+
         def one(lo, hi, ts, t=t, ix=ix, s=s):
             idx_match, _gpg, pg, sl, entry_mask, _ = _shard_index_probe(
-                t, ix, s, S, key_attrs, attrs, lo, hi, ts)
+                t, ix, s, S, key_attrs, attrs, lo, hi, ts
+            )
             vals = t.data[:, :, agg_attr]
-            return (jnp.sum(jnp.where(idx_match, vals[pg, sl], 0),
-                            dtype=jnp.int32),
-                    jnp.sum(idx_match, dtype=jnp.int32),
-                    jnp.sum(entry_mask, dtype=jnp.int32))
+            match_vals = jnp.where(idx_match, vals[pg, sl], 0)
+            return (
+                jnp.sum(match_vals, dtype=jnp.int32),
+                jnp.sum(idx_match, dtype=jnp.int32),
+                jnp.sum(entry_mask, dtype=jnp.int32),
+            )
 
         s_, c_, e_ = jax.vmap(one)(los, his, tss)
         sums.append(s_)
         cnts.append(c_)
         ents.append(e_)
     B = los.shape[0]
-    return BatchScanResult(tree_reduce(sums), tree_reduce(cnts),
-                           jnp.zeros((B,), jnp.int32), tree_reduce(ents),
-                           jnp.full((B,), st.n_pages, jnp.int32))
+    return BatchScanResult(
+        tree_reduce(sums),
+        tree_reduce(cnts),
+        jnp.zeros((B,), jnp.int32),
+        tree_reduce(ents),
+        jnp.full((B,), st.n_pages, jnp.int32),
+    )
 
 
 # ---------------------------------------------------------------------------
 # Multi-device fan-out (pmap): uniform shards, one device per shard
 # ---------------------------------------------------------------------------
 
+
 @functools.lru_cache(maxsize=32)
 def _pmap_full_scan_fn(attrs: tuple, agg_attr: int):
     """pmapped per-shard body for the batched full-table scan.  Each
     device receives one shard's Table (the stacked pytree's leading
     axis is the device axis); per-query bounds broadcast to every
-    device.  The body is the same mask arithmetic as the loop fan-out
-    (``conj_predicate_mask``/``visible_mask``), so the two dispatch
-    strategies cannot drift."""
+    device.  The body is the same mask arithmetic as the stacked
+    fan-out (``conj_predicate_mask``/``visible_mask``), so the two
+    dispatch strategies cannot drift."""
 
     def body(t, los, his, tss):
         def one(lo, hi, ts):
-            mask = conj_predicate_mask(t, attrs, lo, hi) & \
-                visible_mask(t, ts)
+            mask = conj_predicate_mask(t, attrs, lo, hi) & visible_mask(t, ts)
             vals = t.data[:, :, agg_attr]
-            return (jnp.sum(jnp.where(mask, vals, 0), dtype=jnp.int32),
-                    jnp.sum(mask, dtype=jnp.int32))
+            return (
+                jnp.sum(jnp.where(mask, vals, 0), dtype=jnp.int32),
+                jnp.sum(mask, dtype=jnp.int32),
+            )
 
         return jax.vmap(one)(los, his, tss)
 
-    return jax.pmap(body, in_axes=(Table(0, 0, 0, 0), None, None, None))
+    return jax.pmap(body, in_axes=(_TABLE_AXES, None, None, None))
 
 
 def shards_uniform(st: ShardedTable) -> bool:
     return len({t.n_pages for t in st.shards}) == 1
 
 
-def pmap_batched_full_table_scan(st: ShardedTable, attrs: tuple, los, his,
-                                 tss, agg_attr: int) -> BatchScanResult:
+def pmap_batched_full_table_scan(
+    st: ShardedTable, attrs: tuple, los, his, tss, agg_attr: int
+) -> BatchScanResult:
     """Device fan-out: one shard per device via ``jax.pmap``.  Callers
-    must check ``shard_fanout_devices``/``shards_uniform`` first; the
-    reduced aggregates are bit-identical to the loop fan-out."""
-    stacked = Table(*(jnp.stack(xs) for xs in zip(*st.shards)))
+    must check ``shard_fanout_devices``/``shards_uniform`` first (a
+    uniform layout means the cached stacked pytree carries no padding,
+    so its leading axis is exactly the device axis); the reduced
+    aggregates are bit-identical to the loop fan-out."""
+    stacked = stacked_shards(st).table
     fn = _pmap_full_scan_fn(attrs, agg_attr)
-    sums, cnts = fn(stacked, jnp.asarray(los), jnp.asarray(his),
-                    jnp.asarray(tss))                  # (S, B)
+    sums, cnts = fn(
+        stacked, jnp.asarray(los), jnp.asarray(his), jnp.asarray(tss)
+    )  # (S, B)
     B = los.shape[0]
     z = jnp.zeros((B,), jnp.int32)
     used = jnp.full((B,), _used_pages(st), jnp.int32)
-    return BatchScanResult(tree_reduce(list(sums)), tree_reduce(list(cnts)),
-                           used, z, z)
+    return BatchScanResult(
+        tree_reduce(list(sums)), tree_reduce(list(cnts)), used, z, z
+    )
 
 
 # ---------------------------------------------------------------------------
 # The engine facade the executor drives
 # ---------------------------------------------------------------------------
+
 
 class ScanEngine:
     """Dispatch strategy for planned scans over either storage layout.
@@ -442,33 +927,71 @@ class ScanEngine:
     """
 
     def __init__(self):
-        self.after_dispatch = None      # () -> None, set by the runner
+        self.after_dispatch = None  # () -> None, set by the runner
 
     def scan(self, table, plan, attrs: tuple, los, his, ts, agg_attr: int):
         """Single planned scan -> ScanResult | ShardScanResult."""
         path = plan.path
         if isinstance(table, ShardedTable):
             if path == "table":
-                return sharded_full_table_scan(table, attrs, los, his, ts,
-                                               agg_attr)
+                return sharded_full_table_scan(
+                    table, attrs, los, his, ts, agg_attr
+                )
             if path in ("pure_vbp", "pure_vap"):
-                return sharded_pure_index_scan(table, plan.index_state,
-                                               plan.key_attrs, attrs, los,
-                                               his, ts, agg_attr)
+                return sharded_pure_index_scan(
+                    table,
+                    plan.index_state,
+                    plan.key_attrs,
+                    attrs,
+                    los,
+                    his,
+                    ts,
+                    agg_attr,
+                )
             if path == "hybrid_ps":
-                return sharded_hybrid_scan_pershard(table, plan.index_state,
-                                                    plan.key_attrs, attrs,
-                                                    los, his, ts, agg_attr)
-            return sharded_hybrid_scan(table, plan.index_state,
-                                       plan.key_attrs, attrs, los, his, ts,
-                                       agg_attr)
+                return sharded_hybrid_scan_pershard(
+                    table,
+                    plan.index_state,
+                    plan.key_attrs,
+                    attrs,
+                    los,
+                    his,
+                    ts,
+                    agg_attr,
+                )
+            return sharded_hybrid_scan(
+                table,
+                plan.index_state,
+                plan.key_attrs,
+                attrs,
+                los,
+                his,
+                ts,
+                agg_attr,
+            )
         if path == "table":
             return full_table_scan(table, attrs, los, his, ts, agg_attr)
         if path in ("pure_vbp", "pure_vap"):
-            return pure_index_scan(table, plan.index_state, plan.key_attrs,
-                                   attrs, los, his, ts, agg_attr)
-        return hybrid_scan(table, plan.index_state, plan.key_attrs, attrs,
-                           los, his, ts, agg_attr)
+            return pure_index_scan(
+                table,
+                plan.index_state,
+                plan.key_attrs,
+                attrs,
+                los,
+                his,
+                ts,
+                agg_attr,
+            )
+        return hybrid_scan(
+            table,
+            plan.index_state,
+            plan.key_attrs,
+            attrs,
+            los,
+            his,
+            ts,
+            agg_attr,
+        )
 
     def dispatch_complete(self) -> None:
         """Between-dispatch drain point.  The executor calls this after
@@ -477,83 +1000,238 @@ class ScanEngine:
         if self.after_dispatch is not None:
             self.after_dispatch()
 
-    def scan_batch(self, table, path: str, index_state, key_attrs: tuple,
-                   attrs: tuple, los, his, tss, agg_attr: int,
-                   use_kernel: bool = False) -> BatchScanResult:
-        """One batched dispatch (or per-shard fan-out) for a plan group."""
-        if isinstance(table, ShardedTable):
-            return self._scan_batch_sharded(table, path, index_state,
-                                            key_attrs, attrs, los, his, tss,
-                                            agg_attr)
-        # The Pallas kernel evaluates at most 2 predicate columns;
+    def scan_batch(
+        self,
+        table,
+        path: str,
+        index_state,
+        key_attrs: tuple,
+        attrs: tuple,
+        los,
+        his,
+        tss,
+        agg_attr: int,
+        use_kernel: bool = False,
+    ) -> BatchScanResult:
+        """One batched dispatch for a plan group (single dispatch on
+        sharded storage too -- the stacked fan-out)."""
+        # The Pallas kernels evaluate at most 2 predicate columns;
         # wider conjunctions take the vmapped paths.
         kernel_ok = use_kernel and 1 <= len(attrs) <= 2
+        if isinstance(table, ShardedTable):
+            return self._scan_batch_sharded(
+                table,
+                path,
+                index_state,
+                key_attrs,
+                attrs,
+                los,
+                his,
+                tss,
+                agg_attr,
+                kernel_ok,
+            )
         if path == "table":
             if kernel_ok:
-                return self._kernel_full_scan(table, attrs, los, his, tss,
-                                              agg_attr)
-            return batched_full_table_scan(table, attrs, los, his, tss,
-                                           agg_attr)
+                return self._kernel_full_scan(
+                    table, attrs, los, his, tss, agg_attr
+                )
+            return batched_full_table_scan(
+                table, attrs, los, his, tss, agg_attr
+            )
         if path in ("hybrid", "hybrid_ps"):  # plain tables have no shards
             if kernel_ok:
-                return self._kernel_hybrid_scan(table, index_state,
-                                                key_attrs, attrs, los, his,
-                                                tss, agg_attr)
-            return batched_hybrid_scan(table, index_state, key_attrs, attrs,
-                                       los, his, tss, agg_attr)
-        return batched_pure_index_scan(table, index_state, key_attrs, attrs,
-                                       los, his, tss, agg_attr)
+                return self._kernel_hybrid_scan(
+                    table,
+                    index_state,
+                    key_attrs,
+                    attrs,
+                    los,
+                    his,
+                    tss,
+                    agg_attr,
+                )
+            return batched_hybrid_scan(
+                table, index_state, key_attrs, attrs, los, his, tss, agg_attr
+            )
+        return batched_pure_index_scan(
+            table, index_state, key_attrs, attrs, los, his, tss, agg_attr
+        )
 
     # -- kernel paths (TPU; interpret mode on CPU) -----------------------
     @staticmethod
-    def _kernel_full_scan(table: Table, attrs, los, his, tss,
-                          agg_attr: int) -> BatchScanResult:
+    def _kernel_full_scan(
+        table: Table, attrs, los, his, tss, agg_attr: int
+    ) -> BatchScanResult:
         from repro.kernels import ops as _kops
-        sums, cnts = _kops.scan_table_batched(table, attrs, los, his, tss,
-                                              agg_attr)
+
+        sums, cnts = _kops.scan_table_batched(
+            table, attrs, los, his, tss, agg_attr
+        )
         B = los.shape[0]
         used = -(-int(table.n_rows) // table.page_size)
         z = jnp.zeros((B,), jnp.int32)
-        return BatchScanResult(sums, cnts, jnp.full((B,), used, jnp.int32),
-                               z, z)
+        return BatchScanResult(
+            sums, cnts, jnp.full((B,), used, jnp.int32), z, z
+        )
 
     @staticmethod
-    def _kernel_hybrid_scan(table: Table, index: AdHocIndex, key_attrs,
-                            attrs, los, his, tss,
-                            agg_attr: int) -> BatchScanResult:
+    def _kernel_hybrid_scan(
+        table: Table,
+        index: AdHocIndex,
+        key_attrs,
+        attrs,
+        los,
+        his,
+        tss,
+        agg_attr: int,
+    ) -> BatchScanResult:
         """Hybrid scans with the table suffix on the multi-query kernel:
         the jnp prefix pass yields per-query stitch points, which flow
         into the kernel as scalar-prefetched ``start_pages`` so blocks
         inside every query's indexed prefix skip their DMA."""
         from repro.kernels import ops as _kops
-        pre = batched_hybrid_index_prefix(table, index, key_attrs, attrs,
-                                          los, his, tss, agg_attr)
-        tbl_sums, tbl_cnts = _kops.scan_table_batched(
-            table, attrs, los, his, tss, agg_attr,
-            start_pages=pre.start_page)
-        used = ((table.n_rows + table.page_size - 1)
-                // table.page_size).astype(jnp.int32)
-        pages = jnp.clip(used - pre.start_page, 0, None).astype(jnp.int32)
-        return BatchScanResult(pre.agg_sum + tbl_sums, pre.count + tbl_cnts,
-                               pages, pre.entries_probed, pre.start_page)
 
-    # -- sharded fan-out -------------------------------------------------
+        pre = batched_hybrid_index_prefix(
+            table, index, key_attrs, attrs, los, his, tss, agg_attr
+        )
+        tbl_sums, tbl_cnts = _kops.scan_table_batched(
+            table, attrs, los, his, tss, agg_attr, start_pages=pre.start_page
+        )
+        psz = table.page_size
+        used = ((table.n_rows + psz - 1) // psz).astype(jnp.int32)
+        pages = jnp.clip(used - pre.start_page, 0, None).astype(jnp.int32)
+        return BatchScanResult(
+            pre.agg_sum + tbl_sums,
+            pre.count + tbl_cnts,
+            pages,
+            pre.entries_probed,
+            pre.start_page,
+        )
+
     @staticmethod
-    def _scan_batch_sharded(table: ShardedTable, path: str, index_state,
-                            key_attrs, attrs, los, his, tss,
-                            agg_attr: int) -> BatchScanResult:
+    def _kernel_sharded_full_scan(
+        table: ShardedTable, attrs, los, his, tss, agg_attr: int
+    ) -> BatchScanResult:
+        """Fused full scans: every shard rides the (shard, page-block,
+        query) grid of one kernel launch, start_pages all zero."""
+        from repro.kernels import ops as _kops
+
+        stk = stacked_shards(table)
+        B = los.shape[0]
+        starts = jnp.zeros((table.n_shards, B), jnp.int32)
+        sums, cnts = _kops.scan_shards_batched(
+            stk, attrs, los, his, tss, agg_attr, starts
+        )
+        used = -(-int(table.n_rows) // table.page_size)
+        z = jnp.zeros((B,), jnp.int32)
+        return BatchScanResult(
+            sums, cnts, jnp.full((B,), used, jnp.int32), z, z
+        )
+
+    @staticmethod
+    def _kernel_sharded_hybrid_scan(
+        table: ShardedTable,
+        index: ShardedIndex,
+        key_attrs,
+        attrs,
+        los,
+        his,
+        tss,
+        agg_attr: int,
+        pershard: bool,
+    ) -> BatchScanResult:
+        """Fused hybrid scans: the jnp prefix pass emits ONE
+        per-(shard, query) ``start_pages`` table -- local stitch points
+        under the per-shard stitch, the global stitch point mapped to
+        each shard's local page space otherwise -- and the fused kernel
+        evaluates every shard's table suffix in one launch."""
+        from repro.kernels import ops as _kops
+
+        stk = stacked_shards(table)
+        six = stacked_shard_indexes(index)
+        if pershard:
+            psum, pcnt, ents, local_starts, pages, gstart = (
+                _stacked_hybrid_prefix_ps(
+                    stk, six, key_attrs, attrs, los, his, tss, agg_attr
+                )
+            )
+        else:
+            psum, pcnt, ents, gstart, local_starts = _stacked_hybrid_prefix(
+                stk, six, key_attrs, attrs, los, his, tss, agg_attr
+            )
+            used = _used_pages(table)
+            pages = jnp.clip(used - gstart, 0, None).astype(jnp.int32)
+        ksums, kcnts = _kops.scan_shards_batched(
+            stk, attrs, los, his, tss, agg_attr, local_starts
+        )
+        return BatchScanResult(
+            psum + ksums, pcnt + kcnts, pages, ents, gstart
+        )
+
+    # -- sharded single dispatch -----------------------------------------
+    @classmethod
+    def _scan_batch_sharded(
+        cls,
+        table: ShardedTable,
+        path: str,
+        index_state,
+        key_attrs,
+        attrs,
+        los,
+        his,
+        tss,
+        agg_attr: int,
+        kernel_ok: bool,
+    ) -> BatchScanResult:
         if path == "table":
-            if (shard_fanout_devices(table.n_shards) is not None
-                    and shards_uniform(table)):
-                return pmap_batched_full_table_scan(table, attrs, los, his,
-                                                    tss, agg_attr)
-            return sharded_batched_full_table_scan(table, attrs, los, his,
-                                                   tss, agg_attr)
+            # One device per shard beats one fused launch on one
+            # device -- the pmap fan-out keeps precedence over the
+            # kernel flag when the host can actually place it.
+            devices = shard_fanout_devices(table.n_shards)
+            if devices is not None and shards_uniform(table):
+                return pmap_batched_full_table_scan(
+                    table, attrs, los, his, tss, agg_attr
+                )
+            if kernel_ok:
+                return cls._kernel_sharded_full_scan(
+                    table, attrs, los, his, tss, agg_attr
+                )
+            return sharded_batched_full_table_scan(
+                table, attrs, los, his, tss, agg_attr
+            )
         if path == "hybrid":
-            return sharded_batched_hybrid_scan(table, index_state, key_attrs,
-                                               attrs, los, his, tss, agg_attr)
+            if kernel_ok:
+                return cls._kernel_sharded_hybrid_scan(
+                    table,
+                    index_state,
+                    key_attrs,
+                    attrs,
+                    los,
+                    his,
+                    tss,
+                    agg_attr,
+                    pershard=False,
+                )
+            return sharded_batched_hybrid_scan(
+                table, index_state, key_attrs, attrs, los, his, tss, agg_attr
+            )
         if path == "hybrid_ps":
+            if kernel_ok:
+                return cls._kernel_sharded_hybrid_scan(
+                    table,
+                    index_state,
+                    key_attrs,
+                    attrs,
+                    los,
+                    his,
+                    tss,
+                    agg_attr,
+                    pershard=True,
+                )
             return sharded_batched_hybrid_scan_pershard(
-                table, index_state, key_attrs, attrs, los, his, tss, agg_attr)
-        return sharded_batched_pure_index_scan(table, index_state, key_attrs,
-                                               attrs, los, his, tss, agg_attr)
+                table, index_state, key_attrs, attrs, los, his, tss, agg_attr
+            )
+        return sharded_batched_pure_index_scan(
+            table, index_state, key_attrs, attrs, los, his, tss, agg_attr
+        )

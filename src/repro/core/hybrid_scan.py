@@ -22,6 +22,7 @@ the overlapping page).  Property tests (tests/test_hybrid_scan.py)
 verify completeness and exactly-once against a brute-force oracle,
 including mid-build states, updates, and inserts.
 """
+
 from __future__ import annotations
 
 import functools
@@ -30,20 +31,20 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.table import (Table, conj_predicate_mask, visible_mask)
 from repro.core.index import AdHocIndex, index_range_scan, key_range
+from repro.core.table import Table, conj_predicate_mask, visible_mask
 
 
 class ScanResult(NamedTuple):
     """Aggregates + accounting from one scan execution."""
 
-    agg_sum: jax.Array        # () int64 SUM(a_k) over matches
-    count: jax.Array          # () int32 number of matching rows
-    contrib: jax.Array        # (n_pages, page_size) int32 -- times each row
-                              # was returned (must be 0/1; tested)
+    agg_sum: jax.Array  # () int64 SUM(a_k) over matches
+    count: jax.Array  # () int32 number of matching rows
+    contrib: jax.Array  # (n_pages, page_size) int32 -- times each row
+    # was returned (must be 0/1; tested)
     pages_scanned: jax.Array  # () int32 table pages touched
-    entries_probed: jax.Array # () int32 index entries touched
-    start_page: jax.Array     # () int32 where the table scan began
+    entries_probed: jax.Array  # () int32 index entries touched
+    start_page: jax.Array  # () int32 where the table scan began
 
 
 class BatchScanResult(NamedTuple):
@@ -57,11 +58,11 @@ class BatchScanResult(NamedTuple):
     is covered by tests/test_batch_exec.py).
     """
 
-    agg_sum: jax.Array        # (B,) int32
-    count: jax.Array          # (B,) int32
+    agg_sum: jax.Array  # (B,) int32
+    count: jax.Array  # (B,) int32
     pages_scanned: jax.Array  # (B,) int32
-    entries_probed: jax.Array # (B,) int32
-    start_page: jax.Array     # (B,) int32
+    entries_probed: jax.Array  # (B,) int32
+    start_page: jax.Array  # (B,) int32
 
 
 def _predicate_key_bounds(key_attrs: tuple, attrs: tuple, los, his):
@@ -71,7 +72,9 @@ def _predicate_key_bounds(key_attrs: tuple, attrs: tuple, los, his):
     full domain."""
     pmap = {a: k for k, a in enumerate(attrs)}
     if key_attrs[0] not in pmap:
-        raise ValueError("index leading attribute not constrained by predicate")
+        raise ValueError(
+            "index leading attribute not constrained by predicate"
+        )
     lo0, hi0 = los[pmap[key_attrs[0]]], his[pmap[key_attrs[0]]]
     if len(key_attrs) == 1:
         return key_range(lo0, hi0)
@@ -82,8 +85,16 @@ def _predicate_key_bounds(key_attrs: tuple, attrs: tuple, los, his):
     return key_range(lo0, hi0, lo1, hi1)
 
 
-def _hybrid_scan_core(table: Table, index: AdHocIndex, key_attrs: tuple,
-                      attrs: tuple, los, his, ts, agg_attr: int):
+def _hybrid_scan_core(
+    table: Table,
+    index: AdHocIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    ts,
+    agg_attr: int,
+):
     """Shared hybrid-scan body: returns the aggregate/accounting tuple
     plus the match masks the single-query wrapper needs for contrib.
     The batched path vmaps this and drops the masks (XLA prunes the
@@ -97,7 +108,7 @@ def _hybrid_scan_core(table: Table, index: AdHocIndex, key_attrs: tuple,
     sl = rids % psz
     rows_ok = conj_predicate_mask(table, attrs, los, his)[pg, sl]
     rows_ok &= visible_mask(table, ts)[pg, sl]
-    idx_match = entry_mask & rows_ok                       # (capacity,)
+    idx_match = entry_mask & rows_ok  # (capacity,)
 
     # ---- 2. rho_m / rho_i ----------------------------------------------
     rho_m = jnp.max(jnp.where(idx_match, pg, -1))
@@ -109,43 +120,67 @@ def _hybrid_scan_core(table: Table, index: AdHocIndex, key_attrs: tuple,
     # ---- 4. dedup + combine --------------------------------------------
     idx_keep = idx_match & (pg < start_page)
     page_ids = jnp.arange(table.n_pages, dtype=jnp.int32)[:, None]
-    tbl_mask = conj_predicate_mask(table, attrs, los, his) & visible_mask(table, ts)
+    tbl_mask = conj_predicate_mask(table, attrs, los, his)
+    tbl_mask &= visible_mask(table, ts)
     tbl_mask &= page_ids >= start_page
 
     vals = table.data[:, :, agg_attr]
     idx_sum = jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32)
     tbl_sum = jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
-    count = (jnp.sum(idx_keep, dtype=jnp.int32)
-             + jnp.sum(tbl_mask, dtype=jnp.int32))
+    count = jnp.sum(idx_keep, dtype=jnp.int32)
+    count = count + jnp.sum(tbl_mask, dtype=jnp.int32)
 
     # Cost accounting: only pages up to the append watermark are real;
     # reserved headroom pages beyond it hold no tuples and a real
     # engine would never read them.
     used_pages = (table.n_rows + psz - 1) // psz
-    pages_scanned = jnp.clip(used_pages - start_page, 0, None).astype(jnp.int32)
+    pages_scanned = jnp.clip(used_pages - start_page, 0, None)
     entries_probed = jnp.sum(entry_mask, dtype=jnp.int32)
-    stats = (idx_sum + tbl_sum, count, pages_scanned, entries_probed,
-             start_page.astype(jnp.int32))
+    stats = (
+        idx_sum + tbl_sum,
+        count,
+        pages_scanned.astype(jnp.int32),
+        entries_probed,
+        start_page.astype(jnp.int32),
+    )
     return stats, idx_keep, tbl_mask, pg, sl
 
 
 @functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
-def hybrid_scan(table: Table, index: AdHocIndex, key_attrs: tuple,
-                attrs: tuple, los, his, ts, agg_attr: int) -> ScanResult:
+def hybrid_scan(
+    table: Table,
+    index: AdHocIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    ts,
+    agg_attr: int,
+) -> ScanResult:
     """Value-agnostic hybrid scan: index prefix + table suffix."""
     stats, idx_keep, tbl_mask, pg, sl = _hybrid_scan_core(
-        table, index, key_attrs, attrs, los, his, ts, agg_attr)
+        table, index, key_attrs, attrs, los, his, ts, agg_attr
+    )
     agg_sum, count, pages_scanned, entries_probed, start_page = stats
     contrib = jnp.zeros((table.n_pages, table.page_size), jnp.int32)
     contrib = contrib.at[pg, sl].add(idx_keep.astype(jnp.int32))
     contrib = contrib + tbl_mask.astype(jnp.int32)
-    return ScanResult(agg_sum, count, contrib,
-                      pages_scanned, entries_probed, start_page)
+    return ScanResult(
+        agg_sum, count, contrib, pages_scanned, entries_probed, start_page
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
-def pure_index_scan(table: Table, index: AdHocIndex, key_attrs: tuple,
-                    attrs: tuple, los, his, ts, agg_attr: int) -> ScanResult:
+def pure_index_scan(
+    table: Table,
+    index: AdHocIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    ts,
+    agg_attr: int,
+) -> ScanResult:
     """Index-only scan -- legal only when the index covers the predicate
     (FULL scheme with a complete index, or VBP with a covered
     sub-domain)."""
@@ -161,24 +196,35 @@ def pure_index_scan(table: Table, index: AdHocIndex, key_attrs: tuple,
     vals = table.data[:, :, agg_attr]
     s = jnp.sum(jnp.where(idx_match, vals[pg, sl], 0), dtype=jnp.int32)
     c = jnp.sum(idx_match, dtype=jnp.int32)
-    return ScanResult(s, c, contrib, jnp.zeros((), jnp.int32),
-                      jnp.sum(entry_mask, dtype=jnp.int32),
-                      jnp.asarray(table.n_pages, jnp.int32))
+    return ScanResult(
+        s,
+        c,
+        contrib,
+        jnp.zeros((), jnp.int32),
+        jnp.sum(entry_mask, dtype=jnp.int32),
+        jnp.asarray(table.n_pages, jnp.int32),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("attrs", "agg_attr"))
-def full_table_scan(table: Table, attrs: tuple, los, his, ts,
-                    agg_attr: int) -> ScanResult:
+def full_table_scan(
+    table: Table, attrs: tuple, los, his, ts, agg_attr: int
+) -> ScanResult:
     """Plain table scan (no usable index)."""
-    tbl_mask = conj_predicate_mask(table, attrs, los, his) & visible_mask(table, ts)
+    tbl_mask = conj_predicate_mask(table, attrs, los, his)
+    tbl_mask &= visible_mask(table, ts)
     vals = table.data[:, :, agg_attr]
     s = jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
     c = jnp.sum(tbl_mask, dtype=jnp.int32)
-    used_pages = ((table.n_rows + table.page_size - 1)
-                  // table.page_size).astype(jnp.int32)
-    return ScanResult(s, c, tbl_mask.astype(jnp.int32),
-                      used_pages,
-                      jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+    used_pages = (table.n_rows + table.page_size - 1) // table.page_size
+    return ScanResult(
+        s,
+        c,
+        tbl_mask.astype(jnp.int32),
+        used_pages.astype(jnp.int32),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int32),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -192,33 +238,44 @@ def full_table_scan(table: Table, attrs: tuple, los, his, ts,
 # vmapped forms are the fast path).  Results are per-query
 # bit-identical to the single-query operators above.
 
+
 @functools.partial(jax.jit, static_argnames=("attrs", "agg_attr"))
-def batched_full_table_scan(table: Table, attrs: tuple, los, his, tss,
-                            agg_attr: int) -> BatchScanResult:
+def batched_full_table_scan(
+    table: Table, attrs: tuple, los, his, tss, agg_attr: int
+) -> BatchScanResult:
     """B plain table scans in one dispatch."""
+
     def one(lo, hi, ts):
-        tbl_mask = conj_predicate_mask(table, attrs, lo, hi) \
-            & visible_mask(table, ts)
+        tbl_mask = conj_predicate_mask(table, attrs, lo, hi)
+        tbl_mask &= visible_mask(table, ts)
         vals = table.data[:, :, agg_attr]
         s = jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
         c = jnp.sum(tbl_mask, dtype=jnp.int32)
-        used_pages = ((table.n_rows + table.page_size - 1)
-                      // table.page_size).astype(jnp.int32)
+        used = (table.n_rows + table.page_size - 1) // table.page_size
         z = jnp.zeros((), jnp.int32)
-        return s, c, used_pages, z, z
+        return s, c, used.astype(jnp.int32), z, z
 
     return BatchScanResult(*jax.vmap(one)(los, his, tss))
 
 
 @functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
-def batched_hybrid_scan(table: Table, index: AdHocIndex, key_attrs: tuple,
-                        attrs: tuple, los, his, tss,
-                        agg_attr: int) -> BatchScanResult:
+def batched_hybrid_scan(
+    table: Table,
+    index: AdHocIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+) -> BatchScanResult:
     """B hybrid scans over one shared partial index in one dispatch.
     Per-query stitch points (start_page) fall out of the vmapped core."""
+
     def one(lo, hi, ts):
-        stats, *_ = _hybrid_scan_core(table, index, key_attrs, attrs,
-                                      lo, hi, ts, agg_attr)
+        stats, *_ = _hybrid_scan_core(
+            table, index, key_attrs, attrs, lo, hi, ts, agg_attr
+        )
         return stats
 
     return BatchScanResult(*jax.vmap(one)(los, his, tss))
@@ -234,16 +291,23 @@ class HybridPrefixResult(NamedTuple):
     result bit-identically to ``batched_hybrid_scan``.
     """
 
-    agg_sum: jax.Array        # (B,) int32
-    count: jax.Array          # (B,) int32
-    entries_probed: jax.Array # (B,) int32
-    start_page: jax.Array     # (B,) int32
+    agg_sum: jax.Array  # (B,) int32
+    count: jax.Array  # (B,) int32
+    entries_probed: jax.Array  # (B,) int32
+    start_page: jax.Array  # (B,) int32
 
 
 @functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
-def batched_hybrid_index_prefix(table: Table, index: AdHocIndex,
-                                key_attrs: tuple, attrs: tuple, los, his,
-                                tss, agg_attr: int) -> HybridPrefixResult:
+def batched_hybrid_index_prefix(
+    table: Table,
+    index: AdHocIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+) -> HybridPrefixResult:
     """B hybrid-scan index prefixes + stitch points in one dispatch."""
     psz = table.page_size
     vals = table.data[:, :, agg_attr]
@@ -260,16 +324,27 @@ def batched_hybrid_index_prefix(table: Table, index: AdHocIndex,
         idx_keep = idx_match & (pg < start_page)
         s = jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32)
         c = jnp.sum(idx_keep, dtype=jnp.int32)
-        return (s, c, jnp.sum(entry_mask, dtype=jnp.int32),
-                start_page.astype(jnp.int32))
+        return (
+            s,
+            c,
+            jnp.sum(entry_mask, dtype=jnp.int32),
+            start_page.astype(jnp.int32),
+        )
 
     return HybridPrefixResult(*jax.vmap(one)(los, his, tss))
 
 
 @functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
-def batched_pure_index_scan(table: Table, index: AdHocIndex, key_attrs: tuple,
-                            attrs: tuple, los, his, tss,
-                            agg_attr: int) -> BatchScanResult:
+def batched_pure_index_scan(
+    table: Table,
+    index: AdHocIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+) -> BatchScanResult:
     """B index-only scans in one dispatch (same legality conditions as
     ``pure_index_scan``)."""
     psz = table.page_size
@@ -284,8 +359,12 @@ def batched_pure_index_scan(table: Table, index: AdHocIndex, key_attrs: tuple,
         vals = table.data[:, :, agg_attr]
         s = jnp.sum(jnp.where(idx_match, vals[pg, sl], 0), dtype=jnp.int32)
         c = jnp.sum(idx_match, dtype=jnp.int32)
-        return (s, c, jnp.zeros((), jnp.int32),
-                jnp.sum(entry_mask, dtype=jnp.int32),
-                jnp.asarray(table.n_pages, jnp.int32))
+        return (
+            s,
+            c,
+            jnp.zeros((), jnp.int32),
+            jnp.sum(entry_mask, dtype=jnp.int32),
+            jnp.asarray(table.n_pages, jnp.int32),
+        )
 
     return BatchScanResult(*jax.vmap(one)(los, his, tss))

@@ -33,12 +33,14 @@ scanned.
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
 from typing import NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.table import (INF_TS, ShardedTable, Table, global_rids)
+from repro.core.table import (INF_TS, ShardedTable, Table, global_rids,
+                              identity_lru_lookup)
 
 I32_MAX = jnp.int32(2**31 - 1)
 I32_MIN = jnp.int32(-(2**31))
@@ -207,6 +209,55 @@ class ShardedIndex(NamedTuple):
 
 def make_sharded_index(table: ShardedTable) -> ShardedIndex:
     return ShardedIndex(tuple(make_index(t.capacity) for t in table.shards))
+
+
+# ---------------------------------------------------------------------------
+# Stacked shard indexes: the fused single-dispatch layout's index side
+# ---------------------------------------------------------------------------
+#
+# Companion of ``table.stacked_shards``: every shard's sorted entry
+# arrays stacked on one leading axis, padded to the max shard capacity
+# with (I32_MAX, I32_MAX) keys and rid 0.  Padded slots sit at
+# positions >= the shard's real capacity, and ``n_entries`` never
+# exceeds the real capacity, so the ``ar < n_entries`` guard in
+# ``index_range_scan`` masks them off -- probe results and
+# ``entries_probed`` accounting are bit-identical to the per-shard
+# arrays.  Cached by shards-tuple identity exactly like the table
+# stack: build quanta and VBP populations replace the tuple, so a
+# stale stack can never be returned.
+
+
+_INDEX_STACK_CACHE: OrderedDict = OrderedDict()
+# Pins one padded copy per entry; sized for the sharded indexes a
+# burst can actually touch (a handful of live BuiltIndex records),
+# not for dead generations left behind by build quanta.
+_INDEX_STACK_CACHE_MAX = 8
+
+
+def _stack_shard_indexes(index: "ShardedIndex") -> AdHocIndex:
+    cmax = max(ix.capacity for ix in index.shards)
+
+    def padv(x, fill):
+        pad = cmax - x.shape[0]
+        if pad == 0:
+            return x
+        return jnp.pad(x, ((0, pad),), constant_values=fill)
+
+    return AdHocIndex(
+        key_hi=jnp.stack([padv(ix.key_hi, I32_MAX) for ix in index.shards]),
+        key_lo=jnp.stack([padv(ix.key_lo, I32_MAX) for ix in index.shards]),
+        rids=jnp.stack([padv(ix.rids, 0) for ix in index.shards]),
+        n_entries=jnp.stack([ix.n_entries for ix in index.shards]),
+        built_pages=jnp.stack([ix.built_pages for ix in index.shards]),
+    )
+
+
+def stacked_shard_indexes(index: "ShardedIndex") -> AdHocIndex:
+    """Cached stacked/padded per-shard index arrays (leading shard
+    axis on every ``AdHocIndex`` leaf)."""
+    return identity_lru_lookup(
+        _INDEX_STACK_CACHE, _INDEX_STACK_CACHE_MAX, index.shards,
+        lambda: _stack_shard_indexes(index))
 
 
 def _count_owned_below(bound: int, shard: int, n_shards: int) -> int:

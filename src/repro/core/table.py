@@ -28,6 +28,7 @@ visible.
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
 from typing import NamedTuple, Tuple
 
 import jax
@@ -363,6 +364,109 @@ def unshard_table(st: ShardedTable) -> Table:
         begin = begin.at[s::S].set(t.begin_ts)
         end = end.at[s::S].set(t.end_ts)
     return Table(data, begin, end, jnp.asarray(st.n_rows, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Stacked shard pytree: the fused single-dispatch layout
+# ---------------------------------------------------------------------------
+#
+# The engine's batched sharded scans do not loop over shards any more:
+# every shard's column planes are stacked on one leading axis (padded
+# to a uniform local page grid) so one vmapped program -- or one
+# Pallas launch with a shard grid axis -- covers every shard.  Padding
+# pages carry ``begin_ts == NEVER_TS``, so they are invisible to every
+# snapshot and contribute exact int32 zeros to every aggregate; the
+# real per-shard geometry travels alongside (``local_pages`` and each
+# shard's local ``n_rows`` watermark), so accounting never sees the
+# padding.
+#
+# The stack is cached per ``ShardedTable.shards`` tuple *identity*:
+# every mutator (``sharded_insert_rows`` / ``sharded_update_rows``)
+# and ``Database.reshard`` builds a fresh shards tuple, so a mutation
+# is automatically a cache miss -- functional invalidation.  Entries
+# keep a strong reference to their key tuple, which also makes the
+# id() key collision-proof while the entry lives.
+
+
+class StackedShards(NamedTuple):
+    """All shards of one ``ShardedTable`` on a leading shard axis.
+
+    ``table`` is a ``Table`` pytree whose leaves carry the extra
+    leading (S,) axis (``n_rows`` holds the per-shard local
+    watermarks); slicing shard ``s`` off every leaf yields that
+    shard's exact padded Table, so per-shard operators vmap over it
+    unchanged.  NOTE: ``Table``'s geometry properties read the wrong
+    axes on the stacked leaves -- use ``shard_ids``/``local_pages``
+    and the owning ``ShardedTable`` for geometry instead.
+    """
+
+    table: Table  # leaves: (S, max_pages, page_size[, n_attrs]) / (S,)
+    shard_ids: jax.Array  # (S,) int32
+    local_pages: jax.Array  # (S,) int32 pre-padding page counts
+
+
+_STACK_CACHE: OrderedDict = OrderedDict()  # id(shards) -> (shards, stacked)
+# Each entry pins its shards tuple AND a padded copy (~2x one table).
+# The cap only needs to cover the tables live in one Database (scan
+# fan-outs always hit the newest tuple per table; older generations
+# are dead weight), so keep it tight: mutation-heavy workloads would
+# otherwise pin MAX dead table generations.
+_STACK_CACHE_MAX = 4
+
+
+def _same_tuple(a: tuple, b: tuple) -> bool:
+    return len(a) == len(b) and all(x is y for x, y in zip(a, b))
+
+
+def identity_lru_lookup(cache: OrderedDict, max_entries: int,
+                        key_tuple: tuple, build):
+    """Identity-keyed LRU shared by the stack caches (this module and
+    ``index.stacked_shard_indexes``): the entry key is the *identity*
+    of ``key_tuple``'s elements, and every entry pins its key tuple so
+    an id() can never be reused while the entry lives.  ``build`` is
+    called on a miss."""
+    key = id(key_tuple)
+    hit = cache.get(key)
+    if hit is not None and _same_tuple(hit[0], key_tuple):
+        cache.move_to_end(key)
+        return hit[1]
+    value = build()
+    cache[key] = (key_tuple, value)
+    while len(cache) > max_entries:
+        cache.popitem(last=False)
+    return value
+
+
+def _stack_shards(st: ShardedTable) -> StackedShards:
+    max_pages = max(t.n_pages for t in st.shards)
+
+    def padp(x, fill):
+        pad = max_pages - x.shape[0]
+        if pad == 0:
+            return x
+        widths = ((0, pad),) + ((0, 0),) * (x.ndim - 1)
+        return jnp.pad(x, widths, constant_values=fill)
+
+    table = Table(
+        data=jnp.stack([padp(t.data, 0) for t in st.shards]),
+        begin_ts=jnp.stack([padp(t.begin_ts, NEVER_TS) for t in st.shards]),
+        end_ts=jnp.stack([padp(t.end_ts, INF_TS) for t in st.shards]),
+        n_rows=jnp.stack([jnp.asarray(t.n_rows, jnp.int32)
+                          for t in st.shards]),
+    )
+    return StackedShards(
+        table=table,
+        shard_ids=jnp.arange(st.n_shards, dtype=jnp.int32),
+        local_pages=jnp.asarray([t.n_pages for t in st.shards], jnp.int32),
+    )
+
+
+def stacked_shards(st: ShardedTable) -> StackedShards:
+    """Cached stacked/padded pytree for ``st`` (see the section note:
+    mutators and reshard rebuild the shards tuple, so identity keying
+    doubles as invalidation)."""
+    return identity_lru_lookup(_STACK_CACHE, _STACK_CACHE_MAX, st.shards,
+                               lambda: _stack_shards(st))
 
 
 @functools.partial(jax.jit, static_argnames=("max_new",))

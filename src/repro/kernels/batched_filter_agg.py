@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: multi-query fused filter+aggregate table scan.
+"""Pallas TPU kernels: multi-query fused filter+aggregate table scans.
 
 One launch evaluates a whole *batch* of conjunctive filter+aggregate
 queries over the same column planes.  The per-query dispatch path
@@ -23,10 +23,32 @@ Batching amortises both:
   Accumulation stays int32 (the engine's documented wraparound
   semantics).
 
+``sharded_batched_filter_agg`` extends the same design with a leading
+*shard* grid axis over stacked column planes (``(S, n_pages,
+page_size)``; see ``core.table.stacked_shards``), so a sharded read
+burst is ONE launch regardless of shard count:
+
+* Grid is ``(shard, page_block, query)``, query still innermost; each
+  (shard, block) tile streams once per batch.
+* ``start_pages`` is a per-(shard, query) scalar-prefetch table of
+  *local* stitch points -- one layout covers pure full scans (all
+  zero), the global hybrid stitch (the global start page mapped into
+  each shard's local page space) and the per-shard ``hybrid_ps``
+  stitch (each shard's own local stitch point).
+* Shards are padded to a uniform page grid.  Padding *pages* carry
+  ``begin_ts == INT32_MAX`` so the visibility term masks them off;
+  whole padding *blocks* past a shard's last real block are skipped
+  pre-DMA exactly like prefix blocks: the index map clamps the block
+  coordinate into the shard's [first-needed, last-real] block range,
+  so skipped steps revisit a resident block and ``pl.when`` zeroes
+  their outputs.
+
 Semantics contract: ``ref.batched_filter_agg_ref`` -- per query
 identical to ``ref.masked_filter_agg_ref``.  A single-query batch is
-bit-identical to the single-query kernel.
+bit-identical to the single-query kernel; a single-shard launch is
+bit-identical to the plain batched kernel.
 """
+
 from __future__ import annotations
 
 import functools
@@ -36,13 +58,39 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-I32_MIN = -(2 ** 31)
-I32_MAX = 2 ** 31 - 1
+I32_MIN = -(2**31)
+I32_MAX = 2**31 - 1
 
 
-def _batched_kernel(scalars_ref, pred0_ref, pred1_ref, agg_ref,
-                    begin_ref, end_ref, sum_ref, cnt_ref, *,
-                    block_pages: int):
+def _pad_pages(planes, n_pages, block_pages, page_axis):
+    """Pad the page axis up to a whole number of blocks; padding rows
+    carry begin_ts = INT32_MAX -> never visible."""
+    n_blocks = pl.cdiv(n_pages, block_pages)
+    pad = n_blocks * block_pages - n_pages
+    if pad:
+        fills = (0, 0, 0, I32_MAX, I32_MAX)
+
+        def padp(x, fill):
+            widths = [(0, 0)] * x.ndim
+            widths[page_axis] = (0, pad)
+            return jnp.pad(x, widths, constant_values=fill)
+
+        planes = tuple(padp(x, f) for x, f in zip(planes, fills))
+    return planes, n_blocks
+
+
+def _batched_kernel(
+    scalars_ref,
+    pred0_ref,
+    pred1_ref,
+    agg_ref,
+    begin_ref,
+    end_ref,
+    sum_ref,
+    cnt_ref,
+    *,
+    block_pages: int,
+):
     """One grid step: reduce a (block_pages, page_size) tile for one
     query of the batch.
 
@@ -82,9 +130,21 @@ def _batched_kernel(scalars_ref, pred0_ref, pred1_ref, agg_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("block_pages", "interpret"))
-def batched_filter_agg(pred0, pred1, agg, begin_ts, end_ts,
-                       los0, his0, los1, his1, tss, start_pages,
-                       block_pages: int = 8, interpret: bool = False):
+def batched_filter_agg(
+    pred0,
+    pred1,
+    agg,
+    begin_ts,
+    end_ts,
+    los0,
+    his0,
+    los1,
+    his1,
+    tss,
+    start_pages,
+    block_pages: int = 8,
+    interpret: bool = False,
+):
     """Multi-query fused filter+aggregate scan.
 
     Column planes are (n_pages, page_size) int32, shared by every
@@ -97,26 +157,31 @@ def batched_filter_agg(pred0, pred1, agg, begin_ts, end_ts,
     n_pages, page_size = pred0.shape
     n_queries = los0.shape[0]
 
-    n_blocks = pl.cdiv(n_pages, block_pages)
-    pad = n_blocks * block_pages - n_pages
-    if pad:
-        # Padding rows carry begin_ts = INT32_MAX -> never visible.
-        def padp(x, fill):
-            return jnp.pad(x, ((0, pad), (0, 0)), constant_values=fill)
-        pred0 = padp(pred0, 0)
-        pred1 = padp(pred1, 0)
-        agg = padp(agg, 0)
-        begin_ts = padp(begin_ts, I32_MAX)
-        end_ts = padp(end_ts, I32_MAX)
+    planes, n_blocks = _pad_pages(
+        (pred0, pred1, agg, begin_ts, end_ts), n_pages, block_pages, 0
+    )
+    pred0, pred1, agg, begin_ts, end_ts = planes
 
     # Row 6: first page-block ANY query needs (blocks below it lie in
     # every query's indexed prefix -- they form a skippable prefix).
     start_pages = jnp.asarray(start_pages, jnp.int32)
-    first_blk = jnp.minimum(jnp.min(start_pages) // block_pages,
-                            n_blocks - 1)
-    scalars = jnp.stack([jnp.asarray(v, jnp.int32) for v in
-                         (los0, his0, los1, his1, tss, start_pages,
-                          jnp.full((n_queries,), first_blk, jnp.int32))])
+    first_blk = jnp.minimum(
+        jnp.min(start_pages) // block_pages, n_blocks - 1
+    )
+    scalars = jnp.stack(
+        [
+            jnp.asarray(v, jnp.int32)
+            for v in (
+                los0,
+                his0,
+                los1,
+                his1,
+                tss,
+                start_pages,
+                jnp.full((n_queries,), first_blk, jnp.int32),
+            )
+        ]
+    )
 
     # index_map receives (*grid_indices, *scalar_prefetch_refs); the
     # input block depends only on the page-block coordinate, so the
@@ -125,8 +190,10 @@ def batched_filter_agg(pred0, pred1, agg, begin_ts, end_ts,
     # skippable prefix revisit THAT block too, so its DMAs are elided
     # -- the pre-DMA skip (pl.when in the kernel body still zeroes the
     # prefix outputs per query).
-    block = pl.BlockSpec((block_pages, page_size),
-                         lambda i, q, s: (jnp.maximum(i, s[6, 0]), 0))
+    block = pl.BlockSpec(
+        (block_pages, page_size),
+        lambda i, q, s: (jnp.maximum(i, s[6, 0]), 0),
+    )
     out_spec = pl.BlockSpec((1, 1), lambda i, q, s: (i, q))
     kernel = functools.partial(_batched_kernel, block_pages=block_pages)
     sums, cnts = pl.pallas_call(
@@ -137,9 +204,154 @@ def batched_filter_agg(pred0, pred1, agg, begin_ts, end_ts,
             in_specs=[block] * 5,
             out_specs=[out_spec, out_spec],
         ),
-        out_shape=[jax.ShapeDtypeStruct((n_blocks, n_queries), jnp.int32),
-                   jax.ShapeDtypeStruct((n_blocks, n_queries), jnp.int32)],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, n_queries), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, n_queries), jnp.int32),
+        ],
         interpret=interpret,
     )(scalars, pred0, pred1, agg, begin_ts, end_ts)
-    return (jnp.sum(sums, axis=0, dtype=jnp.int32),
-            jnp.sum(cnts, axis=0, dtype=jnp.int32))
+    return (
+        jnp.sum(sums, axis=0, dtype=jnp.int32),
+        jnp.sum(cnts, axis=0, dtype=jnp.int32),
+    )
+
+
+def _sharded_kernel(
+    qparams_ref,
+    starts_ref,
+    blocks_ref,
+    pred0_ref,
+    pred1_ref,
+    agg_ref,
+    begin_ref,
+    end_ref,
+    sum_ref,
+    cnt_ref,
+    *,
+    block_pages: int,
+):
+    """One grid step: reduce one shard's (block_pages, page_size) tile
+    for one query of the batch.
+
+    Scalar-prefetch operands (SMEM):
+      qparams_ref (5, n_queries)  -- [lo0, hi0, lo1, hi1, ts] rows
+      starts_ref  (S, n_queries)  -- per-(shard, query) LOCAL stitch
+                                     points (0 = full scan)
+      blocks_ref  (S, 2)          -- per-shard [first_needed_block,
+                                     last_real_block] (index_map +
+                                     padding skip)
+    """
+    s = pl.program_id(0)
+    blk = pl.program_id(1)
+    q = pl.program_id(2)
+    lo0, hi0 = qparams_ref[0, q], qparams_ref[1, q]
+    lo1, hi1 = qparams_ref[2, q], qparams_ref[3, q]
+    ts = qparams_ref[4, q]
+    start_page = starts_ref[s, q]
+    last_blk = blocks_ref[s, 1]
+
+    first_page = blk * block_pages
+    live = (first_page + block_pages > start_page) & (blk <= last_blk)
+
+    @pl.when(jnp.logical_not(live))
+    def _skip():
+        sum_ref[0, 0, 0] = jnp.int32(0)
+        cnt_ref[0, 0, 0] = jnp.int32(0)
+
+    @pl.when(live)
+    def _run():
+        p0 = pred0_ref[...]
+        p1 = pred1_ref[...]
+        ag = agg_ref[...]
+        bts = begin_ref[...]
+        ets = end_ref[...]
+        mask = (p0 >= lo0) & (p0 <= hi0) & (p1 >= lo1) & (p1 <= hi1)
+        mask &= (bts <= ts) & (ts < ets)
+        # Blocks are (1, block_pages, page_size); the page axis is 1.
+        rows = jax.lax.broadcasted_iota(jnp.int32, p0.shape, 1)
+        mask &= (first_page + rows) >= start_page
+        sum_ref[0, 0, 0] = jnp.sum(jnp.where(mask, ag, 0), dtype=jnp.int32)
+        cnt_ref[0, 0, 0] = jnp.sum(mask, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_pages", "interpret"))
+def sharded_batched_filter_agg(
+    pred0,
+    pred1,
+    agg,
+    begin_ts,
+    end_ts,
+    los0,
+    his0,
+    los1,
+    his1,
+    tss,
+    start_pages,
+    local_pages,
+    block_pages: int = 8,
+    interpret: bool = False,
+):
+    """Fused multi-shard multi-query filter+aggregate scan.
+
+    Column planes are stacked per shard, (S, n_pages, page_size) int32
+    with padding pages invisible (begin_ts = INT32_MAX); per-query
+    operands are (n_queries,) int32; ``start_pages`` is the
+    per-(shard, query) table of LOCAL stitch points, (S, n_queries)
+    int32; ``local_pages`` (S,) int32 gives each shard's real
+    (pre-padding) page count so whole padding blocks skip their DMA.
+    Returns (sums, counts), each (n_queries,) int32 -- the partials
+    reduced over shards and blocks (int32 addition is associative, so
+    the reduction order cannot change the bits).
+    """
+    n_shards, n_pages, page_size = pred0.shape
+    n_queries = los0.shape[0]
+
+    planes, n_blocks = _pad_pages(
+        (pred0, pred1, agg, begin_ts, end_ts), n_pages, block_pages, 1
+    )
+    pred0, pred1, agg, begin_ts, end_ts = planes
+
+    qparams = jnp.stack(
+        [jnp.asarray(v, jnp.int32) for v in (los0, his0, los1, his1, tss)]
+    )
+    start_pages = jnp.asarray(start_pages, jnp.int32)
+    # Per-shard block window: [first block any query needs,
+    # last block holding real pages].  The index map clamps the block
+    # coordinate into this window, so prefix blocks AND trailing
+    # padding blocks revisit a resident block (their DMAs are elided);
+    # the kernel body zeroes their outputs.
+    first_blk = jnp.min(start_pages, axis=1) // block_pages
+    last_blk = jnp.maximum(-(-local_pages // block_pages) - 1, 0)
+    last_blk = jnp.minimum(last_blk, n_blocks - 1)
+    first_blk = jnp.minimum(first_blk, last_blk)
+    blocks = jnp.stack(
+        [first_blk.astype(jnp.int32), last_blk.astype(jnp.int32)], axis=1
+    )
+
+    def _imap(s, i, q, qp, stt, bi):
+        del qp, stt
+        return (s, jnp.clip(i, bi[s, 0], bi[s, 1]), 0)
+
+    block = pl.BlockSpec((1, block_pages, page_size), _imap)
+    out_spec = pl.BlockSpec(
+        (1, 1, 1), lambda s, i, q, qp, stt, bi: (s, i, q)
+    )
+    kernel = functools.partial(_sharded_kernel, block_pages=block_pages)
+    sums, cnts = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(n_shards, n_blocks, n_queries),
+            in_specs=[block] * 5,
+            out_specs=[out_spec, out_spec],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((n_shards, n_blocks, n_queries), jnp.int32),
+            jax.ShapeDtypeStruct((n_shards, n_blocks, n_queries), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qparams, start_pages, blocks, pred0, pred1, agg, begin_ts, end_ts)
+    return (
+        jnp.sum(sums, axis=(0, 1), dtype=jnp.int32),
+        jnp.sum(cnts, axis=(0, 1), dtype=jnp.int32),
+    )

@@ -28,6 +28,7 @@ MVCC visibility (begin_ts <= ts < end_ts) is fused into the predicate,
 so the kernel implements the full semantics of the engine's visible
 scan, not a simplification.
 """
+
 from __future__ import annotations
 
 import functools
@@ -37,16 +38,27 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-I32_MIN = -(2 ** 31)
-I32_MAX = 2 ** 31 - 1
+I32_MIN = -(2**31)
+I32_MAX = 2**31 - 1
 
 
-def _filter_agg_kernel(scalars_ref, pred0_ref, pred1_ref, agg_ref,
-                       begin_ref, end_ref, sum_ref, cnt_ref, *,
-                       block_pages: int, use_start_page: bool):
+def _filter_agg_kernel(
+    scalars_ref,
+    pred0_ref,
+    pred1_ref,
+    agg_ref,
+    begin_ref,
+    end_ref,
+    sum_ref,
+    cnt_ref,
+    *,
+    block_pages: int,
+    use_start_page: bool,
+):
     """One grid step: reduce a (block_pages, page_size) tile.
 
-    scalars_ref (SMEM, scalar-prefetch): [lo0, hi0, lo1, hi1, ts, start_page]
+    scalars_ref (SMEM, scalar-prefetch):
+    [lo0, hi0, lo1, hi1, ts, start_page]
     """
     pid = pl.program_id(0)
     lo0, hi0 = scalars_ref[0], scalars_ref[1]
@@ -82,15 +94,27 @@ def _filter_agg_kernel(scalars_ref, pred0_ref, pred1_ref, agg_ref,
         @pl.when(first_page + block_pages > start_page)
         def _run():
             body()
+
     else:
         body()
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("block_pages", "interpret"))
-def filter_agg(pred0, pred1, agg, begin_ts, end_ts, lo0, hi0, lo1, hi1, ts,
-               start_page=None, block_pages: int = 8,
-               interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("block_pages", "interpret"))
+def filter_agg(
+    pred0,
+    pred1,
+    agg,
+    begin_ts,
+    end_ts,
+    lo0,
+    hi0,
+    lo1,
+    hi1,
+    ts,
+    start_page=None,
+    block_pages: int = 8,
+    interpret: bool = False,
+):
     """Fused filter+aggregate scan.  See ref.filter_agg_ref for the
     contract; ``start_page`` switches on the hybrid-scan page skip
     (ref.masked_filter_agg_ref).
@@ -110,14 +134,19 @@ def filter_agg(pred0, pred1, agg, begin_ts, end_ts, lo0, hi0, lo1, hi1, ts,
         # Padding rows carry begin_ts = INT32_MAX -> never visible.
         def padp(x, fill):
             return jnp.pad(x, ((0, pad), (0, 0)), constant_values=fill)
+
         pred0 = padp(pred0, 0)
         pred1 = padp(pred1, 0)
         agg = padp(agg, 0)
         begin_ts = padp(begin_ts, I32_MAX)
         end_ts = padp(end_ts, I32_MAX)
 
-    scalars = jnp.stack([jnp.asarray(v, jnp.int32) for v in
-                         (lo0, hi0, lo1, hi1, ts, start_page)])
+    scalars = jnp.stack(
+        [
+            jnp.asarray(v, jnp.int32)
+            for v in (lo0, hi0, lo1, hi1, ts, start_page)
+        ]
+    )
 
     # index_map receives (*grid_indices, *scalar_prefetch_refs).  The
     # hybrid variant clamps the block coordinate up to the first block
@@ -125,15 +154,20 @@ def filter_agg(pred0, pred1, agg, begin_ts, end_ts, lo0, hi0, lo1, hi1, ts,
     # so its DMAs are elided (the pre-DMA skip); pl.when still zeroes
     # the prefix outputs.
     if use_start:
+
         def _imap(i, s):
             first = jnp.minimum(s[5] // block_pages, grid - 1)
             return (jnp.maximum(i, first), 0)
+
         block = pl.BlockSpec((block_pages, page_size), _imap)
     else:
         block = pl.BlockSpec((block_pages, page_size), lambda i, s: (i, 0))
     out_spec = pl.BlockSpec((1,), lambda i, s: (i,))
-    kernel = functools.partial(_filter_agg_kernel, block_pages=block_pages,
-                               use_start_page=use_start)
+    kernel = functools.partial(
+        _filter_agg_kernel,
+        block_pages=block_pages,
+        use_start_page=use_start,
+    )
     sums, cnts = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -142,8 +176,10 @@ def filter_agg(pred0, pred1, agg, begin_ts, end_ts, lo0, hi0, lo1, hi1, ts,
             in_specs=[block] * 5,
             out_specs=[out_spec, out_spec],
         ),
-        out_shape=[jax.ShapeDtypeStruct((grid,), jnp.int32),
-                   jax.ShapeDtypeStruct((grid,), jnp.int32)],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid,), jnp.int32),
+            jax.ShapeDtypeStruct((grid,), jnp.int32),
+        ],
         interpret=interpret,
     )(scalars, pred0, pred1, agg, begin_ts, end_ts)
     return jnp.sum(sums, dtype=jnp.int32), jnp.sum(cnts, dtype=jnp.int32)

@@ -2,11 +2,14 @@
 
 ``scan_table`` / ``scan_table_hybrid`` adapt the engine's Table layout
 (columns stacked in one (n_pages, page_size, n_attrs) array) to the
-kernels' column-plane interface and pick hardware-aligned block shapes.
-On this CPU container the kernels run in interpret mode by default;
-on TPU pass ``interpret=False`` (the default flips via
-``repro.kernels.INTERPRET``).
+kernels' column-plane interface and pick hardware-aligned block shapes;
+``scan_table_batched`` is the multi-query form and
+``scan_shards_batched`` the fused multi-shard multi-query form over a
+stacked shard pytree (``core.table.stacked_shards``).  On this CPU
+container the kernels run in interpret mode by default; on TPU pass
+``interpret=False`` (the default flips via ``repro.kernels.INTERPRET``).
 """
+
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -28,53 +31,91 @@ def _pick_block_pages(n_pages: int) -> int:
     return 8
 
 
-def scan_table(table, attrs, los, his, ts, agg_attr,
-               interpret: bool | None = None):
+def _single_bounds(table, attrs, los, his):
+    """Predicate planes + widened bounds for a single-query scan."""
+    pred0 = table.data[:, :, attrs[0]]
+    lo0, hi0 = los[0], his[0]
+    if len(attrs) == 2:
+        pred1 = table.data[:, :, attrs[1]]
+        lo1, hi1 = los[1], his[1]
+    else:
+        pred1 = pred0
+        lo1, hi1 = I32_MIN, I32_MAX
+    return pred0, pred1, lo0, hi0, lo1, hi1
+
+
+def _batch_bounds(data, attrs, los, his):
+    """Split per-query (B, len(attrs)) bounds into the kernels' two
+    predicate-plane/bounds pairs (1-attr queries widen the second)."""
+    los = jnp.asarray(los, jnp.int32)
+    his = jnp.asarray(his, jnp.int32)
+    n_queries = los.shape[0]
+    pred0 = data[..., attrs[0]]
+    los0, his0 = los[:, 0], his[:, 0]
+    if len(attrs) == 2:
+        pred1 = data[..., attrs[1]]
+        los1, his1 = los[:, 1], his[:, 1]
+    else:
+        pred1 = pred0
+        los1 = jnp.full((n_queries,), I32_MIN, jnp.int32)
+        his1 = jnp.full((n_queries,), I32_MAX, jnp.int32)
+    return pred0, pred1, los0, his0, los1, his1
+
+
+def scan_table(table, attrs, los, his, ts, agg_attr, interpret=None):
     """Full-table filter+aggregate via the Pallas kernel.
 
     ``table`` is a repro.core.table.Table; ``attrs`` constrains 1 or 2
     columns with inclusive bounds los/his.
     """
     interpret = INTERPRET if interpret is None else interpret
-    pred0 = table.data[:, :, attrs[0]]
-    lo0, hi0 = los[0], his[0]
-    if len(attrs) == 2:
-        pred1 = table.data[:, :, attrs[1]]
-        lo1, hi1 = los[1], his[1]
-    else:
-        pred1 = pred0
-        lo1, hi1 = I32_MIN, I32_MAX
+    pred0, pred1, lo0, hi0, lo1, hi1 = _single_bounds(table, attrs, los, his)
     agg = table.data[:, :, agg_attr]
-    return _fa.filter_agg(pred0, pred1, agg, table.begin_ts, table.end_ts,
-                          lo0, hi0, lo1, hi1, ts,
-                          block_pages=_pick_block_pages(table.n_pages),
-                          interpret=interpret)
+    return _fa.filter_agg(
+        pred0,
+        pred1,
+        agg,
+        table.begin_ts,
+        table.end_ts,
+        lo0,
+        hi0,
+        lo1,
+        hi1,
+        ts,
+        block_pages=_pick_block_pages(table.n_pages),
+        interpret=interpret,
+    )
 
 
-def scan_table_hybrid(table, attrs, los, his, ts, agg_attr, start_page,
-                      interpret: bool | None = None):
+def scan_table_hybrid(
+    table, attrs, los, his, ts, agg_attr, start_page, interpret=None
+):
     """The hybrid scan's table-scan suffix: pages >= start_page only.
     Blocks fully inside the indexed prefix are skipped pre-DMA via the
     scalar-prefetched ``start_page``."""
     interpret = INTERPRET if interpret is None else interpret
-    pred0 = table.data[:, :, attrs[0]]
-    lo0, hi0 = los[0], his[0]
-    if len(attrs) == 2:
-        pred1 = table.data[:, :, attrs[1]]
-        lo1, hi1 = los[1], his[1]
-    else:
-        pred1 = pred0
-        lo1, hi1 = I32_MIN, I32_MAX
+    pred0, pred1, lo0, hi0, lo1, hi1 = _single_bounds(table, attrs, los, his)
     agg = table.data[:, :, agg_attr]
-    return _fa.filter_agg(pred0, pred1, agg, table.begin_ts, table.end_ts,
-                          lo0, hi0, lo1, hi1, ts,
-                          start_page=jnp.asarray(start_page, jnp.int32),
-                          block_pages=_pick_block_pages(table.n_pages),
-                          interpret=interpret)
+    return _fa.filter_agg(
+        pred0,
+        pred1,
+        agg,
+        table.begin_ts,
+        table.end_ts,
+        lo0,
+        hi0,
+        lo1,
+        hi1,
+        ts,
+        start_page=jnp.asarray(start_page, jnp.int32),
+        block_pages=_pick_block_pages(table.n_pages),
+        interpret=interpret,
+    )
 
 
-def scan_table_batched(table, attrs, los, his, tss, agg_attr,
-                       start_pages=None, interpret: bool | None = None):
+def scan_table_batched(
+    table, attrs, los, his, tss, agg_attr, start_pages=None, interpret=None
+):
     """Batched multi-query filter+aggregate via the Pallas kernel.
 
     All queries share the table, the constrained ``attrs`` (1 or 2
@@ -85,27 +126,73 @@ def scan_table_batched(table, attrs, los, his, tss, agg_attr,
     (n_queries,) int32.
     """
     if len(attrs) not in (1, 2):
-        raise ValueError(f"kernel scans support 1 or 2 predicate "
-                         f"attributes, got {attrs!r}")
+        raise ValueError(
+            f"kernel scans support 1 or 2 predicate attributes, "
+            f"got {attrs!r}"
+        )
     interpret = INTERPRET if interpret is None else interpret
-    los = jnp.asarray(los, jnp.int32)
-    his = jnp.asarray(his, jnp.int32)
-    n_queries = los.shape[0]
-    pred0 = table.data[:, :, attrs[0]]
-    los0, his0 = los[:, 0], his[:, 0]
-    if len(attrs) == 2:
-        pred1 = table.data[:, :, attrs[1]]
-        los1, his1 = los[:, 1], his[:, 1]
-    else:
-        pred1 = pred0
-        los1 = jnp.full((n_queries,), I32_MIN, jnp.int32)
-        his1 = jnp.full((n_queries,), I32_MAX, jnp.int32)
+    n_queries = jnp.asarray(los).shape[0]
+    pred0, pred1, los0, his0, los1, his1 = _batch_bounds(
+        table.data, attrs, los, his
+    )
     if start_pages is None:
         start_pages = jnp.zeros((n_queries,), jnp.int32)
-    agg = table.data[:, :, agg_attr]
+    agg = table.data[..., agg_attr]
     return _bfa.batched_filter_agg(
-        pred0, pred1, agg, table.begin_ts, table.end_ts,
-        los0, his0, los1, his1, jnp.asarray(tss, jnp.int32),
+        pred0,
+        pred1,
+        agg,
+        table.begin_ts,
+        table.end_ts,
+        los0,
+        his0,
+        los1,
+        his1,
+        jnp.asarray(tss, jnp.int32),
         jnp.asarray(start_pages, jnp.int32),
         block_pages=_pick_block_pages(table.n_pages),
-        interpret=interpret)
+        interpret=interpret,
+    )
+
+
+def scan_shards_batched(
+    stacked, attrs, los, his, tss, agg_attr, start_pages, interpret=None
+):
+    """Fused multi-shard multi-query scan via the Pallas kernel.
+
+    ``stacked`` is a ``core.table.StackedShards`` (cached padded
+    shard pytree); queries share the constrained ``attrs`` (1 or 2
+    columns) and ``agg_attr``; ``los``/``his`` are (n_queries,
+    len(attrs)) per-query inclusive bounds, ``tss`` (n_queries,)
+    snapshot timestamps and ``start_pages`` the (n_shards, n_queries)
+    table of per-shard LOCAL stitch points (zeros = full scans).
+    Returns (sums, counts), each (n_queries,) int32, already reduced
+    over the shard axis.
+    """
+    if len(attrs) not in (1, 2):
+        raise ValueError(
+            f"kernel scans support 1 or 2 predicate attributes, "
+            f"got {attrs!r}"
+        )
+    interpret = INTERPRET if interpret is None else interpret
+    t = stacked.table
+    pred0, pred1, los0, his0, los1, his1 = _batch_bounds(
+        t.data, attrs, los, his
+    )
+    agg = t.data[..., agg_attr]
+    return _bfa.sharded_batched_filter_agg(
+        pred0,
+        pred1,
+        agg,
+        t.begin_ts,
+        t.end_ts,
+        los0,
+        his0,
+        los1,
+        his1,
+        jnp.asarray(tss, jnp.int32),
+        jnp.asarray(start_pages, jnp.int32),
+        jnp.asarray(stacked.local_pages, jnp.int32),
+        block_pages=_pick_block_pages(t.data.shape[1]),
+        interpret=interpret,
+    )

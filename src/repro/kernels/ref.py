@@ -4,12 +4,15 @@ These are the semantics contracts: every kernel in this package must
 ``assert_allclose`` (exact, integer) against these across the shape /
 dtype sweep in tests/test_kernels.py.
 """
+
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def filter_agg_ref(pred0, pred1, agg, begin_ts, end_ts, lo0, hi0, lo1, hi1, ts):
+def filter_agg_ref(
+    pred0, pred1, agg, begin_ts, end_ts, lo0, hi0, lo1, hi1, ts
+):
     """Predicate-filter + aggregate over a paged column layout.
 
     pred0/pred1/agg/begin_ts/end_ts : (n_pages, page_size) int32
@@ -26,8 +29,9 @@ def filter_agg_ref(pred0, pred1, agg, begin_ts, end_ts, lo0, hi0, lo1, hi1, ts):
     return s, c
 
 
-def masked_filter_agg_ref(pred0, pred1, agg, begin_ts, end_ts,
-                          lo0, hi0, lo1, hi1, ts, start_page):
+def masked_filter_agg_ref(
+    pred0, pred1, agg, begin_ts, end_ts, lo0, hi0, lo1, hi1, ts, start_page
+):
     """The hybrid scan's table-scan suffix: same as ``filter_agg_ref``
     but only pages >= start_page contribute (the indexed prefix is
     served by the index scan)."""
@@ -41,8 +45,19 @@ def masked_filter_agg_ref(pred0, pred1, agg, begin_ts, end_ts,
     return s, c
 
 
-def batched_filter_agg_ref(pred0, pred1, agg, begin_ts, end_ts,
-                           los0, his0, los1, his1, tss, start_pages):
+def batched_filter_agg_ref(
+    pred0,
+    pred1,
+    agg,
+    begin_ts,
+    end_ts,
+    los0,
+    his0,
+    los1,
+    his1,
+    tss,
+    start_pages,
+):
     """Multi-query scan: per query q identical to
     ``masked_filter_agg_ref`` with that query's bounds, snapshot and
     start_page.  Per-query operands are (n_queries,); returns
@@ -50,8 +65,18 @@ def batched_filter_agg_ref(pred0, pred1, agg, begin_ts, end_ts,
     sums, cnts = [], []
     for q in range(los0.shape[0]):
         s, c = masked_filter_agg_ref(
-            pred0, pred1, agg, begin_ts, end_ts,
-            los0[q], his0[q], los1[q], his1[q], tss[q], start_pages[q])
+            pred0,
+            pred1,
+            agg,
+            begin_ts,
+            end_ts,
+            los0[q],
+            his0[q],
+            los1[q],
+            his1[q],
+            tss[q],
+            start_pages[q],
+        )
         sums.append(s)
         cnts.append(c)
     return jnp.stack(sums), jnp.stack(cnts)
