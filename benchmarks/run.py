@@ -87,7 +87,8 @@ def main() -> None:
     from benchmarks import (async_tuning, batched_scan, fig2_schemes,
                             fig6_decision_logic, fig7_holistic,
                             fig8_affinity, fig9_layout, fig10_adaptability,
-                            fused_shard_scan, shard_tuning, sharded_scan)
+                            fused_shard_scan, serving_slo, shard_tuning,
+                            sharded_scan)
     from benchmarks import common
 
     quick = args.quick
@@ -117,6 +118,9 @@ def main() -> None:
             phase_len=120 if quick else 180, quiet=True)),
         ("fused_shard", lambda: fused_shard_scan.run(
             bursts=2 if quick else 3, quiet=True)),
+        ("serving_slo", lambda: serving_slo.run(
+            total=400 if quick else 1200,
+            phase_len=100 if quick else 150, quiet=True)),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),
     ]

@@ -1,0 +1,91 @@
+"""Open-loop serving SLO: deadline bursts + load-aware build throttle.
+
+The serving front end's claim in one experiment.  A heavy-tailed
+ON/OFF arrival stream (the flash-crowd shape) drives the fig10
+shifting workload through the batched engine under FAST predictive
+tuning, and two policies serve the identical stream:
+
+* ``fixed_always`` -- the closed-loop reflexes applied open-loop:
+  bursts close only on ``read_batch_size`` (the head waits for the
+  last member to arrive, however sparse the stream), and the build
+  lane drains at every cycle boundary regardless of backlog, so
+  charged build work lands on queued requests during spikes.
+* ``deadline_throttle`` -- the serving policies: bursts also close on
+  a deadline past the head's arrival, the build lane defers its
+  drains while backlog pressure threatens the SLO (deferred work
+  drains inside idle-credit gaps), and the lowest-utility queued
+  quanta are shed past the backpressure cap.
+
+Same arrivals, same queries, same tuner arithmetic -- the only delta
+is admission + degradation policy, so the open-loop p99 and
+deadline-miss gap is attributable to the serving layer.
+"""
+from __future__ import annotations
+
+from benchmarks.common import DEFAULT_PAGE, emit
+from repro.bench_db import QueryGen, RunConfig, make_tuner_db, run_workload
+from repro.bench_db.workloads import hybrid_workload
+from repro.core import Database, PredictiveTuner, TunerConfig
+
+
+def run(n_rows: int = 20_000, total: int = 1200, phase_len: int = 150,
+        batch: int = 8, arrival_ms: float = 5.0, deadline_ms: float = 2.0,
+        slo_ms: float = 6.0, quiet: bool = False):
+    # arrival_ms is chosen against the ~1.5ms unindexed / ~0.3ms
+    # indexed service time: the OFF state has ample headroom (idle
+    # gaps fund tuning) while the ON state's 8x rate transiently
+    # overloads an unindexed server -- the regime where admission
+    # policy decides the tail.  On the sparse OFF stream a fixed
+    # 8-burst head waits ~7 inter-arrival gaps (~35ms) for its batch
+    # to fill, which alone blows the SLO for every calm-phase query.
+    db_src = make_tuner_db(n_rows=n_rows, page_size=DEFAULT_PAGE,
+                           headroom=2.5)
+    results = {}
+    for policy in ("fixed_always", "deadline_throttle"):
+        gen = QueryGen(db_src, selectivity=0.01, seed=29)
+        wl = hybrid_workload(gen, "read_only", total=total,
+                             phase_len=phase_len, seed=7)
+        db = Database(dict(db_src.tables))
+        tuner = PredictiveTuner(db, TunerConfig(
+            storage_budget_bytes=50e6, pages_per_cycle=32,
+            max_build_pages_per_cycle=64, candidate_min_count=2))
+        serving = policy == "deadline_throttle"
+        res = run_workload(db, tuner, wl, RunConfig(
+            tuning_interval_ms=25.0, read_batch_size=batch,
+            async_tuning="deterministic",
+            arrival_stream="bursty", arrival_ms=arrival_ms,
+            arrival_seed=11, slo_ms=slo_ms,
+            burst_deadline_ms=deadline_ms if serving else None,
+            build_throttle=serving, load_shed_tuning=serving,
+            build_queue_cap=16))
+        results[policy] = res
+        if not quiet:
+            print(f"   {policy:17s}", res.summary())
+
+    fixed = results["fixed_always"]
+    srv = results["deadline_throttle"]
+    emit("serving_slo.open_loop_p99",
+         srv.p99_latency_ms * 1e3,
+         f"deadline+throttle={srv.p99_latency_ms:.4f}ms vs "
+         f"fixed+always-on={fixed.p99_latency_ms:.4f}ms "
+         f"({fixed.p99_latency_ms / max(srv.p99_latency_ms, 1e-12):.2f}x); "
+         f"p999 {fixed.p999_latency_ms:.3f}->{srv.p999_latency_ms:.3f}ms",
+         speedup=fixed.p99_latency_ms / max(srv.p99_latency_ms, 1e-12))
+    emit("serving_slo.deadline_miss_rate",
+         srv.deadline_miss_rate * 1e2,
+         f"miss@{slo_ms:.0f}ms {fixed.deadline_miss_rate:.4f}->"
+         f"{srv.deadline_miss_rate:.4f} "
+         f"(deferrals={srv.build_throttle_deferrals}, "
+         f"shed={srv.build_shed_quanta} quanta)",
+         direction="info")
+    worst_fixed = max(s.p99_ms for _, s in fixed.slo_report.phases)
+    worst_srv = max(s.p99_ms for _, s in srv.slo_report.phases)
+    emit("serving_slo.worst_phase_p99",
+         worst_srv * 1e3,
+         f"worst-phase p99 {worst_fixed:.4f}->{worst_srv:.4f}ms "
+         f"(per-phase slices: {len(srv.slo_report.phases)})")
+    return results
+
+
+if __name__ == "__main__":
+    run()

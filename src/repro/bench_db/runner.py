@@ -28,6 +28,10 @@ import numpy as np
 from repro.bench_db.workloads import Workload
 from repro.core.build_service import BuildService
 from repro.core.executor import Database
+from repro.serving.admission import (backlog_depth, make_arrivals,
+                                     next_burst, recent_arrival_gap_ms,
+                                     slo_pressure)
+from repro.serving.slo import SloReport, compute_slo
 
 TUNING_FREQ_MS = {"fast": 100.0, "mod": 1000.0, "slow": 10000.0, "dis": None}
 
@@ -76,6 +80,40 @@ class RunConfig:
     # serialized/deterministic scheduling -- the budget would depend on
     # wall clock, which breaks the bit-exact replay contract.
     adaptive_build_budget: bool = False
+    # --- Open-loop serving front end (repro.serving) -----------------
+    # Setting ``arrival_stream`` (or a burst deadline) switches
+    # run_workload into the open-loop driver: requests arrive on a
+    # seeded schedule ("uniform" | "poisson" | "bursty", mean
+    # inter-arrival = arrival_ms), read bursts close on
+    # read_batch_size OR burst_deadline_ms past the burst head's
+    # arrival (whichever fires first), and recorded latency is
+    # completion minus ARRIVAL -- queueing delay included.  The
+    # closed-loop path is bit-identical to pre-serving builds when
+    # both stay unset.  idle_at_phase_start_ms (a closed-loop client
+    # throttle) is ignored open-loop: idleness comes from the stream.
+    arrival_stream: Optional[str] = None
+    arrival_seed: int = 0
+    burst_deadline_ms: Optional[float] = None
+    # Per-query latency SLO: feeds the deadline-miss report
+    # (RunResult.slo_report) and, with ``build_throttle``, the
+    # load-aware throttle -- build drains are deferred to calmer
+    # cycles while the backlog's estimated wait exceeds
+    # ``slo_headroom`` of the SLO.  ``load_shed_tuning`` additionally
+    # sheds the lowest-utility queued quanta down to build_queue_cap
+    # under pressure (degrade tuning, never queries).
+    slo_ms: Optional[float] = None
+    slo_headroom: float = 0.5
+    build_throttle: bool = False
+    load_shed_tuning: bool = False
+    # Anti-starvation bound on the throttle: after this many
+    # consecutive deferred drain boundaries the next drain is forced
+    # even under pressure.  Build work is what RESTORES capacity when
+    # the backlog is the tuner's own fault (a phase shift caught
+    # mid-storm leaves every query full-scanning); an unbounded
+    # throttle turns that into a metastable spiral -- pressure defers
+    # builds, queries stay slow, the backlog never drains, pressure
+    # never clears.
+    build_throttle_patience: int = 3
 
 
 @dataclass
@@ -96,6 +134,13 @@ class RunResult:
     # adaptive cycle sizing: pages_per_cycle after the final resize
     # (0 when adaptive_build_budget is off or never fired)
     build_pages_per_cycle: int = 0
+    # open-loop serving telemetry (arrival-stream mode only):
+    # latencies_ms are completion-minus-arrival there, and the SLO
+    # reporter slices them per phase (serving/slo.py)
+    slo_report: Optional[SloReport] = None
+    deadline_miss_rate: float = 0.0
+    build_throttle_deferrals: int = 0   # drains deferred under pressure
+    build_shed_quanta: int = 0          # quanta dropped by load shedding
 
     def percentile(self, p: float) -> float:
         """Latency percentile, 0.0 on empty runs (np.percentile raises
@@ -113,7 +158,25 @@ class RunResult:
     def p99_latency_ms(self) -> float:
         return self.percentile(99)
 
+    @property
+    def p999_latency_ms(self) -> float:
+        return self.percentile(99.9)
+
     def summary(self) -> Dict[str, float]:
+        if self.slo_report is not None:
+            return {
+                "queries": len(self.latencies_ms),
+                "mean_latency_ms": round(self.mean_latency_ms, 5),
+                "p50_ms": round(self.percentile(50), 5),
+                "p99_ms": round(self.p99_latency_ms, 5),
+                "p999_ms": round(self.p999_latency_ms, 5),
+                "deadline_miss_rate": round(self.deadline_miss_rate, 5),
+                "tuner_charged_ms": round(self.tuner_charged_ms, 3),
+                "tuner_overlapped_ms": round(self.tuner_overlapped_ms, 3),
+                "build_throttle_deferrals": self.build_throttle_deferrals,
+                "build_shed_quanta": self.build_shed_quanta,
+                "wall_s": round(self.wall_s, 2),
+            }
         return {
             "queries": len(self.latencies_ms),
             "cumulative_ms": round(self.cumulative_ms, 3),
@@ -138,6 +201,14 @@ def run_workload(db: Database, tuner, workload: Workload,
     is the latency-spike mechanism of unbounded (holistic/value-based)
     population, while bounded VAP cycles typically fit in the credit.
     """
+    if cfg.arrival_stream is not None or cfg.burst_deadline_ms is not None:
+        # Open-loop serving front end: requests arrive on their own
+        # schedule, bursts close on size OR deadline, latency is
+        # completion minus arrival.  A separate driver so the
+        # closed-loop path below stays bit-identical to pre-serving
+        # builds.
+        return _run_open_loop(db, tuner, workload, cfg)
+
     if cfg.num_shards != getattr(db, "num_shards", 1):
         db.reshard(cfg.num_shards)
     if cfg.async_tuning not in (None, "deterministic", "overlap"):
@@ -323,5 +394,269 @@ def run_workload(db: Database, tuner, workload: Workload,
     if service is not None:
         res.build_pages_per_ms = service.pages_per_ms
         res.build_escalations = service.escalations
+    res.wall_s = _time.perf_counter() - t_start
+    return res
+
+
+def _run_open_loop(db: Database, tuner, workload: Workload,
+                   cfg: RunConfig) -> RunResult:
+    """Open-loop serving driver (arrival-stream mode).
+
+    Requests arrive on a seeded schedule (repro.serving.admission)
+    instead of at the replay loop's cadence.  The admission layer
+    forms read bursts dynamically -- close on ``read_batch_size`` OR
+    ``burst_deadline_ms`` past the burst head's arrival, whichever
+    fires first; mutations and phase changes flush the stage exactly
+    like the closed loop -- and each burst goes through the existing
+    ``Database.execute_batch`` path.  Recorded latency is completion
+    minus ARRIVAL, so queueing delay is real: charged tuning work
+    advances the clock and thereby delays every queued request
+    (instead of being billed to one query's latency as closed-loop
+    ``blocking_ms`` does).
+
+    Graceful degradation under load: with ``build_throttle`` the
+    deterministic build lane's boundary drains are deferred while the
+    backlog's estimated wait (arrived-unserved depth x measured EWMA
+    service time) exceeds ``slo_headroom`` of the SLO -- deferred
+    quanta drain inside idle gaps, where their work is absorbed by
+    idle credit; in overlap mode the concurrent lane is paused
+    instead.  ``load_shed_tuning`` additionally drops the
+    lowest-utility queued quanta down to ``build_queue_cap`` under
+    pressure.  The system degrades by deferring or shedding *tuning
+    work*; queries are never dropped.
+    """
+    if cfg.num_shards != getattr(db, "num_shards", 1):
+        db.reshard(cfg.num_shards)
+    if cfg.async_tuning not in (None, "deterministic", "overlap"):
+        raise ValueError(f"async_tuning: {cfg.async_tuning!r}")
+
+    db.shard_aware_tuning = bool(cfg.shard_aware_tuning)
+    overlap = cfg.async_tuning == "overlap"
+    service = None
+    if cfg.async_tuning is not None:
+        service = BuildService(
+            db, tuner,
+            quantum_pages=cfg.build_quantum_pages if overlap else None,
+            max_queue_depth=cfg.build_queue_cap if overlap else None)
+
+    items = list(workload)
+    n = len(items)
+    arrivals = db.clock_ms + make_arrivals(
+        cfg.arrival_stream or "uniform", n, cfg.arrival_ms,
+        seed=cfg.arrival_seed)
+    batch_n = max(int(cfg.read_batch_size), 1)
+    batchable = np.array(
+        [q.kind == "scan" and q.join_table is None and batch_n > 1
+         for _, q in items], bool)
+    phase_arr = np.array([p for p, _ in items], np.int64)
+
+    res = RunResult()
+    next_cycle_ms = (db.clock_ms + cfg.tuning_interval_ms
+                     if cfg.tuning_interval_ms else float("inf"))
+    idle_credit_ms = 0.0
+    served = 0                 # stream position: queries dispatched
+    staged_end = 0             # end of the burst currently being formed
+    ewma_service_ms = 0.0      # measured per-query service latency
+    defer_streak = 0           # consecutive throttled drain boundaries
+    prev_phase = 0
+
+    def pressured() -> bool:
+        # Overload = arrived requests that will STILL be queued after
+        # the staged burst dispatches.  Counting the staged burst
+        # itself would read every full batch as pressure and starve
+        # the build lane for the whole run (one batch in flight is
+        # the steady state, not a backlog).
+        depth = backlog_depth(arrivals, max(served, staged_end),
+                              db.clock_ms)
+        return slo_pressure(depth, ewma_service_ms, cfg.slo_ms,
+                            cfg.slo_headroom)
+
+    def defer_ok() -> bool:
+        # Deferring build work is only safe when the backlog is
+        # TRANSIENT: the measured service time keeps up with the
+        # measured arrival rate, so the queue drains on its own and
+        # the deferred charge lands in a later idle gap.  When the
+        # server is underwater (service slower than arrivals), the
+        # stale physical design IS the problem -- build through the
+        # storm, exactly like the always-on lane.
+        gap = recent_arrival_gap_ms(arrivals, db.clock_ms)
+        return ewma_service_ms <= gap
+
+    def shed_if_over_cap() -> None:
+        if cfg.load_shed_tuning and service.pending() > cfg.build_queue_cap:
+            res.build_shed_quanta += service.shed_lowest_utility(
+                cfg.build_queue_cap)
+
+    def run_cycle(idle: bool) -> float:
+        nonlocal defer_streak
+        if service is None:
+            return tuner.tuning_cycle(idle=idle)
+        work = service.decide(idle=idle)
+        if overlap:
+            return work        # quanta drain on the concurrent lane
+        # Deterministic lane: boundary drain -- under backlog
+        # pressure only the URGENT share drains (charged drain work
+        # lands on every queued request's completion, so speculative
+        # prebuild quanta wait for an idle gap, where idle credit
+        # absorbs them).  Urgent work -- the hot index a storm is
+        # full-scanning, top of the tuner's utility ranking -- builds
+        # THROUGH the storm: it is what restores capacity, and
+        # deferring it is a metastable spiral (slow queries keep the
+        # backlog, the backlog keeps deferring the fix).  The
+        # patience bound forces a full drain after too many deferred
+        # boundaries, and a sustained (unsustainable-rate) storm
+        # sheds the lowest-utility quanta past the backpressure cap.
+        if (cfg.build_throttle and service.pending() > 0 and pressured()
+                and defer_streak < cfg.build_throttle_patience):
+            defer_streak += 1
+            res.build_throttle_deferrals += 1
+            work += service.drain_urgent()
+            if not defer_ok():
+                shed_if_over_cap()
+            return work
+        defer_streak = 0
+        return work + service.drain()
+
+    def overlap_quantum() -> float:
+        total_ms = 0.0
+        for _ in range(service.drain_burst_size()):
+            units = service.apply_next()
+            if units <= 0.0:
+                continue
+            u_ms = units * cfg.time_per_unit_ms
+            res.tuner_work_units += units
+            res.tuner_overlapped_ms += u_ms
+            total_ms += u_ms
+        return total_ms
+
+    def run_due_cycles() -> None:
+        nonlocal next_cycle_ms, idle_credit_ms
+        if cfg.tuning_interval_ms is None:
+            return
+        fired = 0
+        while db.clock_ms >= next_cycle_ms and fired < cfg.max_cycles_per_gap:
+            work = run_cycle(idle_credit_ms > 0.0)
+            work_ms = work * cfg.time_per_unit_ms
+            res.tuner_work_units += work
+            absorbed = min(idle_credit_ms, work_ms)
+            idle_credit_ms -= absorbed
+            charged = work_ms - absorbed
+            res.tuner_charged_ms += charged
+            db.clock_ms += max(charged, 1e-9)
+            next_cycle_ms += cfg.tuning_interval_ms
+            fired += 1
+        if db.clock_ms >= next_cycle_ms:  # drop missed slots
+            k = int((db.clock_ms - next_cycle_ms)
+                    // cfg.tuning_interval_ms) + 1
+            next_cycle_ms += k * cfg.tuning_interval_ms
+        if overlap:
+            # idle gaps feed the concurrent lane (carryover quanta
+            # ride the credit) -- but not while the throttle holds it
+            while idle_credit_ms > 0.0 and service.pending():
+                if cfg.build_throttle and pressured():
+                    break
+                drained = overlap_quantum()
+                if drained <= 0.0:
+                    break
+                idle_credit_ms = max(idle_credit_ms - drained, 0.0)
+
+    def advance_to(target_ms: float) -> None:
+        """Idle the server up to ``target_ms`` (waiting for arrivals
+        or the burst timer): the gap accrues idle credit and due
+        tuning cycles fire inside it, so background work lands in the
+        window open-loop traffic actually leaves free."""
+        nonlocal idle_credit_ms
+        gap = target_ms - db.clock_ms
+        if gap <= 0.0:
+            return
+        idle_credit_ms += gap
+        if cfg.tuning_interval_ms is not None:
+            while next_cycle_ms <= target_ms:
+                db.clock_ms = max(db.clock_ms, next_cycle_ms)
+                run_due_cycles()
+                if db.clock_ms >= target_ms:
+                    break
+        db.clock_ms = max(db.clock_ms, target_ms)
+
+    def account_open(ph: int, q, stats, arrival: float,
+                     completion: float) -> None:
+        lat = completion - arrival
+        res.latencies_ms.append(lat)
+        res.phases.append(ph)
+        res.cumulative_ms += lat
+        res.index_counts.append(len(db.indexes))
+        fracs = [b.built_fraction(db.tables[b.desc.table])
+                 for b in db.indexes.values()]
+        res.built_fraction.append(float(np.mean(fracs)) if fracs else 0.0)
+
+    import time as _time
+    t_start = _time.perf_counter()
+    if overlap:
+        db.engine.after_dispatch = overlap_quantum
+    try:
+        while served < n:
+            start = served
+            ph = int(phase_arr[start])
+            if ph != prev_phase:
+                if cfg.drop_indexes_at_phase_end:
+                    for name in list(db.indexes):
+                        db.drop_index(name)
+                prev_phase = ph
+            d = next_burst(arrivals, batchable, phase_arr, start,
+                           db.clock_ms, batch_n, cfg.burst_deadline_ms)
+            staged_end = d.end
+            advance_to(d.dispatch_at)
+            run_due_cycles()
+            # Idle credit expires at dispatch: past idle time cannot
+            # absorb future work (unlike the closed loop's banked
+            # credit, which models a throttled client, not a live
+            # stream).  Cycles that fire during a backlog therefore
+            # get CHARGED -- which is exactly the pressure the
+            # build throttle exists to relieve.
+            idle_credit_ms = 0.0
+            if overlap and cfg.build_throttle:
+                # Same patience bound as the deterministic lane: a
+                # pause held across too many dispatches would starve
+                # the concurrent lane into the same spiral.
+                was_paused = service.paused
+                service.paused = (
+                    pressured() and defer_ok()
+                    and defer_streak < cfg.build_throttle_patience)
+                if service.paused:
+                    defer_streak += 1
+                    if not was_paused:
+                        res.build_throttle_deferrals += 1
+                    shed_if_over_cap()
+                else:
+                    defer_streak = 0
+            burst = items[start:d.end]
+            base = db.clock_ms
+            if len(burst) == 1 and not batchable[start]:
+                stats_list = [db.execute(burst[0][1])]
+            else:
+                stats_list = db.execute_batch([q for _, q in burst])
+            cum = 0.0
+            for k, ((bph, q), stats) in enumerate(zip(burst, stats_list)):
+                extra_units = tuner.on_query(q, stats)
+                extra_ms = extra_units * cfg.time_per_unit_ms
+                db.clock_ms += extra_ms
+                service_ms = stats.latency_ms + extra_ms
+                cum += service_ms
+                a = 0.25
+                ewma_service_ms = (service_ms if ewma_service_ms == 0.0
+                                   else (1.0 - a) * ewma_service_ms
+                                   + a * service_ms)
+                account_open(bph, q, stats, float(arrivals[start + k]),
+                             base + cum)
+            served = d.end
+    finally:
+        if overlap:
+            db.engine.after_dispatch = None
+    if service is not None:
+        res.build_pages_per_ms = service.pages_per_ms
+        res.build_escalations = service.escalations
+        res.build_shed_quanta = service.shed_quanta
+    res.slo_report = compute_slo(res.latencies_ms, res.phases, cfg.slo_ms)
+    res.deadline_miss_rate = res.slo_report.overall.miss_rate
     res.wall_s = _time.perf_counter() - t_start
     return res

@@ -59,6 +59,11 @@ THROUGHPUT_EWMA_ALPHA = 0.25
 # model caps the burst so the concurrent lane's real time per
 # opportunity stays bounded (an unbounded burst would be a stall).
 MAX_DRAIN_BURST_MS = 5.0
+# Utility cut for pressure-time drains (BuildService.drain_urgent):
+# quanta at or above this fraction of the queue's max decide-time
+# utility are the capacity-restoring share and drain through a storm;
+# the rest is speculative prebuild work that can wait for an idle gap.
+URGENT_UTILITY_FRAC = 0.5
 # Adaptive cycle sizing (RunConfig.adaptive_build_budget): target wall
 # time for draining ONE cycle's build slice on the concurrent lane.
 # The tuner's ``pages_per_cycle`` is resized so a cycle's work fits
@@ -78,6 +83,11 @@ class BuildQuantum:
     index_name: str
     pages: int
     shard: Optional[int] = None
+    # Forecast utility of the owning index at decide time.  Ranks
+    # queued quanta for load shedding (the serving front end drops the
+    # least valuable tuning work under overload, never queries); it
+    # does not affect the build arithmetic itself.
+    utility: float = 0.0
 
 
 @dataclass
@@ -136,6 +146,11 @@ class BuildService:
         self.pages_per_ms: float = 0.0   # EWMA; 0.0 until first drain
         self.drained_quanta: int = 0
         self.escalations: int = 0
+        # Load-aware throttle (serving front end): while paused, drain
+        # opportunities apply nothing -- build work waits for a calmer
+        # window instead of competing with a backlogged read path.
+        self.paused: bool = False
+        self.shed_quanta: int = 0
 
     # -- decide: enqueue the cycle's build work --------------------------
     def decide(self, idle: bool = False) -> float:
@@ -150,7 +165,9 @@ class BuildService:
         plan = decide_fn(idle=idle)
         for q in plan.quanta:
             for pages in split_build_pages(q.pages, self.quantum_pages):
-                self.queue.append(BuildQuantum(q.index_name, pages, q.shard))
+                self.queue.append(
+                    BuildQuantum(q.index_name, pages, q.shard, q.utility)
+                )
         return plan.decide_work
 
     # -- apply: drain quanta ---------------------------------------------
@@ -190,7 +207,7 @@ class BuildService:
         until its ``estimated_drain_ms`` fits ``MAX_DRAIN_BURST_MS``,
         so catching up never turns into a stall of its own."""
         depth = len(self.queue)
-        if depth == 0:
+        if depth == 0 or self.paused:
             return 0
         if self.max_queue_depth is None or depth <= self.max_queue_depth:
             return 1
@@ -229,10 +246,50 @@ class BuildService:
             return None
         return max(int(self.pages_per_ms * target_ms), 1)
 
+    def shed_lowest_utility(self, max_keep: int) -> int:
+        """Load shedding: drop queued quanta, lowest decide-time
+        utility first (newest first on ties), until at most
+        ``max_keep`` remain.  Under overload the serving layer sheds
+        *tuning work*, never queries -- a dropped quantum is only a
+        deferred improvement, and the next decide step re-plans any
+        build that still matters.  Returns the number dropped."""
+        drop = len(self.queue) - max(int(max_keep), 0)
+        if drop <= 0:
+            return 0
+        order = sorted(
+            range(len(self.queue)),
+            key=lambda i: (self.queue[i].utility, -i),
+        )
+        victims = set(order[:drop])
+        self.queue = deque(
+            q for i, q in enumerate(self.queue) if i not in victims
+        )
+        self.shed_quanta += drop
+        return drop
+
     def drain(self) -> float:
         """Apply every queued quantum (the deterministic-interleave
         boundary drain); returns total work units."""
         work = 0.0
         while self.queue:
             work += self.apply_next()
+        return work
+
+    def drain_urgent(self, frac: float = URGENT_UTILITY_FRAC) -> float:
+        """Pressure-time partial drain: apply only the quanta whose
+        decide-time utility reaches ``frac`` of the queue's current
+        maximum -- the work that restores serving capacity (the hot
+        index a storm is full-scanning ranks at the top of the
+        tuner's what-if utilities).  Lower-utility speculative work
+        stays queued for an idle gap.  With no utility spread (all
+        equal, e.g. legacy zero-utility quanta) everything is urgent
+        and this degrades to ``drain`` -- deferral never starves the
+        only work there is.  Returns the applied work units."""
+        if not self.queue:
+            return 0.0
+        cut = frac * max(q.utility for q in self.queue)
+        backlog = list(self.queue)
+        self.queue = deque(q for q in backlog if q.utility >= cut)
+        work = self.drain()
+        self.queue = deque(q for q in backlog if q.utility < cut)
         return work

@@ -233,7 +233,10 @@ class PredictiveTuner:
         }
         u_min = thresholds.get(self.last_label, cfg.u_min_read)
         u_arr = np.asarray(utilities, np.float64)
-        scale = max(u_arr.max(), 1.0)
+        # No candidates yet (a cycle can fire before any query has
+        # been monitored -- the open-loop driver schedules cycles on
+        # wall time, not on query count): nothing to rank or build.
+        scale = max(u_arr.max(), 1.0) if u_arr.size else 1.0
         eligible = (u_arr / scale) > u_min
 
         keep = knapsack.solve(
@@ -259,6 +262,9 @@ class PredictiveTuner:
         # per-shard utility instead of the global round-robin, so no
         # budget lands on cold or already-complete shards.
         quanta: List[BuildQuantum] = []
+        # Decide-time utility rides on each quantum so the serving
+        # layer's load shedder can rank queued build work.
+        util_by_name = dict(zip(names, utilities))
         budget_pages = cfg.max_build_pages_per_cycle
         building = [
             b
@@ -275,13 +281,15 @@ class PredictiveTuner:
                 and isinstance(t, ShardedTable)
                 and isinstance(b.vap, ShardedIndex)
             )
+            u = float(util_by_name.get(b.desc.name, 0.0))
             if per_shard:
                 alloc = self._shard_step_allocation(b, t, step)
                 quanta.extend(
-                    BuildQuantum(b.desc.name, p, shard=s) for s, p in alloc
+                    BuildQuantum(b.desc.name, p, shard=s, utility=u)
+                    for s, p in alloc
                 )
             else:
-                quanta.append(BuildQuantum(b.desc.name, step))
+                quanta.append(BuildQuantum(b.desc.name, step, utility=u))
             budget_pages -= step
 
         # Stage III: index utility forecasting ------------------------

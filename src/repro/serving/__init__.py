@@ -1,6 +1,29 @@
-"""Serving substrate: request scheduler + predictively-managed prefix
-cache (the paper's index tuner applied to KV-cache management)."""
+"""Serving substrate: request scheduler, predictively-managed prefix
+cache (the paper's index tuner applied to KV-cache management), and
+the open-loop front end -- arrival streams, SLO-deadline burst
+admission, load-shed backpressure (admission.py) plus the per-phase
+p50/p99/p999 + deadline-miss reporter (slo.py)."""
+from repro.serving.admission import (
+    BurstDecision,
+    backlog_depth,
+    make_arrivals,
+    next_burst,
+    slo_pressure,
+)
 from repro.serving.prefix_cache import PredictivePrefixCache
 from repro.serving.scheduler import BatchScheduler, Request
+from repro.serving.slo import SloReport, SloSlice, compute_slo
 
-__all__ = ["BatchScheduler", "PredictivePrefixCache", "Request"]
+__all__ = [
+    "BatchScheduler",
+    "BurstDecision",
+    "PredictivePrefixCache",
+    "Request",
+    "SloReport",
+    "SloSlice",
+    "backlog_depth",
+    "compute_slo",
+    "make_arrivals",
+    "next_burst",
+    "slo_pressure",
+]

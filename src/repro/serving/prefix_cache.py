@@ -20,7 +20,19 @@ materialised INCREMENTALLY, a bounded number of tokens per cycle, and
 a partially materialised prefix already serves requests -- prefill
 resumes from the covered page boundary (``covered_len``) instead of
 waiting for full materialisation (no admission latency spikes).
+
+Determinism contract: ``cycle`` is bit-deterministic for a given
+lookup history, across Python hash seeds.  The bounded
+``tokens_per_cycle`` build budget is allocated in a canonical order --
+knapsack utility descending, prefix id ascending on ties -- and every
+knapsack-chosen prefix is materialised (at ``covered_len=0`` when the
+cycle's budget is spent), so the knapsack's decision is never silently
+discarded and re-evicted next cycle.  Prefixes whose forecast AND
+observed utility stay at zero for ``max_idle_cycles`` consecutive
+cycles are aged out of the monitor entirely (a one-shot prefix must
+not be forecast + knapsacked forever).
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -31,12 +43,17 @@ import numpy as np
 from repro.core import forecaster as hw
 from repro.core import knapsack
 
+# A prefix whose observed and forecast utility both sit at (numerical)
+# zero is dead traffic; real utilities are whole saved tokens, so
+# anything below this is the forecaster's EPS floor decaying.
+AGE_UTIL_EPS = 1e-3
+
 
 @dataclass
 class PrefixEntry:
     prefix_id: str
-    length: int                 # tokens in the full prefix
-    covered_len: int = 0        # tokens materialised so far (VAP-style)
+    length: int  # tokens in the full prefix
+    covered_len: int = 0  # tokens materialised so far (VAP-style)
     bytes_per_token: float = 0.0
     hits_this_cycle: int = 0
 
@@ -52,11 +69,13 @@ class PredictivePrefixCache:
 
     hbm_budget_bytes: float
     bytes_per_token: float
-    tokens_per_cycle: int = 4096      # bounded build work per cycle
+    tokens_per_cycle: int = 4096  # bounded build work per cycle
     season_len: int = 24
+    max_idle_cycles: int = 8  # zero-utility cycles before aging out
     entries: Dict[str, PrefixEntry] = field(default_factory=dict)
     models: Dict[str, hw.HWState] = field(default_factory=dict)
     known_lengths: Dict[str, int] = field(default_factory=dict)
+    idle_cycles: Dict[str, int] = field(default_factory=dict)
     cycles: int = 0
 
     # ---- serving-path hooks -------------------------------------------
@@ -77,7 +96,7 @@ class PredictivePrefixCache:
         apply bounded build/evict actions.  Returns diagnostics."""
         # Stage I/III: observed utility = saved prefill tokens
         observed: Dict[str, float] = {}
-        for pid, length in self.known_lengths.items():
+        for pid in sorted(self.known_lengths):
             e = self.entries.get(pid)
             hits = e.hits_this_cycle if e else 0.0
             cov = e.covered_len if e else 0
@@ -85,37 +104,80 @@ class PredictivePrefixCache:
             st = self.models.get(pid, hw.init_state(self.season_len))
             self.models[pid] = hw.update(st, observed[pid])
 
-        forecasts = {pid: float(hw.forecast(self.models[pid], 1))
-                     for pid in self.models}
+        forecasts = {
+            pid: float(hw.forecast(self.models[pid], 1))
+            for pid in self.models
+        }
+
+        # Age out dead prefixes: once forecast AND observed utility
+        # have been zero for ``max_idle_cycles`` straight cycles, the
+        # prefix leaves the monitor (known_lengths would otherwise
+        # grow without bound and every cycle would forecast + knapsack
+        # one-shot prefixes forever).  A returning prefix re-enters
+        # through ``lookup`` with a fresh model.
+        for pid in list(self.known_lengths):
+            signal = max(observed.get(pid, 0.0), forecasts.get(pid, 0.0))
+            if signal > AGE_UTIL_EPS:
+                self.idle_cycles[pid] = 0
+                continue
+            idle = self.idle_cycles.get(pid, 0) + 1
+            if idle < self.max_idle_cycles:
+                self.idle_cycles[pid] = idle
+                continue
+            del self.known_lengths[pid]
+            self.models.pop(pid, None)
+            self.entries.pop(pid, None)
+            self.idle_cycles.pop(pid, None)
+            observed.pop(pid, None)
+            forecasts.pop(pid, None)
 
         # Stage II: knapsack over known prefixes under the HBM budget
-        pids = list(self.known_lengths)
-        utils = np.array([max(forecasts.get(p, 0.0), observed.get(p, 0.0))
-                          for p in pids])
-        sizes = np.array([self.known_lengths[p] * self.bytes_per_token
-                          for p in pids])
-        keep = knapsack.solve(utils, sizes, self.hbm_budget_bytes) \
-            if pids else np.zeros(0, bool)
-        chosen = {pids[i] for i in range(len(pids)) if keep[i]}
+        pids = sorted(self.known_lengths)
+        utility = {
+            p: max(forecasts.get(p, 0.0), observed.get(p, 0.0))
+            for p in pids
+        }
+        utils = np.array([utility[p] for p in pids])
+        sizes = np.array(
+            [self.known_lengths[p] * self.bytes_per_token for p in pids]
+        )
+        keep = (
+            knapsack.solve(utils, sizes, self.hbm_budget_bytes)
+            if pids
+            else np.zeros(0, bool)
+        )
+        chosen = [pids[i] for i in range(len(pids)) if keep[i]]
 
+        chosen_set = set(chosen)
         for pid in list(self.entries):
-            if pid not in chosen:
-                del self.entries[pid]          # evict; model survives
+            if pid not in chosen_set:
+                del self.entries[pid]  # evict; model survives
+
+        # Bounded build budget, allocated in canonical order (forecast
+        # utility descending, pid ascending on ties) so results are
+        # independent of set/dict iteration order -- and EVERY chosen
+        # prefix is materialised: a chosen-but-unfunded prefix keeps
+        # its entry at covered_len=0 and resumes growing next cycle
+        # instead of being silently re-evicted.
+        chosen.sort(key=lambda p: (-utility[p], p))
         budget = self.tokens_per_cycle
         for pid in chosen:
             e = self.entries.get(pid)
             if e is None:
-                e = PrefixEntry(pid, self.known_lengths[pid],
-                                bytes_per_token=self.bytes_per_token)
+                e = PrefixEntry(
+                    pid,
+                    self.known_lengths[pid],
+                    bytes_per_token=self.bytes_per_token,
+                )
                 self.entries[pid] = e
             grow = min(budget, e.length - e.covered_len)
             e.covered_len += grow
             budget -= grow
-            if budget <= 0:
-                break
         for e in self.entries.values():
             e.hits_this_cycle = 0
         self.cycles += 1
-        return {"n_entries": len(self.entries),
-                "bytes": sum(e.size_bytes for e in self.entries.values()),
-                "forecast_max": max(forecasts.values(), default=0.0)}
+        return {
+            "n_entries": len(self.entries),
+            "bytes": sum(e.size_bytes for e in self.entries.values()),
+            "forecast_max": max(forecasts.values(), default=0.0),
+        }

@@ -1,0 +1,458 @@
+"""Serving front end tests: scheduler liveness, prefix-cache
+determinism + aging, open-loop admission, and the arrival-stream
+runner.
+
+Contracts under test:
+
+* BatchScheduler -- every submitted request retires (zero/negative
+  budgets, rids the decode step stops reporting), so a drained serve
+  loop always reaches ``idle``.
+* PredictivePrefixCache.cycle -- bit-deterministic across Python hash
+  seeds (canonical build-budget allocation), every knapsack-chosen
+  prefix materialises (covered_len=0 floor), partially-built prefixes
+  serve lookups, models survive eviction, and one-shot prefixes age
+  out of the monitor.
+* serving.admission -- seeded arrival generators, the
+  size-or-deadline burst former's close rules, and the backlog
+  pressure primitives.
+* The open-loop runner -- deterministic replay, closed-loop routing
+  untouched, deadline bursts beating fixed-size bursts on a sparse
+  stream, and the build throttle never deferring urgent work into a
+  spiral.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.bench_db import QueryGen, make_tuner_db
+from repro.bench_db.runner import RunConfig, run_workload
+from repro.bench_db.workloads import hybrid_workload
+from repro.core import Database, make_dl_tuner
+from repro.core.build_service import BuildQuantum, BuildService
+from repro.serving import BatchScheduler, PredictivePrefixCache
+from repro.serving.admission import (backlog_depth, bursty_arrivals,
+                                     make_arrivals, next_burst,
+                                     poisson_arrivals,
+                                     recent_arrival_gap_ms, slo_pressure)
+from repro.serving.slo import compute_slo, digest
+
+SRC = make_tuner_db(n_rows=3_000, page_size=128)
+
+
+# ---------------------------------------------------------------------------
+# BatchScheduler liveness
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_admit_generate_retire():
+    s = BatchScheduler(max_batch=2, eos_id=99)
+    r0 = s.submit(np.arange(4), max_new_tokens=2)
+    r1 = s.submit(np.arange(4), max_new_tokens=8)
+    r2 = s.submit(np.arange(4), max_new_tokens=8)
+    assert [r.rid for r in s.admit()] == [r0, r1]  # r2 waits for a slot
+    s.record_tokens({r0: 1, r1: 1})
+    s.record_tokens({r0: 2, r1: 99})  # r0 spends budget, r1 hits EOS
+    assert s.retired == 2 and s.active == []
+    assert [r.rid for r in s.admit()] == [r2]
+    for _ in range(8):
+        s.record_tokens({r2: 5})
+    assert s.idle and s.retired == 3
+
+
+def test_scheduler_zero_budget_retired_at_admission():
+    """A max_new_tokens <= 0 request must never occupy a slot: no
+    decode step will report a token for it, so parking it in
+    ``active`` would leak the slot forever."""
+    s = BatchScheduler(max_batch=1)
+    s.submit(np.arange(3), max_new_tokens=0)
+    s.submit(np.arange(3), max_new_tokens=-5)  # clamped at submit
+    live = s.submit(np.arange(3), max_new_tokens=1)
+    admitted = s.admit()
+    assert [r.rid for r in admitted] == [live]  # zero-budget skipped
+    assert s.retired == 2
+    s.record_tokens({live: 7})
+    assert s.idle and s.retired == 3
+
+
+def test_scheduler_missing_rid_still_drains():
+    """A request the decode step stopped reporting (server-side stop
+    marks it done; spent budget) must release its slot on the next
+    sweep even though its rid is absent from the step's outputs."""
+    s = BatchScheduler(max_batch=2)
+    ghost = s.submit(np.arange(3), max_new_tokens=2)
+    live = s.submit(np.arange(3), max_new_tokens=2)
+    s.admit()
+    s.record_tokens({ghost: 1, live: 1})
+    # server-side stop: the engine drops the lane and stops reporting
+    next(r for r in s.active if r.rid == ghost).done = True
+    s.record_tokens({live: 1})  # ghost absent from outputs: swept
+    assert s.idle and s.retired == 2
+    # an exhausted-budget request absent from outputs is also swept
+    s2 = BatchScheduler(max_batch=1)
+    r = s2.submit(np.arange(3), max_new_tokens=1)
+    s2.admit()
+    s2.record_tokens({r: 5})
+    s2.record_tokens({})  # no-op step must not crash or un-retire
+    assert s2.idle and s2.retired == 1
+
+
+# ---------------------------------------------------------------------------
+# PredictivePrefixCache: determinism, knapsack floor, aging
+# ---------------------------------------------------------------------------
+
+
+def _drive(pc, traffic, cycles):
+    """Replay ``traffic`` = [(prefix_id, length, hits)] each cycle."""
+    for _ in range(cycles):
+        for pid, length, hits in traffic:
+            for _ in range(hits):
+                pc.lookup(pid, length)
+        pc.cycle()
+
+
+def test_prefix_cache_partial_build_serves_lookups():
+    pc = PredictivePrefixCache(hbm_budget_bytes=1e9, bytes_per_token=1.0,
+                               tokens_per_cycle=100)
+    _drive(pc, [("sys", 250, 4)], cycles=2)
+    # two cycles x 100 tokens: the 250-token prefix is half-built and
+    # must already serve its covered span (the hybrid-scan property)
+    assert pc.entries["sys"].covered_len == 200
+    assert pc.lookup("sys", 250) == 200
+    pc.cycle()
+    assert pc.entries["sys"].covered_len == 250
+    assert pc.lookup("sys", 250) == 250
+
+
+def test_prefix_cache_eviction_keeps_model():
+    pc = PredictivePrefixCache(hbm_budget_bytes=100.0, bytes_per_token=1.0,
+                               tokens_per_cycle=1000)
+    _drive(pc, [("a", 80, 8), ("b", 90, 1)], cycles=3)
+    assert "a" in pc.entries and "b" not in pc.entries  # budget fits one
+    assert "b" in pc.models  # the model survives eviction
+
+
+def test_prefix_cache_chosen_prefix_always_materialised():
+    """A knapsack-chosen prefix past the cycle's build budget must
+    keep an entry at covered_len=0 -- dropping it would discard the
+    knapsack's decision and re-evict it every cycle."""
+    pc = PredictivePrefixCache(hbm_budget_bytes=1e9, bytes_per_token=1.0,
+                               tokens_per_cycle=100)
+    _drive(pc, [("hot", 100, 9), ("warm", 100, 2)], cycles=1)
+    assert pc.entries["hot"].covered_len == 100  # budget goes to top
+    assert pc.entries["warm"].covered_len == 0   # chosen, unfunded
+    pc.cycle()
+    assert pc.entries["warm"].covered_len == 100  # resumes next cycle
+
+
+def test_prefix_cache_budget_order_is_canonical():
+    """Equal-utility prefixes are funded in ascending-pid order, so
+    the allocation never depends on dict/set iteration order."""
+    pc = PredictivePrefixCache(hbm_budget_bytes=1e9, bytes_per_token=1.0,
+                               tokens_per_cycle=60)
+    _drive(pc, [("z", 60, 3), ("a", 60, 3)], cycles=1)
+    assert pc.entries["a"].covered_len == 60
+    assert pc.entries["z"].covered_len == 0
+
+
+def test_prefix_cache_one_shot_prefix_ages_out():
+    pc = PredictivePrefixCache(hbm_budget_bytes=1e9, bytes_per_token=1.0,
+                               tokens_per_cycle=1000, max_idle_cycles=4)
+    pc.lookup("once", 50)  # seen exactly once, never again
+    for _ in range(30):
+        pc.cycle()
+    assert "once" not in pc.known_lengths
+    assert "once" not in pc.models and "once" not in pc.entries
+    assert "once" not in pc.idle_cycles
+    # a returning prefix re-enters through lookup with a fresh model
+    assert pc.lookup("once", 50) == 0
+    assert "once" in pc.known_lengths
+
+
+def test_prefix_cache_live_prefix_never_ages_out():
+    pc = PredictivePrefixCache(hbm_budget_bytes=1e9, bytes_per_token=1.0,
+                               tokens_per_cycle=1000, max_idle_cycles=2)
+    _drive(pc, [("sys", 100, 3)], cycles=12)
+    assert "sys" in pc.known_lengths and "sys" in pc.entries
+
+
+_HASHSEED_SCRIPT = """
+from repro.serving import PredictivePrefixCache
+pc = PredictivePrefixCache(hbm_budget_bytes=300.0, bytes_per_token=1.0,
+                           tokens_per_cycle=64, max_idle_cycles=3)
+traffic = [("sys-a", 120, 5), ("sys-b", 120, 5), ("tool", 90, 2),
+           ("rag", 200, 1), ("one-shot", 40, 0)]
+pc.lookup("one-shot", 40)
+for cyc in range(12):
+    for pid, length, hits in traffic:
+        for _ in range(hits if cyc % 3 else hits + 1):
+            pc.lookup(pid, length)
+    diag = pc.cycle()
+state = sorted((p, e.covered_len) for p, e in pc.entries.items())
+print(state, sorted(pc.known_lengths.items()), round(diag["bytes"], 6))
+"""
+
+
+def test_prefix_cache_cycle_deterministic_across_hash_seeds():
+    """The acceptance check: identical traffic replayed under
+    different PYTHONHASHSEED values produces bit-identical cache
+    state (canonical ordering everywhere -- no set/dict-iteration
+    dependence in the numeric path)."""
+    outs = []
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    for seed in ("0", "1", "2"):
+        env = dict(os.environ, PYTHONHASHSEED=seed,
+                   PYTHONPATH=src, JAX_PLATFORMS="cpu")
+        out = subprocess.run(
+            [sys.executable, "-c", _HASHSEED_SCRIPT],
+            capture_output=True, text=True, env=env, check=True)
+        outs.append(out.stdout)
+    assert outs[0] == outs[1] == outs[2]
+
+
+# ---------------------------------------------------------------------------
+# Arrival generators
+# ---------------------------------------------------------------------------
+
+
+def test_arrival_generators_deterministic_and_monotone():
+    for kind in ("uniform", "poisson", "bursty"):
+        a = make_arrivals(kind, 500, 2.0, seed=3)
+        b = make_arrivals(kind, 500, 2.0, seed=3)
+        np.testing.assert_array_equal(a, b)
+        assert np.all(np.diff(a) >= 0.0) and a[0] >= 0.0
+    assert not np.array_equal(poisson_arrivals(100, 2.0, seed=1),
+                              poisson_arrivals(100, 2.0, seed=2))
+
+
+def test_arrival_generators_hit_requested_mean():
+    for kind in ("uniform", "poisson", "bursty"):
+        a = make_arrivals(kind, 4000, 5.0, seed=0)
+        mean_gap = a[-1] / len(a)
+        # bursty is heavy-tailed; a loose band still catches rate bugs
+        assert 0.5 * 5.0 < mean_gap < 2.0 * 5.0, (kind, mean_gap)
+
+
+def test_bursty_stream_is_actually_bursty():
+    a = bursty_arrivals(2000, 5.0, seed=0, peak_ratio=8.0)
+    gaps = np.diff(a)
+    # an 8x ON/OFF rate split forces far more dispersion than Poisson
+    assert np.std(gaps) > 1.5 * np.mean(gaps)
+
+
+def test_make_arrivals_edge_cases():
+    assert make_arrivals("poisson", 0, 2.0).size == 0
+    np.testing.assert_array_equal(make_arrivals("bursty", 4, 0.0),
+                                  np.zeros(4))
+    with pytest.raises(ValueError):
+        make_arrivals("fractal", 4, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Burst former close rules
+# ---------------------------------------------------------------------------
+
+
+def _plan(arr, batchable, phases, start=0, now=0.0, size=4, dl=None):
+    return next_burst(np.asarray(arr, float), batchable, phases,
+                      start, now, size, dl)
+
+
+def test_next_burst_size_close():
+    d = _plan([1, 2, 3, 4, 50], [True] * 5, [0] * 5)
+    assert d.end == 4 and d.dispatch_at == 4.0  # 4th member's arrival
+
+
+def test_next_burst_deadline_close():
+    # head at t=1, deadline 2ms from stage open: only members arriving
+    # by t=3 join; the straggler at t=10 starts the next burst
+    d = _plan([1, 2, 10, 11], [True] * 4, [0] * 4, dl=2.0)
+    assert d.end == 2 and d.dispatch_at == 3.0
+
+
+def test_next_burst_deadline_anchors_at_stage_open():
+    """Under backlog the timer anchors at max(now, head arrival): every
+    queued request has already arrived by the close, so a loaded
+    server still forms FULL batches instead of tiny arrival-window
+    slices (throughput under overload)."""
+    d = _plan([1, 2, 3, 4, 5], [True] * 5, [0] * 5, now=100.0, dl=2.0)
+    assert d.end == 4 and d.dispatch_at == 100.0
+
+
+def test_next_burst_blocker_flushes():
+    # a mutation (non-batchable) arriving mid-window flushes the stage
+    d = _plan([1, 2, 6, 7], [True, True, False, True], [0] * 4, dl=50.0)
+    assert d.end == 2 and d.dispatch_at == 6.0  # flush at its arrival
+    # ... but never later than the deadline
+    d = _plan([1, 2, 60, 61], [True, True, False, True], [0] * 4, dl=5.0)
+    assert d.end == 2 and d.dispatch_at == 6.0  # close = 1 + 5
+
+
+def test_next_burst_phase_change_flushes():
+    d = _plan([1, 2, 3, 4], [True] * 4, [0, 0, 1, 1], dl=None)
+    assert d.end == 2 and d.dispatch_at == 3.0
+
+
+def test_next_burst_non_batchable_head_and_stream_end():
+    d = _plan([5, 6], [False, True], [0, 0])
+    assert d.end == 1 and d.dispatch_at == 5.0
+    d = _plan([1, 2], [True, True], [0, 0], size=8)
+    assert d.end == 2 and d.dispatch_at == 2.0  # stream end closes
+
+
+def test_backlog_and_pressure_primitives():
+    arr = np.array([1.0, 2.0, 3.0, 10.0])
+    assert backlog_depth(arr, 0, 2.5) == 2
+    assert backlog_depth(arr, 2, 2.5) == 0
+    assert backlog_depth(arr, 0, 0.5) == 0
+    assert slo_pressure(10, 1.0, slo_ms=6.0)       # 10ms wait > 3ms
+    assert not slo_pressure(1, 1.0, slo_ms=6.0)
+    assert not slo_pressure(100, 1.0, slo_ms=None)  # no SLO, no signal
+    assert not slo_pressure(100, 0.0, slo_ms=6.0)   # no measurement yet
+    assert recent_arrival_gap_ms(arr, 0.5) == float("inf")
+    assert recent_arrival_gap_ms(arr, 3.5) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# BuildService: load shedding + urgent-only drains
+# ---------------------------------------------------------------------------
+
+
+class _NullDB:
+    indexes: dict = {}
+
+
+def _queued_service(utilities):
+    svc = BuildService(_NullDB(), tuner=None)
+    for i, u in enumerate(utilities):
+        svc.queue.append(BuildQuantum(f"ix{i}", pages=1, utility=u))
+    return svc
+
+
+def test_shed_lowest_utility_ranking():
+    svc = _queued_service([5.0, 1.0, 3.0, 1.0, 4.0])
+    assert svc.shed_lowest_utility(3) == 2
+    # both 1.0-utility quanta go, newest tie first; order preserved
+    assert [q.utility for q in svc.queue] == [5.0, 3.0, 4.0]
+    assert svc.shed_quanta == 2
+    assert svc.shed_lowest_utility(5) == 0  # under cap: no-op
+
+
+def test_drain_urgent_partitions_by_utility():
+    svc = _queued_service([10.0, 2.0, 8.0, 1.0])
+    done = svc.drain_urgent(frac=0.5)  # cut at 5.0
+    assert done == 0.0  # stale quanta (no live index) apply no work
+    # the speculative share (< cut) stays queued, order preserved
+    assert [q.utility for q in svc.queue] == [2.0, 1.0]
+
+
+def test_drain_urgent_all_equal_drains_everything():
+    """No utility spread means everything is urgent: deferral must
+    never starve the only work there is (legacy zero-utility quanta
+    degrade to a full drain)."""
+    svc = _queued_service([0.0, 0.0, 0.0])
+    svc.drain_urgent()
+    assert svc.pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# SLO reporter
+# ---------------------------------------------------------------------------
+
+
+def test_slo_digest_and_phase_slices():
+    lat = [1.0] * 98 + [10.0, 20.0]
+    d = digest(lat, slo_ms=5.0)
+    assert d.n == 100 and d.miss_rate == pytest.approx(0.02)
+    assert d.p50_ms == pytest.approx(1.0)
+    assert digest([], slo_ms=5.0).n == 0  # empty slice must not raise
+    rep = compute_slo(lat, [0] * 50 + [1] * 50, slo_ms=5.0)
+    assert rep.overall.n == 100
+    assert rep.phase(0).miss_rate == 0.0
+    assert rep.phase(1).miss_rate == pytest.approx(0.04)
+    assert rep.phase(7).n == 0  # unknown phase: empty slice
+    with pytest.raises(ValueError):
+        compute_slo([1.0], [0, 1])
+
+
+# ---------------------------------------------------------------------------
+# Open-loop runner
+# ---------------------------------------------------------------------------
+
+
+def _open_run(total=160, **over):
+    gen = QueryGen(SRC, selectivity=0.01, seed=23)
+    wl = hybrid_workload(gen, "read_heavy", total=total, phase_len=40,
+                         seed=2)
+    db = Database(dict(SRC.tables))
+    tuner = make_dl_tuner(db, "predictive")
+    cfg = RunConfig(tuning_interval_ms=2.0, read_batch_size=6, **over)
+    return run_workload(db, tuner, wl, cfg), db
+
+
+def test_open_loop_smoke_and_report():
+    res, _ = _open_run(arrival_stream="poisson", arrival_ms=0.5,
+                       arrival_seed=3, slo_ms=2.0)
+    assert len(res.latencies_ms) == 160
+    assert all(lat > 0.0 for lat in res.latencies_ms)
+    assert res.slo_report is not None
+    assert res.slo_report.overall.n == 160
+    assert res.deadline_miss_rate == res.slo_report.overall.miss_rate
+    assert 0.0 <= res.deadline_miss_rate <= 1.0
+    assert res.summary()["p999_ms"] >= res.summary()["p99_ms"]
+
+
+def test_open_loop_replay_is_deterministic():
+    for mode in (None, "deterministic", "overlap"):
+        a, _ = _open_run(arrival_stream="bursty", arrival_ms=0.5,
+                         arrival_seed=7, slo_ms=2.0,
+                         burst_deadline_ms=0.5, async_tuning=mode,
+                         build_throttle=mode is not None,
+                         load_shed_tuning=mode is not None,
+                         build_queue_cap=8)
+        b, _ = _open_run(arrival_stream="bursty", arrival_ms=0.5,
+                         arrival_seed=7, slo_ms=2.0,
+                         burst_deadline_ms=0.5, async_tuning=mode,
+                         build_throttle=mode is not None,
+                         load_shed_tuning=mode is not None,
+                         build_queue_cap=8)
+        assert a.latencies_ms == b.latencies_ms, mode
+        assert a.tuner_work_units == b.tuner_work_units, mode
+
+
+def test_closed_loop_config_routes_to_closed_loop():
+    """arrival_ms=0 with no deadline must take the pre-serving path:
+    no SLO report, closed-loop accounting untouched."""
+    res, _ = _open_run()
+    assert res.slo_report is None
+    assert res.deadline_miss_rate == 0.0
+    assert "cumulative_ms" in res.summary()
+
+
+def test_deadline_bursts_beat_fixed_bursts_on_sparse_stream():
+    """On a sparse stream a fixed-size burst head waits for its batch
+    to fill; the deadline close bounds that wait, so open-loop mean
+    latency must drop."""
+    fixed, _ = _open_run(arrival_stream="poisson", arrival_ms=1.0,
+                         arrival_seed=5, slo_ms=2.0)
+    dead, _ = _open_run(arrival_stream="poisson", arrival_ms=1.0,
+                        arrival_seed=5, slo_ms=2.0,
+                        burst_deadline_ms=0.3)
+    assert np.mean(dead.latencies_ms) < np.mean(fixed.latencies_ms)
+    assert dead.deadline_miss_rate <= fixed.deadline_miss_rate
+
+
+def test_throttle_never_starves_builds():
+    """The urgent share builds through pressure: with the throttle on,
+    the run must still perform build work and end with indexes
+    serving queries (the metastable-spiral regression check)."""
+    thr, db = _open_run(total=240, arrival_stream="bursty",
+                        arrival_ms=0.4, arrival_seed=7, slo_ms=2.0,
+                        burst_deadline_ms=0.5,
+                        async_tuning="deterministic",
+                        build_throttle=True, load_shed_tuning=True,
+                        build_queue_cap=8)
+    assert thr.tuner_work_units > 0.0
+    assert max(thr.index_counts) > 0
