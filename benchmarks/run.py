@@ -87,8 +87,8 @@ def main() -> None:
     from benchmarks import (async_tuning, batched_scan, fig2_schemes,
                             fig6_decision_logic, fig7_holistic,
                             fig8_affinity, fig9_layout, fig10_adaptability,
-                            fused_shard_scan, serving_slo, shard_tuning,
-                            sharded_scan)
+                            fused_shard_scan, mesh_scan, serving_slo,
+                            shard_tuning, sharded_scan)
     from benchmarks import common
 
     quick = args.quick
@@ -118,6 +118,10 @@ def main() -> None:
             phase_len=120 if quick else 180, quiet=True)),
         ("fused_shard", lambda: fused_shard_scan.run(
             bursts=2 if quick else 3, quiet=True)),
+        # burst size NOT reduced under --quick: the headline is burst
+        # amortization of the mesh dispatch's fixed cost, which needs
+        # the full burst to be meaningful (see mesh_scan docstring)
+        ("mesh", lambda: mesh_scan.run(quiet=True)),
         ("serving_slo", lambda: serving_slo.run(
             total=400 if quick else 1200,
             phase_len=100 if quick else 150, quiet=True)),

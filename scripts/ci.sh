@@ -25,6 +25,7 @@ RUFF_FORMAT_PATHS=(
     src/repro/core/hybrid_scan.py
     src/repro/core/tuner.py
     src/repro/kernels
+    src/repro/parallel
     src/repro/serving
 )
 

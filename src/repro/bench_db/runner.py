@@ -51,6 +51,16 @@ class RunConfig:
     num_shards: int = 1                           # >1: partition tables
                                                   # round-robin and fan scans
                                                   # out per shard (engine)
+    # Mesh execution (parallel.mesh): None = auto, batched sharded
+    # scans ride a shard_map device mesh whenever the local devices
+    # can place the shard axis; False = force the single-device
+    # stacked dispatch; True = REQUIRE a mesh -- a placement failure
+    # raises instead of silently falling back (the telemetry fix for
+    # the old pmap path's silent downgrade).  mesh_query_axis > 1
+    # additionally folds the 2-D query-batch axis over read bursts
+    # (claims n_shards x mesh_query_axis devices).
+    mesh: Optional[bool] = None
+    mesh_query_axis: int = 1
     # Async tuning pipeline (core.build_service).  None keeps the
     # legacy serialized schedule (tuning_cycle at burst boundaries).
     # "deterministic" routes every cycle through the decide/apply
@@ -93,6 +103,16 @@ class RunConfig:
     # throttle) is ignored open-loop: idleness comes from the stream.
     arrival_stream: Optional[str] = None
     arrival_seed: int = 0
+    # Stream shape (bursty streams only; defaults reproduce the
+    # admission layer's historical constants bit for bit):
+    # peak_ratio = ON-state rate inflation, on_frac = ON-state duty
+    # cycle, tenants > 1 superimposes that many independently seeded
+    # per-tenant streams (each thinned to keep the aggregate mean) --
+    # the multi-tenant mix, configurable without editing
+    # serving/admission.py.
+    arrival_peak_ratio: float = 8.0
+    arrival_on_frac: float = 0.125
+    arrival_tenants: int = 1
     burst_deadline_ms: Optional[float] = None
     # Per-query latency SLO: feeds the deadline-miss report
     # (RunResult.slo_report) and, with ``build_throttle``, the
@@ -141,6 +161,11 @@ class RunResult:
     deadline_miss_rate: float = 0.0
     build_throttle_deferrals: int = 0   # drains deferred under pressure
     build_shed_quanta: int = 0          # quanta dropped by load shedding
+    # Dispatch-strategy telemetry: execution tier -> queries served by
+    # it (ScanEngine.last_tier: single / loop / vmap-stacked / kernel
+    # / pmap / shard_map).  Benchmarks assert the tier they mean to
+    # measure instead of trusting a silent fallback.
+    execution_tiers: Dict[str, int] = field(default_factory=dict)
 
     def percentile(self, p: float) -> float:
         """Latency percentile, 0.0 on empty runs (np.percentile raises
@@ -219,6 +244,8 @@ def run_workload(db: Database, tuner, workload: Workload,
     # (bit-exact replay); overlap mode sub-slices them so the engine
     # can drain fine-grained quanta between burst dispatches.
     db.shard_aware_tuning = bool(cfg.shard_aware_tuning)
+    db.engine.mesh_mode = cfg.mesh
+    db.engine.mesh_query_axis = max(int(cfg.mesh_query_axis), 1)
     overlap = cfg.async_tuning == "overlap"
     service = None
     if cfg.async_tuning is not None:
@@ -325,6 +352,9 @@ def run_workload(db: Database, tuner, workload: Workload,
         res.latencies_ms.append(lat)
         res.phases.append(phase)
         res.cumulative_ms += lat
+        if stats.tier:
+            res.execution_tiers[stats.tier] = (
+                res.execution_tiers.get(stats.tier, 0) + 1)
         res.index_counts.append(len(db.indexes))
         fracs = [b.built_fraction(db.tables[b.desc.table])
                  for b in db.indexes.values()]
@@ -431,6 +461,8 @@ def _run_open_loop(db: Database, tuner, workload: Workload,
         raise ValueError(f"async_tuning: {cfg.async_tuning!r}")
 
     db.shard_aware_tuning = bool(cfg.shard_aware_tuning)
+    db.engine.mesh_mode = cfg.mesh
+    db.engine.mesh_query_axis = max(int(cfg.mesh_query_axis), 1)
     overlap = cfg.async_tuning == "overlap"
     service = None
     if cfg.async_tuning is not None:
@@ -443,7 +475,8 @@ def _run_open_loop(db: Database, tuner, workload: Workload,
     n = len(items)
     arrivals = db.clock_ms + make_arrivals(
         cfg.arrival_stream or "uniform", n, cfg.arrival_ms,
-        seed=cfg.arrival_seed)
+        seed=cfg.arrival_seed, peak_ratio=cfg.arrival_peak_ratio,
+        on_frac=cfg.arrival_on_frac, tenants=cfg.arrival_tenants)
     batch_n = max(int(cfg.read_batch_size), 1)
     batchable = np.array(
         [q.kind == "scan" and q.join_table is None and batch_n > 1
@@ -584,6 +617,9 @@ def _run_open_loop(db: Database, tuner, workload: Workload,
         res.latencies_ms.append(lat)
         res.phases.append(ph)
         res.cumulative_ms += lat
+        if stats.tier:
+            res.execution_tiers[stats.tier] = (
+                res.execution_tiers.get(stats.tier, 0) + 1)
         res.index_counts.append(len(db.indexes))
         fracs = [b.built_fraction(db.tables[b.desc.table])
                  for b in db.indexes.values()]

@@ -229,3 +229,32 @@ def allocate_build_pages(
         alloc += floor
         budget = left
     return alloc
+
+
+def allocate_cycle_budget(
+    utilities: Sequence[float],
+    remaining: Sequence[int],
+    budget: int,
+    per_index_cap: int,
+) -> np.ndarray:
+    """Split one cycle's global page budget ACROSS building indexes by
+    forecast utility -- the cross-index twin of
+    ``allocate_build_pages`` (which splits ONE index's slice across
+    its shards).
+
+    Historically every building index took a fixed
+    ``pages_per_cycle`` slice in catalog order until the cycle budget
+    ran out, so a cold index ahead in the catalog could starve a hot
+    one behind it.  Here the whole ``budget`` is utility-proportional:
+    each index keeps a +1 utility floor (fresh indexes with no
+    forecast yet must still build) masked by work left, and stays
+    capped at ``min(remaining, per_index_cap)``; cap overflow
+    redistributes to the other indexes by the same deterministic
+    largest-remainder rule, so the cycle budget is spent whenever any
+    index can absorb it.  Complete indexes receive nothing.
+    """
+    util = np.asarray(utilities, np.float64)
+    remaining = np.asarray(remaining, np.int64)
+    weights = np.where(remaining > 0, np.maximum(util, 0.0) + 1.0, 0.0)
+    cap = np.minimum(remaining, int(per_index_cap))
+    return allocate_build_pages(weights, cap, budget)

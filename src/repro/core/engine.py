@@ -19,7 +19,12 @@ bounds, and owns the dispatch strategy:
   (``kernels.batched_filter_agg.sharded_batched_filter_agg``).  The
   legacy per-shard loop fan-out survives as the ``*_loop`` forms --
   the parity oracle (tests/test_fused_shard_scan.py) and the
-  benchmark baseline (benchmarks/fused_shard_scan.py).
+  benchmark baseline (benchmarks/fused_shard_scan.py).  When the
+  local devices can place the shard axis (``parallel.mesh``), the
+  same stacked pytree rides a named mesh via ``shard_map`` -- the
+  mesh forms below -- and every dispatch records its execution tier
+  (``ScanEngine.last_tier``: loop / vmap-stacked / kernel / pmap /
+  shard_map) for the executor's telemetry.
 
 Bit-identity contract (tests/test_sharded_engine.py): for any shard
 count, every aggregate and accounting field equals the single-shard
@@ -74,7 +79,13 @@ from repro.core.table import (
     stacked_shards,
     visible_mask,
 )
-from repro.parallel.sharding import shard_fanout_devices
+from repro.parallel.mesh import (
+    SHARD_AXIS,
+    batch_spec,
+    make_scan_mesh,
+    shard_map,
+    stacked_specs,
+)
 
 # vmap/pmap axis prefixes: map the leading shard axis of every leaf.
 _TABLE_AXES = Table(0, 0, 0, 0)
@@ -857,7 +868,9 @@ def sharded_batched_pure_index_scan_loop(
 
 
 # ---------------------------------------------------------------------------
-# Multi-device fan-out (pmap): uniform shards, one device per shard
+# Multi-device fan-out (pmap): uniform shards, one device per shard.
+# LEGACY: dispatch now routes every family through the shard_map mesh
+# layer below; the pmap form survives as a parity reference only.
 # ---------------------------------------------------------------------------
 
 
@@ -910,6 +923,370 @@ def pmap_batched_full_table_scan(
 
 
 # ---------------------------------------------------------------------------
+# Mesh-native fan-out (shard_map): the stacked shard axis bound to a
+# named mesh axis; cross-shard reductions become axis collectives
+# ---------------------------------------------------------------------------
+#
+# Each mapped body receives a contiguous *slice* of the stacked pytree
+# (S_local = S / mesh_devices shards) and runs the same per-shard mask
+# arithmetic as the stacked vmapped forms above; only the cross-shard
+# reductions differ in spelling: the hybrid stitch's rho_m becomes
+# ``jax.lax.pmax`` over the mesh axis, the built-prefix sum and every
+# output accounting sum become ``psum``, and the per-shard stitch's
+# global start page becomes ``pmin``.  ``hybrid_ps`` needs no stitch
+# collective at all -- its stitch points are shard-local -- so only
+# the output reductions touch the wire.  int32 add/max/min associate
+# and commute, so every collective reduces to the exact bit pattern of
+# the single-device axis-0 reduction regardless of device count.
+#
+# ``use_kernel`` swaps the table-suffix mask arithmetic for one Pallas
+# kernel launch per locally-owned shard (the non-interpret TPU path
+# with per-chip block shapes, ``kernels.batched_filter_agg``); the
+# engine only selects it off-CPU (``kernels.ops.INTERPRET`` False), so
+# CPU meshes keep the bit-identical jnp bodies.
+
+
+def _mesh_kernel_suffix(stk, attrs, los, his, tss, agg_attr, starts):
+    """Table-suffix partials for the local shard slice, one fused
+    kernel launch per locally-owned shard.  ``starts`` is the
+    per-(local shard, query) table of local stitch points (None for
+    pure full scans)."""
+    from repro.kernels import ops as _kops
+
+    s_local = stk.shard_ids.shape[0]
+    B = los.shape[0]
+    sums = jnp.zeros((B,), jnp.int32)
+    cnts = jnp.zeros((B,), jnp.int32)
+    for i in range(s_local):
+        t = jax.tree.map(lambda x: x[i], stk.table)
+        sp = jnp.zeros((B,), jnp.int32) if starts is None else starts[i]
+        s_, c_ = _kops.scan_table_batched(
+            t, attrs, los, his, tss, agg_attr, start_pages=sp
+        )
+        sums, cnts = sums + s_, cnts + c_
+    return sums, cnts
+
+
+@functools.lru_cache(maxsize=64)
+def _mesh_full_fn(mesh, attrs: tuple, agg_attr: int, use_kernel: bool):
+    bspec = batch_spec(mesh)
+
+    def body(stk, los, his, tss):
+        if use_kernel:
+            sums, cnts = _mesh_kernel_suffix(
+                stk, attrs, los, his, tss, agg_attr, starts=None
+            )
+        else:
+
+            def shard(t, _s):
+                def one(lo, hi, ts):
+                    mask = conj_predicate_mask(
+                        t, attrs, lo, hi
+                    ) & visible_mask(t, ts)
+                    vals = t.data[:, :, agg_attr]
+                    return (
+                        jnp.sum(jnp.where(mask, vals, 0), dtype=jnp.int32),
+                        jnp.sum(mask, dtype=jnp.int32),
+                    )
+
+                return jax.vmap(one)(los, his, tss)
+
+            sums, cnts = _shard_axis_map(shard, stk)
+            sums, cnts = _sum0(sums), _sum0(cnts)
+        return (
+            jax.lax.psum(sums, SHARD_AXIS),
+            jax.lax.psum(cnts, SHARD_AXIS),
+        )
+
+    mapped = shard_map(
+        body,
+        mesh,
+        in_specs=(stacked_specs(), bspec, bspec, bspec),
+        out_specs=(bspec, bspec),
+    )
+    return jax.jit(mapped)
+
+
+@functools.lru_cache(maxsize=64)
+def _mesh_hybrid_fn(
+    mesh,
+    S: int,
+    key_attrs: tuple,
+    attrs: tuple,
+    agg_attr: int,
+    use_kernel: bool,
+):
+    """Global-stitch hybrid under shard_map: pass 1's rho_m reduction
+    is a ``pmax`` over the mesh axis, so the global stitch point is
+    replicated into every mapped body for pass 2."""
+    bspec = batch_spec(mesh)
+
+    def body(stk, six, los, his, tss):
+        def shard1(t, ix, s):
+            def one(lo, hi, ts):
+                probe = _shard_index_probe(
+                    t, ix, s, S, key_attrs, attrs, lo, hi, ts
+                )
+                return probe[5]
+
+            return jax.vmap(one)(los, his, tss)
+
+        rho = _shard_axis_map(shard1, stk, six)
+        rho_m = jax.lax.pmax(jnp.max(rho, axis=0), SHARD_AXIS)
+        built = jax.lax.psum(
+            jnp.sum(six.built_pages, dtype=jnp.int32), SHARD_AXIS
+        )
+        start_pages = jnp.maximum(rho_m, built)  # rho_i + 1
+
+        def shard2(t, ix, s):
+            def one(lo, hi, ts, sp):
+                idx_match, gpg, pg, sl, entry_mask, _ = _shard_index_probe(
+                    t, ix, s, S, key_attrs, attrs, lo, hi, ts
+                )
+                idx_keep = idx_match & (gpg < sp)
+                vals = t.data[:, :, agg_attr]
+                s_ = jnp.sum(
+                    jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32
+                )
+                c_ = jnp.sum(idx_keep, dtype=jnp.int32)
+                if not use_kernel:
+                    tbl = _shard_table_mask(t, s, S, attrs, lo, hi, ts, sp)
+                    s_ = s_ + jnp.sum(
+                        jnp.where(tbl, vals, 0), dtype=jnp.int32
+                    )
+                    c_ = c_ + jnp.sum(tbl, dtype=jnp.int32)
+                return s_, c_, jnp.sum(entry_mask, dtype=jnp.int32)
+
+            return jax.vmap(one)(los, his, tss, start_pages)
+
+        sums, cnts, ents = _shard_axis_map(shard2, stk, six)
+        sums, cnts, ents = _sum0(sums), _sum0(cnts), _sum0(ents)
+        if use_kernel:
+            local = start_pages[None, :] - stk.shard_ids[:, None] + S - 1
+            local_starts = jnp.maximum(local // S, 0).astype(jnp.int32)
+            ks, kc = _mesh_kernel_suffix(
+                stk, attrs, los, his, tss, agg_attr, local_starts
+            )
+            sums, cnts = sums + ks, cnts + kc
+        return (
+            jax.lax.psum(sums, SHARD_AXIS),
+            jax.lax.psum(cnts, SHARD_AXIS),
+            jax.lax.psum(ents, SHARD_AXIS),
+            start_pages.astype(jnp.int32),
+        )
+
+    mapped = shard_map(
+        body,
+        mesh,
+        in_specs=(stacked_specs(), stacked_specs(), bspec, bspec, bspec),
+        out_specs=(bspec, bspec, bspec, bspec),
+    )
+    return jax.jit(mapped)
+
+
+@functools.lru_cache(maxsize=64)
+def _mesh_hybrid_ps_fn(
+    mesh,
+    S: int,
+    key_attrs: tuple,
+    attrs: tuple,
+    agg_attr: int,
+    use_kernel: bool,
+):
+    """Per-shard stitch under shard_map: NO stitch collective (the
+    stitch points are shard-local by construction); only the output
+    accounting reductions cross the mesh axis."""
+    bspec = batch_spec(mesh)
+
+    def body(stk, six, los, his, tss):
+        def shard(t, ix, s):
+            def one(lo, hi, ts):
+                idx_keep, pg, sl, entry_mask, tbl_mask, pages_s, gstart = (
+                    _pershard_stitch(
+                        t, ix, s, S, key_attrs, attrs, lo, hi, ts
+                    )
+                )
+                vals = t.data[:, :, agg_attr]
+                s_ = jnp.sum(
+                    jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32
+                )
+                c_ = jnp.sum(idx_keep, dtype=jnp.int32)
+                if not use_kernel:
+                    s_ = s_ + jnp.sum(
+                        jnp.where(tbl_mask, vals, 0), dtype=jnp.int32
+                    )
+                    c_ = c_ + jnp.sum(tbl_mask, dtype=jnp.int32)
+                e_ = jnp.sum(entry_mask, dtype=jnp.int32)
+                return s_, c_, e_, pages_s, gstart
+
+            return jax.vmap(one)(los, his, tss)
+
+        sums, cnts, ents, pages, gstarts = _shard_axis_map(shard, stk, six)
+        sums, cnts = _sum0(sums), _sum0(cnts)
+        if use_kernel:
+            ks, kc = _mesh_kernel_suffix(
+                stk, attrs, los, his, tss, agg_attr, gstarts // S
+            )
+            sums, cnts = sums + ks, cnts + kc
+        return (
+            jax.lax.psum(sums, SHARD_AXIS),
+            jax.lax.psum(cnts, SHARD_AXIS),
+            jax.lax.psum(_sum0(pages), SHARD_AXIS),
+            jax.lax.psum(_sum0(ents), SHARD_AXIS),
+            jax.lax.pmin(
+                jnp.min(gstarts, axis=0).astype(jnp.int32), SHARD_AXIS
+            ),
+        )
+
+    mapped = shard_map(
+        body,
+        mesh,
+        in_specs=(stacked_specs(), stacked_specs(), bspec, bspec, bspec),
+        out_specs=(bspec, bspec, bspec, bspec, bspec),
+    )
+    return jax.jit(mapped)
+
+
+@functools.lru_cache(maxsize=64)
+def _mesh_pure_index_fn(
+    mesh, S: int, key_attrs: tuple, attrs: tuple, agg_attr: int
+):
+    bspec = batch_spec(mesh)
+
+    def body(stk, six, los, his, tss):
+        def shard(t, ix, s):
+            def one(lo, hi, ts):
+                idx_match, _gpg, pg, sl, entry_mask, _ = _shard_index_probe(
+                    t, ix, s, S, key_attrs, attrs, lo, hi, ts
+                )
+                vals = t.data[:, :, agg_attr]
+                match_vals = jnp.where(idx_match, vals[pg, sl], 0)
+                return (
+                    jnp.sum(match_vals, dtype=jnp.int32),
+                    jnp.sum(idx_match, dtype=jnp.int32),
+                    jnp.sum(entry_mask, dtype=jnp.int32),
+                )
+
+            return jax.vmap(one)(los, his, tss)
+
+        sums, cnts, ents = _shard_axis_map(shard, stk, six)
+        return (
+            jax.lax.psum(_sum0(sums), SHARD_AXIS),
+            jax.lax.psum(_sum0(cnts), SHARD_AXIS),
+            jax.lax.psum(_sum0(ents), SHARD_AXIS),
+        )
+
+    mapped = shard_map(
+        body,
+        mesh,
+        in_specs=(stacked_specs(), stacked_specs(), bspec, bspec, bspec),
+        out_specs=(bspec, bspec, bspec),
+    )
+    return jax.jit(mapped)
+
+
+def mesh_batched_full_table_scan(
+    st: ShardedTable,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+    mesh,
+    use_kernel: bool = False,
+) -> BatchScanResult:
+    """B plain table scans over every shard in ONE mesh dispatch."""
+    stk = stacked_shards(st)
+    fn = _mesh_full_fn(mesh, attrs, agg_attr, use_kernel)
+    sums, cnts = fn(
+        stk, jnp.asarray(los), jnp.asarray(his), jnp.asarray(tss)
+    )
+    B = los.shape[0]
+    z = jnp.zeros((B,), jnp.int32)
+    used = jnp.full((B,), _used_pages(st), jnp.int32)
+    return BatchScanResult(sums, cnts, used, z, z)
+
+
+def mesh_batched_hybrid_scan(
+    st: ShardedTable,
+    index: ShardedIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+    mesh,
+    use_kernel: bool = False,
+) -> BatchScanResult:
+    """B hybrid scans (global stitch) in ONE mesh dispatch: rho_m is a
+    pmax over the mesh axis inside the mapped body."""
+    stk = stacked_shards(st)
+    six = stacked_shard_indexes(index)
+    S = int(stk.shard_ids.shape[0])
+    fn = _mesh_hybrid_fn(mesh, S, key_attrs, attrs, agg_attr, use_kernel)
+    sums, cnts, ents, start = fn(
+        stk, six, jnp.asarray(los), jnp.asarray(his), jnp.asarray(tss)
+    )
+    pages = jnp.clip(_used_pages(st) - start, 0, None).astype(jnp.int32)
+    return BatchScanResult(sums, cnts, pages, ents, start)
+
+
+def mesh_batched_hybrid_scan_pershard(
+    st: ShardedTable,
+    index: ShardedIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+    mesh,
+    use_kernel: bool = False,
+) -> BatchScanResult:
+    """B hybrid scans with shard-local stitch points in ONE mesh
+    dispatch (no cross-shard stitch collective at all)."""
+    stk = stacked_shards(st)
+    six = stacked_shard_indexes(index)
+    S = int(stk.shard_ids.shape[0])
+    fn = _mesh_hybrid_ps_fn(mesh, S, key_attrs, attrs, agg_attr, use_kernel)
+    sums, cnts, pages, ents, gstart = fn(
+        stk, six, jnp.asarray(los), jnp.asarray(his), jnp.asarray(tss)
+    )
+    return BatchScanResult(sums, cnts, pages, ents, gstart)
+
+
+def mesh_batched_pure_index_scan(
+    st: ShardedTable,
+    index: ShardedIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+    mesh,
+) -> BatchScanResult:
+    """B index-only scans in ONE mesh dispatch."""
+    stk = stacked_shards(st)
+    six = stacked_shard_indexes(index)
+    S = int(stk.shard_ids.shape[0])
+    fn = _mesh_pure_index_fn(mesh, S, key_attrs, attrs, agg_attr)
+    sums, cnts, ents = fn(
+        stk, six, jnp.asarray(los), jnp.asarray(his), jnp.asarray(tss)
+    )
+    B = los.shape[0]
+    n_pages = jnp.sum(stk.local_pages)
+    return BatchScanResult(
+        sums,
+        cnts,
+        jnp.zeros((B,), jnp.int32),
+        ents,
+        jnp.full((B,), n_pages, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
 # The engine facade the executor drives
 # ---------------------------------------------------------------------------
 
@@ -926,13 +1303,44 @@ class ScanEngine:
     ``built_pages`` on the live records.
     """
 
+    #: dispatch-strategy vocabulary recorded in ``last_tier``
+    TIERS = ("loop", "vmap-stacked", "kernel", "pmap", "shard_map")
+
     def __init__(self):
         self.after_dispatch = None  # () -> None, set by the runner
+        # Mesh execution: None = auto (use a mesh whenever the local
+        # devices can place one), False = never, True = required (a
+        # placement failure raises instead of silently falling back --
+        # the telemetry fix for the old pmap path's silent downgrade).
+        self.mesh_mode = None
+        self.mesh_query_axis = 1  # >1 folds the 2-D query-batch axis
+        # Telemetry: the execution tier of the most recent dispatch
+        # (the executor stamps it onto ExecStats, the runner
+        # aggregates it onto RunResult.execution_tiers).
+        self.last_tier = None
+
+    def _scan_mesh(self, n_shards: int, batch: int):
+        """The mesh for this dispatch, or None (stacked fallback)."""
+        if self.mesh_mode is False:
+            return None
+        mesh = None
+        q = self.mesh_query_axis
+        if q > 1 and batch % q == 0:
+            mesh = make_scan_mesh(n_shards, q)
+        if mesh is None:
+            mesh = make_scan_mesh(n_shards)
+        if mesh is None and self.mesh_mode is True:
+            raise RuntimeError(
+                f"mesh execution required but {n_shards} shards cannot "
+                f"be placed on {len(jax.local_devices())} local devices"
+            )
+        return mesh
 
     def scan(self, table, plan, attrs: tuple, los, his, ts, agg_attr: int):
         """Single planned scan -> ScanResult | ShardScanResult."""
         path = plan.path
         if isinstance(table, ShardedTable):
+            self.last_tier = "loop"  # single-query: per-shard operators
             if path == "table":
                 return sharded_full_table_scan(
                     table, attrs, los, his, ts, agg_attr
@@ -969,6 +1377,7 @@ class ScanEngine:
                 ts,
                 agg_attr,
             )
+        self.last_tier = "single"
         if path == "table":
             return full_table_scan(table, attrs, los, his, ts, agg_attr)
         if path in ("pure_vbp", "pure_vap"):
@@ -1031,8 +1440,10 @@ class ScanEngine:
                 agg_attr,
                 kernel_ok,
             )
+        self.last_tier = "single"
         if path == "table":
             if kernel_ok:
+                self.last_tier = "kernel"
                 return self._kernel_full_scan(
                     table, attrs, los, his, tss, agg_attr
                 )
@@ -1041,6 +1452,7 @@ class ScanEngine:
             )
         if path in ("hybrid", "hybrid_ps"):  # plain tables have no shards
             if kernel_ok:
+                self.last_tier = "kernel"
                 return self._kernel_hybrid_scan(
                     table,
                     index_state,
@@ -1170,9 +1582,8 @@ class ScanEngine:
         )
 
     # -- sharded single dispatch -----------------------------------------
-    @classmethod
     def _scan_batch_sharded(
-        cls,
+        self,
         table: ShardedTable,
         path: str,
         index_state,
@@ -1184,17 +1595,63 @@ class ScanEngine:
         agg_attr: int,
         kernel_ok: bool,
     ) -> BatchScanResult:
-        if path == "table":
-            # One device per shard beats one fused launch on one
-            # device -- the pmap fan-out keeps precedence over the
-            # kernel flag when the host can actually place it.
-            devices = shard_fanout_devices(table.n_shards)
-            if devices is not None and shards_uniform(table):
-                return pmap_batched_full_table_scan(
-                    table, attrs, los, his, tss, agg_attr
+        # Mesh placement takes precedence for EVERY family (the old
+        # pmap fan-out only covered uniform full-table scans and fell
+        # back silently; the tier below is the telemetry for that
+        # decision).  On a mesh the kernel flag selects the Pallas
+        # suffix per locally-owned shard only off-CPU -- interpret
+        # mode keeps the bit-identical jnp mapped bodies.
+        mesh = self._scan_mesh(table.n_shards, los.shape[0])
+        if mesh is not None:
+            from repro.kernels import ops as _kops
+
+            self.last_tier = "shard_map"
+            mesh_kernel = kernel_ok and not _kops.INTERPRET
+            if path == "table":
+                return mesh_batched_full_table_scan(
+                    table, attrs, los, his, tss, agg_attr, mesh, mesh_kernel
                 )
+            if path == "hybrid":
+                return mesh_batched_hybrid_scan(
+                    table,
+                    index_state,
+                    key_attrs,
+                    attrs,
+                    los,
+                    his,
+                    tss,
+                    agg_attr,
+                    mesh,
+                    mesh_kernel,
+                )
+            if path == "hybrid_ps":
+                return mesh_batched_hybrid_scan_pershard(
+                    table,
+                    index_state,
+                    key_attrs,
+                    attrs,
+                    los,
+                    his,
+                    tss,
+                    agg_attr,
+                    mesh,
+                    mesh_kernel,
+                )
+            return mesh_batched_pure_index_scan(
+                table,
+                index_state,
+                key_attrs,
+                attrs,
+                los,
+                his,
+                tss,
+                agg_attr,
+                mesh,
+            )
+        self.last_tier = "kernel" if kernel_ok else "vmap-stacked"
+        if path == "table":
             if kernel_ok:
-                return cls._kernel_sharded_full_scan(
+                return self._kernel_sharded_full_scan(
                     table, attrs, los, his, tss, agg_attr
                 )
             return sharded_batched_full_table_scan(
@@ -1202,7 +1659,7 @@ class ScanEngine:
             )
         if path == "hybrid":
             if kernel_ok:
-                return cls._kernel_sharded_hybrid_scan(
+                return self._kernel_sharded_hybrid_scan(
                     table,
                     index_state,
                     key_attrs,
@@ -1218,7 +1675,7 @@ class ScanEngine:
             )
         if path == "hybrid_ps":
             if kernel_ok:
-                return cls._kernel_sharded_hybrid_scan(
+                return self._kernel_sharded_hybrid_scan(
                     table,
                     index_state,
                     key_attrs,

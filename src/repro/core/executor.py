@@ -88,6 +88,8 @@ class ExecStats:
     populate_units: float = 0.0     # in-query VBP population work (spikes)
     shard_pages: Tuple[int, ...] = ()  # per-shard pages the access path
                                        # touched (shard-aware tuning only)
+    tier: str = ""                  # execution tier of the dispatch that
+                                    # served this query (ScanEngine.TIERS)
 
 
 class Database:
@@ -281,7 +283,8 @@ class Database:
                          latency_ms=cost * self.time_per_unit_ms,
                          wall_s=wall, used_index=used,
                          agg_sum=int(r.agg_sum), count=count,
-                         shard_pages=self._shard_pages_of(t, plan))
+                         shard_pages=self._shard_pages_of(t, plan),
+                         tier=self.engine.last_tier or "")
 
     def _shard_pages_of(self, t, plan) -> Tuple[int, ...]:
         """Per-shard pages the planned access path table-scans -- the
@@ -384,6 +387,7 @@ class Database:
                                            tss, agg_attr,
                                            use_kernel=use_kernel)
                 wall = time.perf_counter() - t0
+                tier = self.engine.last_tier or ""
                 # Drain point between this group's dispatch and the
                 # next (outside the timed region: quantum work must
                 # not be charged to the burst's measured wall time).
@@ -396,7 +400,7 @@ class Database:
                 for k, (pos, _q, _plan) in enumerate(members):
                     raw[pos] = (int(agg_sums[k]), int(counts[k]),
                                 int(pages[k]), int(entries[k]),
-                                int(starts[k]), wall / len(members))
+                                int(starts[k]), wall / len(members), tier)
         finally:
             self.planner.end_snapshot()
 
@@ -405,7 +409,8 @@ class Database:
         plan_by_pos = {pos: plan for ms in groups.values()
                        for pos, _q, plan in ms}
         for pos, q in pending:
-            agg_sum, count, n_pages, n_entries, start_page, wall = raw[pos]
+            (agg_sum, count, n_pages, n_entries, start_page, wall,
+             tier) = raw[pos]
             t = self.tables[q.table]
             layout = self.layouts[q.table]
             plan_q = plan_by_pos[pos]
@@ -419,7 +424,7 @@ class Database:
                 cost_units=cost, latency_ms=cost * self.time_per_unit_ms,
                 wall_s=wall, used_index=used,
                 agg_sum=agg_sum, count=count,
-                shard_pages=self._shard_pages_of(t, plan_q))
+                shard_pages=self._shard_pages_of(t, plan_q), tier=tier)
             self.clock_ms += stats.latency_ms
             if observe:
                 n_rows = int(t.n_rows)

@@ -43,7 +43,11 @@ from repro.core.classifier import (
 )
 from repro.core.cost_model import IndexDescriptor
 from repro.core.executor import Database, ExecStats, Query
-from repro.core.index import ShardedIndex, shard_remaining_pages
+from repro.core.index import (
+    ShardedIndex,
+    build_pages_remaining,
+    shard_remaining_pages,
+)
 from repro.core.table import ShardedTable
 
 
@@ -255,26 +259,41 @@ class PredictiveTuner:
             if name not in db.indexes:
                 db.create_index(self.descs[name], scheme=self.scheme)
 
-        # Lightweight build work, bounded per cycle (prevents spikes);
-        # emitted as quanta in catalog order, exactly the slices the
-        # legacy inline loop applied.  Shard-aware tuning splits each
-        # index's slice into per-shard quanta sized by forecast
-        # per-shard utility instead of the global round-robin, so no
-        # budget lands on cold or already-complete shards.
+        # Lightweight build work, bounded per cycle (prevents spikes).
+        # The cycle's page budget is rebalanced ACROSS building
+        # indexes by forecast utility (cm.allocate_cycle_budget:
+        # deterministic largest-remainder, per-index slices capped at
+        # pages_per_cycle and at the pages actually left to build) --
+        # a cold index ahead in the catalog can no longer starve a hot
+        # one behind it.  Shard-aware tuning then splits each index's
+        # slice into per-shard quanta sized by forecast per-shard
+        # utility, so no budget lands on cold or complete shards.
         quanta: List[BuildQuantum] = []
         # Decide-time utility rides on each quantum so the serving
         # layer's load shedder can rank queued build work.
         util_by_name = dict(zip(names, utilities))
-        budget_pages = cfg.max_build_pages_per_cycle
         building = [
             b
             for b in db.indexes.values()
             if b.scheme in ("vap",) and b.building
         ]
-        for b in building:
-            if budget_pages <= 0:
-                break
-            step = min(cfg.pages_per_cycle, budget_pages)
+        steps = (
+            cm.allocate_cycle_budget(
+                [
+                    float(util_by_name.get(b.desc.name, 0.0))
+                    for b in building
+                ],
+                [self._build_pages_left(b) for b in building],
+                cfg.max_build_pages_per_cycle,
+                cfg.pages_per_cycle,
+            )
+            if building
+            else []
+        )
+        for b, step in zip(building, steps):
+            step = int(step)
+            if step <= 0:
+                continue
             t = db.tables[b.desc.table]
             per_shard = (
                 shard_aware
@@ -290,7 +309,6 @@ class PredictiveTuner:
                 )
             else:
                 quanta.append(BuildQuantum(b.desc.name, step, utility=u))
-            budget_pages -= step
 
         # Stage III: index utility forecasting ------------------------
         # (the per-shard heat models were advanced at cycle start so
@@ -328,6 +346,14 @@ class PredictiveTuner:
                 )
                 self.shard_heat[key] = fc
             fc.observe(self.db.monitor.shard_page_counts(name, t.n_shards))
+
+    def _build_pages_left(self, b) -> int:
+        """Pages this building index still has to cover (caps its
+        share of the cycle budget: complete indexes get nothing)."""
+        t = self.db.tables[b.desc.table]
+        if isinstance(b.vap, ShardedIndex):
+            return int(sum(shard_remaining_pages(b.vap, t)))
+        return int(build_pages_remaining(b.vap, t))
 
     def _shard_step_allocation(self, b, t: ShardedTable, step: int):
         """Split one index's cycle slice across shards by forecast

@@ -61,6 +61,36 @@ from jax.experimental.pallas import tpu as pltpu
 I32_MIN = -(2**31)
 I32_MAX = 2**31 - 1
 
+# Per-block VMEM budget for the non-interpret TPU path.  A TPU core
+# has ~16 MiB of VMEM; the pipeline double-buffers every input block,
+# and outputs / scalar prefetch / kernel scratch need headroom too, so
+# the streamed input planes get a 4 MiB slice by default.
+TPU_VMEM_BLOCK_BYTES = 4 * 1024 * 1024
+
+
+def tpu_block_pages(
+    n_pages: int,
+    page_size: int,
+    n_planes: int = 5,
+    vmem_budget_bytes: int = TPU_VMEM_BLOCK_BYTES,
+) -> int:
+    """Page-axis block size for a real-hardware (non-interpret) launch.
+
+    Sizes the block to the chip instead of the fixed interpret-mode
+    ladder: the largest power-of-two page count whose ``n_planes``
+    streamed int32 planes fit ``vmem_budget_bytes`` *double-buffered*
+    (Pallas prefetches block k+1 while k computes, so two copies of
+    every input block are resident).  Floor of 8 pages keeps the
+    sublane dimension at the int32 minimum tile (8, 128) even for tiny
+    tables; page_size is already lane-aligned by the Table layout.
+    """
+    per_page = int(page_size) * int(n_planes) * 4  # int32 bytes
+    limit = max(int(vmem_budget_bytes) // (2 * per_page), 8)
+    bp = 8
+    while bp * 2 <= min(limit, max(int(n_pages), 8)):
+        bp *= 2
+    return bp
+
 
 def _pad_pages(planes, n_pages, block_pages, page_axis):
     """Pad the page axis up to a whole number of blocks; padding rows

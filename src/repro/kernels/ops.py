@@ -31,6 +31,20 @@ def _pick_block_pages(n_pages: int) -> int:
     return 8
 
 
+def _block_pages(n_pages, page_size, interpret, n_planes=5):
+    """Resolve the page-axis block size for a launch.
+
+    Interpret mode (the CPU container) keeps the historical fixed
+    ladder so results and timings stay bit-for-bit reproducible; a
+    real-hardware launch sizes blocks to the chip's VMEM via
+    ``batched_filter_agg.tpu_block_pages`` (5 int32 planes stream per
+    grid step: pred0, pred1, agg, begin_ts, end_ts).
+    """
+    if interpret:
+        return _pick_block_pages(n_pages)
+    return _bfa.tpu_block_pages(n_pages, page_size, n_planes=n_planes)
+
+
 def _single_bounds(table, attrs, los, his):
     """Predicate planes + widened bounds for a single-query scan."""
     pred0 = table.data[:, :, attrs[0]]
@@ -82,7 +96,7 @@ def scan_table(table, attrs, los, his, ts, agg_attr, interpret=None):
         lo1,
         hi1,
         ts,
-        block_pages=_pick_block_pages(table.n_pages),
+        block_pages=_block_pages(table.n_pages, table.page_size, interpret),
         interpret=interpret,
     )
 
@@ -108,7 +122,7 @@ def scan_table_hybrid(
         hi1,
         ts,
         start_page=jnp.asarray(start_page, jnp.int32),
-        block_pages=_pick_block_pages(table.n_pages),
+        block_pages=_block_pages(table.n_pages, table.page_size, interpret),
         interpret=interpret,
     )
 
@@ -150,7 +164,7 @@ def scan_table_batched(
         his1,
         jnp.asarray(tss, jnp.int32),
         jnp.asarray(start_pages, jnp.int32),
-        block_pages=_pick_block_pages(table.n_pages),
+        block_pages=_block_pages(table.n_pages, table.page_size, interpret),
         interpret=interpret,
     )
 
@@ -193,6 +207,6 @@ def scan_shards_batched(
         jnp.asarray(tss, jnp.int32),
         jnp.asarray(start_pages, jnp.int32),
         jnp.asarray(stacked.local_pages, jnp.int32),
-        block_pages=_pick_block_pages(t.data.shape[1]),
+        block_pages=_block_pages(t.data.shape[1], t.data.shape[2], interpret),
         interpret=interpret,
     )

@@ -100,12 +100,44 @@ def bursty_arrivals(
     return np.asarray(times, np.float64)
 
 
+def _single_stream(
+    kind: str,
+    n: int,
+    mean_ms: float,
+    seed: int,
+    peak_ratio: float,
+    on_frac: float,
+) -> np.ndarray:
+    if kind == "uniform":
+        return uniform_arrivals(n, mean_ms)
+    if kind == "poisson":
+        return poisson_arrivals(n, mean_ms, seed)
+    return bursty_arrivals(
+        n, mean_ms, seed, peak_ratio=peak_ratio, on_frac=on_frac
+    )
+
+
 def make_arrivals(
-    kind: str, n: int, mean_ms: float, seed: int = 0
+    kind: str,
+    n: int,
+    mean_ms: float,
+    seed: int = 0,
+    peak_ratio: float = 8.0,
+    on_frac: float = 0.125,
+    tenants: int = 1,
 ) -> np.ndarray:
     """Arrival-time vector (monotone, ms) for ``n`` requests.  A
     non-positive ``mean_ms`` means everything arrives at t=0 (pure
-    backlog-drain / throughput mode)."""
+    backlog-drain / throughput mode).
+
+    ``peak_ratio`` and ``on_frac`` shape the bursty stream's ON state
+    (ignored by uniform/poisson); the defaults reproduce the
+    historical constants bit for bit.  ``tenants > 1`` superimposes
+    that many independently seeded streams, each generated at mean
+    inter-arrival ``tenants * mean_ms`` so the aggregate keeps mean
+    ``mean_ms`` -- uncorrelated per-tenant flash crowds, the
+    multi-tenant mix.  Deterministic per (seed, tenants).
+    """
     if kind not in ARRIVAL_KINDS:
         raise ValueError(
             f"arrival stream {kind!r}; known: {', '.join(ARRIVAL_KINDS)}"
@@ -114,11 +146,17 @@ def make_arrivals(
         return np.zeros(0, np.float64)
     if mean_ms <= 0.0:
         return np.zeros(n, np.float64)
-    if kind == "uniform":
-        return uniform_arrivals(n, mean_ms)
-    if kind == "poisson":
-        return poisson_arrivals(n, mean_ms, seed)
-    return bursty_arrivals(n, mean_ms, seed)
+    tenants = max(int(tenants), 1)
+    if tenants > 1:
+        streams = [
+            _single_stream(
+                kind, n, mean_ms * tenants, seed + 7919 * t,
+                peak_ratio, on_frac,
+            )
+            for t in range(tenants)
+        ]
+        return np.sort(np.concatenate(streams), kind="stable")[:n]
+    return _single_stream(kind, n, mean_ms, seed, peak_ratio, on_frac)
 
 
 @dataclass(frozen=True)
