@@ -84,11 +84,12 @@ def main() -> None:
                          "(the nightly-CI perf artifact)")
     args = ap.parse_args()
 
-    from benchmarks import (async_tuning, batched_scan, fig2_schemes,
-                            fig6_decision_logic, fig7_holistic,
-                            fig8_affinity, fig9_layout, fig10_adaptability,
-                            fused_shard_scan, mesh_scan, serving_slo,
-                            shard_tuning, sharded_scan)
+    from benchmarks import (async_tuning, batched_scan, crack_on_scan,
+                            fig2_schemes, fig6_decision_logic,
+                            fig7_holistic, fig8_affinity, fig9_layout,
+                            fig10_adaptability, fused_shard_scan,
+                            mesh_scan, serving_slo, shard_tuning,
+                            sharded_scan)
     from benchmarks import common
 
     quick = args.quick
@@ -116,6 +117,9 @@ def main() -> None:
         ("shard_tuning", lambda: shard_tuning.run(
             total=240 if quick else 360,
             phase_len=120 if quick else 180, quiet=True)),
+        ("crack_on_scan", lambda: crack_on_scan.run(
+            total=160 if quick else 240,
+            phase_len=55 if quick else 80, quiet=True)),
         ("fused_shard", lambda: fused_shard_scan.run(
             bursts=2 if quick else 3, quiet=True)),
         # burst size NOT reduced under --quick: the headline is burst

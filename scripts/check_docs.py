@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Execute the README quickstart so the front-page example cannot rot.
+
+Extracts every ``sh`` code fence from README.md, keeps the ones that
+pipe a heredoc into ``python`` (the quickstart shape), and runs each
+one verbatim under ``bash`` from the repo root.  A quickstart that
+stops importing, raises, or prints nothing fails the check.  Wired
+into the nightly CI job (.github/workflows/ci.yml).
+
+    PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FENCE = re.compile(r"```sh\n(.*?)```", re.DOTALL)
+
+
+def quickstart_blocks(readme: str) -> list[str]:
+    """The runnable fences: those that feed a heredoc into python."""
+    return [b for b in FENCE.findall(readme) if "<<'PY'" in b]
+
+
+def main() -> int:
+    readme = (REPO / "README.md").read_text()
+    blocks = quickstart_blocks(readme)
+    if not blocks:
+        print("check_docs: no runnable quickstart fence found in "
+              "README.md -- the doc/check contract is broken",
+              file=sys.stderr)
+        return 1
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    failures = 0
+    for i, block in enumerate(blocks):
+        print(f"check_docs: running README block {i + 1}/{len(blocks)}",
+              file=sys.stderr)
+        proc = subprocess.run(
+            ["bash", "-euo", "pipefail", "-c", block],
+            cwd=REPO, env=env, capture_output=True, text=True)
+        sys.stderr.write(proc.stderr)
+        sys.stdout.write(proc.stdout)
+        if proc.returncode != 0:
+            print(f"check_docs: block {i + 1} exited "
+                  f"{proc.returncode}", file=sys.stderr)
+            failures += 1
+        elif not proc.stdout.strip():
+            print(f"check_docs: block {i + 1} printed nothing "
+                  "(the quickstart should print a summary)",
+                  file=sys.stderr)
+            failures += 1
+    if failures:
+        return 1
+    print(f"check_docs: {len(blocks)} README block(s) ran clean",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

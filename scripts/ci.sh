@@ -18,9 +18,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # are kept `ruff format`-clean; legacy hand-aligned modules join this
 # list as they get reformatted.
 RUFF_FORMAT_PATHS=(
+    src/repro/bench_db/runner.py
     src/repro/core/build_service.py
     src/repro/core/cost_model.py
     src/repro/core/engine.py
+    src/repro/core/executor.py
     src/repro/core/forecaster.py
     src/repro/core/hybrid_scan.py
     src/repro/core/tuner.py

@@ -18,6 +18,7 @@ Phase boundaries can optionally drop every ad-hoc index ("diurnal"
 mode, Figure 6: indexes have to be rebuilt every morning) -- tuner
 *models* survive drops, which is exactly the predictive advantage.
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -28,9 +29,13 @@ import numpy as np
 from repro.bench_db.workloads import Workload
 from repro.core.build_service import BuildService
 from repro.core.executor import Database
-from repro.serving.admission import (backlog_depth, make_arrivals,
-                                     next_burst, recent_arrival_gap_ms,
-                                     slo_pressure)
+from repro.serving.admission import (
+    backlog_depth,
+    make_arrivals,
+    next_burst,
+    recent_arrival_gap_ms,
+    slo_pressure,
+)
 from repro.serving.slo import SloReport, compute_slo
 
 TUNING_FREQ_MS = {"fast": 100.0, "mod": 1000.0, "slow": 10000.0, "dis": None}
@@ -43,14 +48,12 @@ class RunConfig:
     drop_indexes_at_phase_end: bool = False       # diurnal mode
     time_per_unit_ms: float = 1e-4
     max_cycles_per_gap: int = 50                  # clamp catch-up storms
-    arrival_ms: float = 0.0                       # open-loop client cadence
-                                                  # (0 = closed loop)
-    read_batch_size: int = 1                      # >1: submit consecutive
-                                                  # read scans through
-                                                  # Database.execute_batch
-    num_shards: int = 1                           # >1: partition tables
-                                                  # round-robin and fan scans
-                                                  # out per shard (engine)
+    arrival_ms: float = 0.0  # open-loop client cadence (0 = closed loop)
+    # >1: submit consecutive read scans through Database.execute_batch.
+    read_batch_size: int = 1
+    # >1: partition tables round-robin and fan scans out per shard
+    # (engine).
+    num_shards: int = 1
     # Mesh execution (parallel.mesh): None = auto, batched sharded
     # scans ride a shard_map device mesh whenever the local devices
     # can place the shard axis; False = force the single-device
@@ -71,18 +74,29 @@ class RunConfig:
     # dispatches: build work no longer blocks queries (it is recorded
     # as tuner_overlapped_ms), undrained quanta carry over to the
     # next burst.
-    async_tuning: Optional[str] = None            # None|'deterministic'
-                                                  # |'overlap'
+    async_tuning: Optional[str] = None  # None | 'deterministic' | 'overlap'
     build_quantum_pages: int = 8                  # overlap-mode slice size
-    build_queue_cap: int = 64                     # overlap-mode backpressure:
-                                                  # queue depth above which the
-                                                  # build lane escalates drains
+    # Overlap-mode backpressure: queue depth above which the build
+    # lane escalates drains.
+    build_queue_cap: int = 64
     # Shard-aware tuning: scans record per-shard page-access counters,
     # the tuner forecasts per-shard heat and sizes per-shard build
     # quanta by utility, and hybrid scans over diverged prefixes use
     # the engine's per-shard stitch.  False keeps every path
     # bit-identical to the legacy engine for any shard count.
     shard_aware_tuning: bool = False
+    # Coverage-bitmap tuning (core.index.PageCoverage): crack_on_scan
+    # lets every scan adopt up to crack_pages_per_scan of the pages it
+    # just table-scanned into a matching building VAP index, and
+    # index_decay lets the tuner clear the coldest covered pages when
+    # the built footprint exceeds its storage budget.  Either flag
+    # attaches a built-page bitmap to new VAP indexes (round-robin
+    # layouts only) and their hybrid scans route through the masked
+    # stitch.  Both off (the default) keeps every index on the legacy
+    # prefix paths, bit-identical for any shard count.
+    crack_on_scan: bool = False
+    crack_pages_per_scan: int = 8
+    index_decay: bool = False
     # Adaptive cycle sizing (overlap mode only): resize
     # TunerConfig.pages_per_cycle each cycle from the build lane's
     # measured EWMA throughput (BuildService.suggested_pages_per_cycle)
@@ -216,8 +230,9 @@ class RunResult:
         }
 
 
-def run_workload(db: Database, tuner, workload: Workload,
-                 cfg: RunConfig) -> RunResult:
+def run_workload(
+    db: Database, tuner, workload: Workload, cfg: RunConfig
+) -> RunResult:
     """Single-core timing model.
 
     Background cycle work first consumes accumulated *idle credit*
@@ -244,19 +259,27 @@ def run_workload(db: Database, tuner, workload: Workload,
     # (bit-exact replay); overlap mode sub-slices them so the engine
     # can drain fine-grained quanta between burst dispatches.
     db.shard_aware_tuning = bool(cfg.shard_aware_tuning)
+    db.crack_on_scan = bool(cfg.crack_on_scan)
+    db.crack_pages_per_scan = int(cfg.crack_pages_per_scan)
+    db.index_decay = bool(cfg.index_decay)
     db.engine.mesh_mode = cfg.mesh
     db.engine.mesh_query_axis = max(int(cfg.mesh_query_axis), 1)
     overlap = cfg.async_tuning == "overlap"
     service = None
     if cfg.async_tuning is not None:
         service = BuildService(
-            db, tuner,
+            db,
+            tuner,
             quantum_pages=cfg.build_quantum_pages if overlap else None,
-            max_queue_depth=cfg.build_queue_cap if overlap else None)
+            max_queue_depth=cfg.build_queue_cap if overlap else None,
+        )
 
     res = RunResult()
-    next_cycle_ms = (db.clock_ms + cfg.tuning_interval_ms
-                     if cfg.tuning_interval_ms else float("inf"))
+    next_cycle_ms = (
+        db.clock_ms + cfg.tuning_interval_ms
+        if cfg.tuning_interval_ms
+        else float("inf")
+    )
     idle_until_ms = db.clock_ms + cfg.idle_at_phase_start_ms
     idle_credit_ms = cfg.idle_at_phase_start_ms
     blocking_ms = 0.0   # carried into the next query's latency
@@ -264,8 +287,7 @@ def run_workload(db: Database, tuner, workload: Workload,
 
     # Adaptive cycle sizing: only the overlap lane measures real drain
     # throughput, and only its schedule may depend on the wall clock.
-    adaptive = (overlap and cfg.adaptive_build_budget
-                and hasattr(tuner, "cfg"))
+    adaptive = overlap and cfg.adaptive_build_budget and hasattr(tuner, "cfg")
 
     def resize_cycle_budget() -> None:
         """Feed the lane's measured EWMA throughput (pages/ms) back
@@ -326,8 +348,8 @@ def run_workload(db: Database, tuner, workload: Workload,
             next_cycle_ms += cfg.tuning_interval_ms
             fired += 1
         if db.clock_ms >= next_cycle_ms:  # drop missed slots
-            k = int((db.clock_ms - next_cycle_ms) // cfg.tuning_interval_ms) + 1
-            next_cycle_ms += k * cfg.tuning_interval_ms
+            missed = (db.clock_ms - next_cycle_ms) // cfg.tuning_interval_ms
+            next_cycle_ms += (int(missed) + 1) * cfg.tuning_interval_ms
         if overlap:
             # Idle windows feed the concurrent build lane too: drain
             # carryover quanta against the idle credit (the always-on
@@ -338,8 +360,7 @@ def run_workload(db: Database, tuner, workload: Workload,
             # and backpressure (drain_burst_size) escalates those
             # drains whenever the queue falls behind its cap.
             while idle_credit_ms > 0.0 and service.pending():
-                idle_credit_ms = max(idle_credit_ms - overlap_quantum(),
-                                     0.0)
+                idle_credit_ms = max(idle_credit_ms - overlap_quantum(), 0.0)
 
     def account(phase, q, stats):
         """Per-query bookkeeping shared by the single and batch paths."""
@@ -354,10 +375,13 @@ def run_workload(db: Database, tuner, workload: Workload,
         res.cumulative_ms += lat
         if stats.tier:
             res.execution_tiers[stats.tier] = (
-                res.execution_tiers.get(stats.tier, 0) + 1)
+                res.execution_tiers.get(stats.tier, 0) + 1
+            )
         res.index_counts.append(len(db.indexes))
-        fracs = [b.built_fraction(db.tables[b.desc.table])
-                 for b in db.indexes.values()]
+        fracs = [
+            b.built_fraction(db.tables[b.desc.table])
+            for b in db.indexes.values()
+        ]
         res.built_fraction.append(float(np.mean(fracs)) if fracs else 0.0)
         if cfg.arrival_ms > 0.0 and lat < cfg.arrival_ms:
             gap = cfg.arrival_ms - lat
@@ -383,6 +407,7 @@ def run_workload(db: Database, tuner, workload: Workload,
         staged.clear()
 
     import time as _time
+
     t_start = _time.perf_counter()
     if overlap:
         db.engine.after_dispatch = overlap_quantum
@@ -399,8 +424,7 @@ def run_workload(db: Database, tuner, workload: Workload,
                     # traverse the idle window so due cycles fire inside
                     end = idle_until_ms
                     while db.clock_ms < end and cfg.tuning_interval_ms:
-                        db.clock_ms = min(end, max(next_cycle_ms,
-                                                   db.clock_ms))
+                        db.clock_ms = min(end, max(next_cycle_ms, db.clock_ms))
                         run_due_cycles()
                         if next_cycle_ms > end:
                             break
@@ -428,8 +452,9 @@ def run_workload(db: Database, tuner, workload: Workload,
     return res
 
 
-def _run_open_loop(db: Database, tuner, workload: Workload,
-                   cfg: RunConfig) -> RunResult:
+def _run_open_loop(
+    db: Database, tuner, workload: Workload, cfg: RunConfig
+) -> RunResult:
     """Open-loop serving driver (arrival-stream mode).
 
     Requests arrive on a seeded schedule (repro.serving.admission)
@@ -461,31 +486,48 @@ def _run_open_loop(db: Database, tuner, workload: Workload,
         raise ValueError(f"async_tuning: {cfg.async_tuning!r}")
 
     db.shard_aware_tuning = bool(cfg.shard_aware_tuning)
+    db.crack_on_scan = bool(cfg.crack_on_scan)
+    db.crack_pages_per_scan = int(cfg.crack_pages_per_scan)
+    db.index_decay = bool(cfg.index_decay)
     db.engine.mesh_mode = cfg.mesh
     db.engine.mesh_query_axis = max(int(cfg.mesh_query_axis), 1)
     overlap = cfg.async_tuning == "overlap"
     service = None
     if cfg.async_tuning is not None:
         service = BuildService(
-            db, tuner,
+            db,
+            tuner,
             quantum_pages=cfg.build_quantum_pages if overlap else None,
-            max_queue_depth=cfg.build_queue_cap if overlap else None)
+            max_queue_depth=cfg.build_queue_cap if overlap else None,
+        )
 
     items = list(workload)
     n = len(items)
     arrivals = db.clock_ms + make_arrivals(
-        cfg.arrival_stream or "uniform", n, cfg.arrival_ms,
-        seed=cfg.arrival_seed, peak_ratio=cfg.arrival_peak_ratio,
-        on_frac=cfg.arrival_on_frac, tenants=cfg.arrival_tenants)
+        cfg.arrival_stream or "uniform",
+        n,
+        cfg.arrival_ms,
+        seed=cfg.arrival_seed,
+        peak_ratio=cfg.arrival_peak_ratio,
+        on_frac=cfg.arrival_on_frac,
+        tenants=cfg.arrival_tenants,
+    )
     batch_n = max(int(cfg.read_batch_size), 1)
     batchable = np.array(
-        [q.kind == "scan" and q.join_table is None and batch_n > 1
-         for _, q in items], bool)
+        [
+            q.kind == "scan" and q.join_table is None and batch_n > 1
+            for _, q in items
+        ],
+        bool,
+    )
     phase_arr = np.array([p for p, _ in items], np.int64)
 
     res = RunResult()
-    next_cycle_ms = (db.clock_ms + cfg.tuning_interval_ms
-                     if cfg.tuning_interval_ms else float("inf"))
+    next_cycle_ms = (
+        db.clock_ms + cfg.tuning_interval_ms
+        if cfg.tuning_interval_ms
+        else float("inf")
+    )
     idle_credit_ms = 0.0
     served = 0                 # stream position: queries dispatched
     staged_end = 0             # end of the burst currently being formed
@@ -499,10 +541,10 @@ def _run_open_loop(db: Database, tuner, workload: Workload,
         # itself would read every full batch as pressure and starve
         # the build lane for the whole run (one batch in flight is
         # the steady state, not a backlog).
-        depth = backlog_depth(arrivals, max(served, staged_end),
-                              db.clock_ms)
-        return slo_pressure(depth, ewma_service_ms, cfg.slo_ms,
-                            cfg.slo_headroom)
+        depth = backlog_depth(arrivals, max(served, staged_end), db.clock_ms)
+        return slo_pressure(
+            depth, ewma_service_ms, cfg.slo_ms, cfg.slo_headroom
+        )
 
     def defer_ok() -> bool:
         # Deferring build work is only safe when the backlog is
@@ -518,7 +560,8 @@ def _run_open_loop(db: Database, tuner, workload: Workload,
     def shed_if_over_cap() -> None:
         if cfg.load_shed_tuning and service.pending() > cfg.build_queue_cap:
             res.build_shed_quanta += service.shed_lowest_utility(
-                cfg.build_queue_cap)
+                cfg.build_queue_cap
+            )
 
     def run_cycle(idle: bool) -> float:
         nonlocal defer_streak
@@ -539,8 +582,12 @@ def _run_open_loop(db: Database, tuner, workload: Workload,
         # patience bound forces a full drain after too many deferred
         # boundaries, and a sustained (unsustainable-rate) storm
         # sheds the lowest-utility quanta past the backpressure cap.
-        if (cfg.build_throttle and service.pending() > 0 and pressured()
-                and defer_streak < cfg.build_throttle_patience):
+        if (
+            cfg.build_throttle
+            and service.pending() > 0
+            and pressured()
+            and defer_streak < cfg.build_throttle_patience
+        ):
             defer_streak += 1
             res.build_throttle_deferrals += 1
             work += service.drain_urgent()
@@ -579,9 +626,8 @@ def _run_open_loop(db: Database, tuner, workload: Workload,
             next_cycle_ms += cfg.tuning_interval_ms
             fired += 1
         if db.clock_ms >= next_cycle_ms:  # drop missed slots
-            k = int((db.clock_ms - next_cycle_ms)
-                    // cfg.tuning_interval_ms) + 1
-            next_cycle_ms += k * cfg.tuning_interval_ms
+            missed = (db.clock_ms - next_cycle_ms) // cfg.tuning_interval_ms
+            next_cycle_ms += (int(missed) + 1) * cfg.tuning_interval_ms
         if overlap:
             # idle gaps feed the concurrent lane (carryover quanta
             # ride the credit) -- but not while the throttle holds it
@@ -611,21 +657,26 @@ def _run_open_loop(db: Database, tuner, workload: Workload,
                     break
         db.clock_ms = max(db.clock_ms, target_ms)
 
-    def account_open(ph: int, q, stats, arrival: float,
-                     completion: float) -> None:
+    def account_open(
+        ph: int, q, stats, arrival: float, completion: float
+    ) -> None:
         lat = completion - arrival
         res.latencies_ms.append(lat)
         res.phases.append(ph)
         res.cumulative_ms += lat
         if stats.tier:
             res.execution_tiers[stats.tier] = (
-                res.execution_tiers.get(stats.tier, 0) + 1)
+                res.execution_tiers.get(stats.tier, 0) + 1
+            )
         res.index_counts.append(len(db.indexes))
-        fracs = [b.built_fraction(db.tables[b.desc.table])
-                 for b in db.indexes.values()]
+        fracs = [
+            b.built_fraction(db.tables[b.desc.table])
+            for b in db.indexes.values()
+        ]
         res.built_fraction.append(float(np.mean(fracs)) if fracs else 0.0)
 
     import time as _time
+
     t_start = _time.perf_counter()
     if overlap:
         db.engine.after_dispatch = overlap_quantum
@@ -638,8 +689,15 @@ def _run_open_loop(db: Database, tuner, workload: Workload,
                     for name in list(db.indexes):
                         db.drop_index(name)
                 prev_phase = ph
-            d = next_burst(arrivals, batchable, phase_arr, start,
-                           db.clock_ms, batch_n, cfg.burst_deadline_ms)
+            d = next_burst(
+                arrivals,
+                batchable,
+                phase_arr,
+                start,
+                db.clock_ms,
+                batch_n,
+                cfg.burst_deadline_ms,
+            )
             staged_end = d.end
             advance_to(d.dispatch_at)
             run_due_cycles()
@@ -656,8 +714,10 @@ def _run_open_loop(db: Database, tuner, workload: Workload,
                 # the concurrent lane into the same spiral.
                 was_paused = service.paused
                 service.paused = (
-                    pressured() and defer_ok()
-                    and defer_streak < cfg.build_throttle_patience)
+                    pressured()
+                    and defer_ok()
+                    and defer_streak < cfg.build_throttle_patience
+                )
                 if service.paused:
                     defer_streak += 1
                     if not was_paused:
@@ -679,11 +739,14 @@ def _run_open_loop(db: Database, tuner, workload: Workload,
                 service_ms = stats.latency_ms + extra_ms
                 cum += service_ms
                 a = 0.25
-                ewma_service_ms = (service_ms if ewma_service_ms == 0.0
-                                   else (1.0 - a) * ewma_service_ms
-                                   + a * service_ms)
-                account_open(bph, q, stats, float(arrivals[start + k]),
-                             base + cum)
+                ewma_service_ms = (
+                    service_ms
+                    if ewma_service_ms == 0.0
+                    else (1.0 - a) * ewma_service_ms + a * service_ms
+                )
+                account_open(
+                    bph, q, stats, float(arrivals[start + k]), base + cum
+                )
             served = d.end
     finally:
         if overlap:

@@ -41,6 +41,30 @@ relaxes only the *schedule*: decide still fires on cycle boundaries,
 but quanta ride a concurrent build lane between burst dispatches, so
 their work never enters the blocking path (that is the latency-spike
 fix the paper argues for).
+
+Bitmap-mode quanta (coverage indexes) extend the contract, not
+replace it:
+
+* A quantum may carry an explicit ``page_list`` (hot-range-first
+  scheduling).  Replay determinism then rests on three rules: the
+  tuner derives the list from *deterministic* inputs only (monitor
+  records, zone maps and the coverage bitmap -- never wall time or
+  queue timing); ``vap_build_step`` filters it against the live
+  bitmap at APPLY time, so replaying a stale quantum after crack
+  adoption covered its pages is a cheap no-op, never a duplicate
+  entry; and chunk-splitting slices the list in order, so any
+  ``quantum_pages`` granularity applies the same pages in the same
+  sequence.
+* An empty ``page_list`` quantum on a coverage index builds the
+  lowest uncovered pages -- the exact pages the legacy prefix build
+  would have chosen -- so deterministic mode's bit-identity argument
+  carries over unchanged while the flag is off (no coverage is ever
+  attached) and degenerates gracefully while it is on.
+* Decay (``Database.index_decay``) only ever runs inside ``decide``
+  on cycle boundaries, host-side, before new quanta are planned;
+  bits cleared there are observed by every later plan/apply step in
+  program order, so a replay of the same decide sequence reproduces
+  the same bitmap trajectory bit for bit.
 """
 from __future__ import annotations
 
@@ -88,6 +112,11 @@ class BuildQuantum:
     # least valuable tuning work under overload, never queries); it
     # does not affect the build arithmetic itself.
     utility: float = 0.0
+    # Explicit GLOBAL page ids for bitmap-mode (coverage) indexes:
+    # hot-range-first scheduling.  Empty = build the lowest uncovered
+    # pages (coverage) or advance the prefix (legacy).  ``pages`` is
+    # the slice budget either way (== len(page_list) when present).
+    page_list: tuple = ()
 
 
 @dataclass
@@ -108,7 +137,8 @@ def apply_quantum(db, quantum: BuildQuantum) -> float:
     bi = db.indexes.get(quantum.index_name)
     if bi is None or not bi.building or bi.scheme not in ("vap", "full"):
         return 0.0
-    return db.vap_build_step(bi, quantum.pages, shard=quantum.shard)
+    return db.vap_build_step(bi, quantum.pages, shard=quantum.shard,
+                             page_list=quantum.page_list or None)
 
 
 class BuildService:
@@ -164,6 +194,19 @@ class BuildService:
             return self.tuner.tuning_cycle(idle=idle)
         plan = decide_fn(idle=idle)
         for q in plan.quanta:
+            if q.page_list:
+                # Slice the explicit page list in order: any quantum
+                # granularity applies the same pages in the same
+                # sequence (the deterministic-replay rule above).
+                pl = list(q.page_list)
+                step = self.quantum_pages or len(pl)
+                for i in range(0, len(pl), step):
+                    chunk = tuple(pl[i:i + step])
+                    self.queue.append(
+                        BuildQuantum(q.index_name, len(chunk), q.shard,
+                                     q.utility, chunk)
+                    )
+                continue
             for pages in split_build_pages(q.pages, self.quantum_pages):
                 self.queue.append(
                     BuildQuantum(q.index_name, pages, q.shard, q.utility)

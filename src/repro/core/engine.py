@@ -44,6 +44,23 @@ point, deduplicating index matches and masking the table suffix
 exactly like the single-table operator.  The per-shard stitch
 (``hybrid_ps``) needs no cross-shard reduction at all -- see the
 section note below.
+
+Masked (bitmap) stitch: when an index's coverage is an arbitrary
+built-page bitmap instead of a prefix (``core.index.PageCoverage``),
+the same exactness argument holds with the partition rule
+``covered[page]`` replacing every ``start_page`` comparison: index
+hits on covered pages plus a table scan of exactly the uncovered
+pages count each visible row exactly once.  The masked families need
+NO cross-shard stitch reduction at all -- coverage is defined over
+global page ids and each shard consumes its round-robin slice -- so
+only the output sums cross shards, reduced by the same associative
+int32 adds as every other family.  Accounting for the masked forms
+(``pages_scanned``, the reported ``start_page``) is computed
+host-side from the plan-pinned ``CoverageView`` (uncovered used
+pages; the bitmap's leading built run), which reproduces the legacy
+values bit-for-bit whenever the bitmap is a prefix -- the property
+test in tests/test_coverage_bitmap.py pins that identity across
+results AND accounting for 1 and 4 shards.
 """
 
 from __future__ import annotations
@@ -60,9 +77,12 @@ from repro.core.hybrid_scan import (
     batched_full_table_scan,
     batched_hybrid_index_prefix,
     batched_hybrid_scan,
+    batched_hybrid_scan_masked,
+    batched_masked_index_side,
     batched_pure_index_scan,
     full_table_scan,
     hybrid_scan,
+    hybrid_scan_masked,
     pure_index_scan,
 )
 from repro.core.index import (
@@ -336,6 +356,90 @@ def sharded_hybrid_scan_pershard(
 
 
 # ---------------------------------------------------------------------------
+# Masked (bitmap) stitch: coverage partitions pages, no stitch point
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def _sharded_masked_scan(
+    st: ShardedTable,
+    index: ShardedIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    ts,
+    agg_attr: int,
+    covered,
+):
+    """Per-shard masked stitch bodies; ``covered`` is the (S, max_pages)
+    bool bitmap over LOCAL page ids (``PageCoverage.stacked_mask``)."""
+    S = len(st.shards)
+    sums, cnts, ents, contribs = [], [], [], []
+    for s, (t, ix) in enumerate(zip(st.shards, index.shards)):
+        lc = covered[s, : t.n_pages]
+        idx_match, _gpg, pg, sl, entry_mask, _ = _shard_index_probe(
+            t, ix, s, S, key_attrs, attrs, los, his, ts
+        )
+        idx_keep = idx_match & lc[pg]
+        tbl_mask = conj_predicate_mask(t, attrs, los, his) & visible_mask(
+            t, ts
+        )
+        tbl_mask &= (~lc)[:, None]
+        vals = t.data[:, :, agg_attr]
+        idx_sum = jnp.sum(
+            jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32
+        )
+        tbl_sum = jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
+        sums.append(idx_sum + tbl_sum)
+        cnts.append(
+            jnp.sum(idx_keep, dtype=jnp.int32)
+            + jnp.sum(tbl_mask, dtype=jnp.int32)
+        )
+        ents.append(jnp.sum(entry_mask, dtype=jnp.int32))
+        contrib = jnp.zeros((t.n_pages, t.page_size), jnp.int32)
+        contrib = contrib.at[pg, sl].add(idx_keep.astype(jnp.int32))
+        contribs.append(contrib + tbl_mask.astype(jnp.int32))
+    return (
+        tree_reduce(sums),
+        tree_reduce(cnts),
+        tuple(contribs),
+        tree_reduce(ents),
+    )
+
+
+def sharded_hybrid_scan_masked(
+    st: ShardedTable,
+    index: ShardedIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    ts,
+    agg_attr: int,
+    cov_view,
+) -> ShardScanResult:
+    """Single masked hybrid scan over sharded storage.  Accounting is
+    host-derived from the pinned view: ``pages_scanned`` counts the
+    uncovered pages below the global append watermark, ``start_page``
+    reports the bitmap's leading built run -- both equal the legacy
+    hybrid values whenever the bitmap is a prefix."""
+    s_, c_, contribs, e_ = _sharded_masked_scan(
+        st, index, key_attrs, attrs, los, his, ts, agg_attr, cov_view.mask
+    )
+    used = -(-int(st.n_rows) // st.page_size)
+    pages = int((~cov_view.built_host[:used]).sum())
+    return ShardScanResult(
+        s_,
+        c_,
+        contribs,
+        jnp.asarray(pages, jnp.int32),
+        e_,
+        jnp.asarray(cov_view.prefix_len, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Stacked batched scans: ONE dispatch for any shard count
 # ---------------------------------------------------------------------------
 #
@@ -530,6 +634,89 @@ def _stacked_batched_pure_index(
         _sum0(ents),
         jnp.full((B,), n_pages, jnp.int32),
     )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("key_attrs", "attrs", "agg_attr", "table_side"),
+)
+def _stacked_batched_masked(
+    stk: StackedShards,
+    six: AdHocIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+    covered,
+    table_side: bool = True,
+):
+    """B masked stitches on the stacked shard axis in ONE dispatch:
+    (sums, cnts, ents), each (B,).  ``covered`` is the (S, max_pages)
+    local-page bitmap; with ``table_side=False`` only the index half
+    runs (the fused-kernel pre-pass, companion of
+    ``ops.scan_shards_batched_masked``)."""
+    S = stk.shard_ids.shape[0]
+
+    def shard(t, ix, s, lc):
+        def one(lo, hi, ts):
+            idx_match, _gpg, pg, sl, entry_mask, _ = _shard_index_probe(
+                t, ix, s, S, key_attrs, attrs, lo, hi, ts
+            )
+            idx_keep = idx_match & lc[pg]
+            vals = t.data[:, :, agg_attr]
+            s_ = jnp.sum(
+                jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32
+            )
+            c_ = jnp.sum(idx_keep, dtype=jnp.int32)
+            if table_side:
+                tbl = conj_predicate_mask(t, attrs, lo, hi) & visible_mask(
+                    t, ts
+                )
+                tbl &= (~lc)[:, None]
+                s_ = s_ + jnp.sum(jnp.where(tbl, vals, 0), dtype=jnp.int32)
+                c_ = c_ + jnp.sum(tbl, dtype=jnp.int32)
+            return s_, c_, jnp.sum(entry_mask, dtype=jnp.int32)
+
+        return jax.vmap(one)(los, his, tss)
+
+    sums, cnts, ents = jax.vmap(
+        shard, in_axes=(_TABLE_AXES, _INDEX_AXES, 0, 0)
+    )(stk.table, six, stk.shard_ids, covered)
+    return _sum0(sums), _sum0(cnts), _sum0(ents)
+
+
+def _masked_batch_accounting(st, cov_view, B):
+    """(pages_scanned, start_page) broadcast to the batch, host-derived
+    from the pinned coverage view (see the module docstring)."""
+    used = -(-int(st.n_rows) // st.page_size)
+    pages = int((~cov_view.built_host[:used]).sum())
+    return (
+        jnp.full((B,), pages, jnp.int32),
+        jnp.full((B,), cov_view.prefix_len, jnp.int32),
+    )
+
+
+def sharded_batched_hybrid_scan_masked(
+    st: ShardedTable,
+    index: ShardedIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+    cov_view,
+) -> BatchScanResult:
+    """B masked hybrid scans in ONE dispatch (stacked fan-out)."""
+    stk = stacked_shards(st)
+    six = stacked_shard_indexes(index)
+    sums, cnts, ents = _stacked_batched_masked(
+        stk, six, key_attrs, attrs, los, his, tss, agg_attr, cov_view.mask
+    )
+    pages, starts = _masked_batch_accounting(st, cov_view, los.shape[0])
+    return BatchScanResult(sums, cnts, pages, ents, starts)
 
 
 # -- hybrid index prefixes for the fused-kernel table suffix ---------------
@@ -1147,6 +1334,97 @@ def _mesh_hybrid_ps_fn(
     return jax.jit(mapped)
 
 
+def _mesh_kernel_suffix_masked(stk, attrs, los, his, tss, agg_attr, words):
+    """Masked table-suffix partials for the local shard slice: one
+    masked kernel launch per locally-owned shard, each fed its own
+    (1, W) slice of the packed coverage words."""
+    from repro.kernels import ops as _kops
+
+    s_local = stk.shard_ids.shape[0]
+    B = los.shape[0]
+    sums = jnp.zeros((B,), jnp.int32)
+    cnts = jnp.zeros((B,), jnp.int32)
+    for i in range(s_local):
+        t = jax.tree.map(lambda x, i=i: x[i], stk.table)
+        s_, c_ = _kops.scan_table_batched_masked(
+            t, attrs, los, his, tss, agg_attr, words[i : i + 1]
+        )
+        sums, cnts = sums + s_, cnts + c_
+    return sums, cnts
+
+
+@functools.lru_cache(maxsize=64)
+def _mesh_hybrid_masked_fn(
+    mesh,
+    S: int,
+    key_attrs: tuple,
+    attrs: tuple,
+    agg_attr: int,
+    use_kernel: bool,
+):
+    """Masked stitch under shard_map: NO stitch collective at all (the
+    bitmap partitions pages shard-locally); only the output sums cross
+    the mesh axis.  The (S, max_pages) bitmap and (S, W) packed words
+    ride the same shard-axis placement as the stacked pytree."""
+    bspec = batch_spec(mesh)
+
+    def body(stk, six, covered, words, los, his, tss):
+        def shard(t, ix, s, lc):
+            def one(lo, hi, ts):
+                idx_match, _gpg, pg, sl, entry_mask, _ = _shard_index_probe(
+                    t, ix, s, S, key_attrs, attrs, lo, hi, ts
+                )
+                idx_keep = idx_match & lc[pg]
+                vals = t.data[:, :, agg_attr]
+                s_ = jnp.sum(
+                    jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32
+                )
+                c_ = jnp.sum(idx_keep, dtype=jnp.int32)
+                if not use_kernel:
+                    tbl = conj_predicate_mask(
+                        t, attrs, lo, hi
+                    ) & visible_mask(t, ts)
+                    tbl &= (~lc)[:, None]
+                    s_ = s_ + jnp.sum(
+                        jnp.where(tbl, vals, 0), dtype=jnp.int32
+                    )
+                    c_ = c_ + jnp.sum(tbl, dtype=jnp.int32)
+                return s_, c_, jnp.sum(entry_mask, dtype=jnp.int32)
+
+            return jax.vmap(one)(los, his, tss)
+
+        sums, cnts, ents = jax.vmap(
+            shard, in_axes=(_TABLE_AXES, _INDEX_AXES, 0, 0)
+        )(stk.table, six, stk.shard_ids, covered)
+        sums, cnts, ents = _sum0(sums), _sum0(cnts), _sum0(ents)
+        if use_kernel:
+            ks, kc = _mesh_kernel_suffix_masked(
+                stk, attrs, los, his, tss, agg_attr, words
+            )
+            sums, cnts = sums + ks, cnts + kc
+        return (
+            jax.lax.psum(sums, SHARD_AXIS),
+            jax.lax.psum(cnts, SHARD_AXIS),
+            jax.lax.psum(ents, SHARD_AXIS),
+        )
+
+    mapped = shard_map(
+        body,
+        mesh,
+        in_specs=(
+            stacked_specs(),
+            stacked_specs(),
+            stacked_specs(),
+            stacked_specs(),
+            bspec,
+            bspec,
+            bspec,
+        ),
+        out_specs=(bspec, bspec, bspec),
+    )
+    return jax.jit(mapped)
+
+
 @functools.lru_cache(maxsize=64)
 def _mesh_pure_index_fn(
     mesh, S: int, key_attrs: tuple, attrs: tuple, agg_attr: int
@@ -1254,6 +1532,40 @@ def mesh_batched_hybrid_scan_pershard(
         stk, six, jnp.asarray(los), jnp.asarray(his), jnp.asarray(tss)
     )
     return BatchScanResult(sums, cnts, pages, ents, gstart)
+
+
+def mesh_batched_hybrid_scan_masked(
+    st: ShardedTable,
+    index: ShardedIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+    cov_view,
+    mesh,
+    use_kernel: bool = False,
+) -> BatchScanResult:
+    """B masked hybrid scans in ONE mesh dispatch; accounting is
+    host-derived from the pinned view exactly like the stacked form."""
+    stk = stacked_shards(st)
+    six = stacked_shard_indexes(index)
+    S = int(stk.shard_ids.shape[0])
+    fn = _mesh_hybrid_masked_fn(
+        mesh, S, key_attrs, attrs, agg_attr, use_kernel
+    )
+    sums, cnts, ents = fn(
+        stk,
+        six,
+        cov_view.mask,
+        cov_view.words,
+        jnp.asarray(los),
+        jnp.asarray(his),
+        jnp.asarray(tss),
+    )
+    pages, starts = _masked_batch_accounting(st, cov_view, los.shape[0])
+    return BatchScanResult(sums, cnts, pages, ents, starts)
 
 
 def mesh_batched_pure_index_scan(
@@ -1367,6 +1679,18 @@ class ScanEngine:
                     ts,
                     agg_attr,
                 )
+            if path == "hybrid_masked":
+                return sharded_hybrid_scan_masked(
+                    table,
+                    plan.index_state,
+                    plan.key_attrs,
+                    attrs,
+                    los,
+                    his,
+                    ts,
+                    agg_attr,
+                    plan.pinned_coverage,
+                )
             return sharded_hybrid_scan(
                 table,
                 plan.index_state,
@@ -1390,6 +1714,20 @@ class ScanEngine:
                 his,
                 ts,
                 agg_attr,
+            )
+        if path == "hybrid_masked":
+            cov = plan.pinned_coverage
+            return hybrid_scan_masked(
+                table,
+                plan.index_state,
+                plan.key_attrs,
+                attrs,
+                los,
+                his,
+                ts,
+                agg_attr,
+                cov.mask[0],
+                cov.prefix_len,
             )
         return hybrid_scan(
             table,
@@ -1421,9 +1759,12 @@ class ScanEngine:
         tss,
         agg_attr: int,
         use_kernel: bool = False,
+        coverage=None,
     ) -> BatchScanResult:
         """One batched dispatch for a plan group (single dispatch on
-        sharded storage too -- the stacked fan-out)."""
+        sharded storage too -- the stacked fan-out).  ``coverage`` is
+        the plan-pinned ``CoverageView`` for the ``hybrid_masked``
+        path (None for every legacy path)."""
         # The Pallas kernels evaluate at most 2 predicate columns;
         # wider conjunctions take the vmapped paths.
         kernel_ok = use_kernel and 1 <= len(attrs) <= 2
@@ -1439,6 +1780,7 @@ class ScanEngine:
                 tss,
                 agg_attr,
                 kernel_ok,
+                coverage,
             )
         self.last_tier = "single"
         if path == "table":
@@ -1449,6 +1791,32 @@ class ScanEngine:
                 )
             return batched_full_table_scan(
                 table, attrs, los, his, tss, agg_attr
+            )
+        if path == "hybrid_masked":
+            if kernel_ok:
+                self.last_tier = "kernel"
+                return self._kernel_hybrid_scan_masked(
+                    table,
+                    index_state,
+                    key_attrs,
+                    attrs,
+                    los,
+                    his,
+                    tss,
+                    agg_attr,
+                    coverage,
+                )
+            return batched_hybrid_scan_masked(
+                table,
+                index_state,
+                key_attrs,
+                attrs,
+                los,
+                his,
+                tss,
+                agg_attr,
+                coverage.mask[0],
+                coverage.prefix_len,
             )
         if path in ("hybrid", "hybrid_ps"):  # plain tables have no shards
             if kernel_ok:
@@ -1519,6 +1887,88 @@ class ScanEngine:
             pages,
             pre.entries_probed,
             pre.start_page,
+        )
+
+    @staticmethod
+    def _kernel_hybrid_scan_masked(
+        table: Table,
+        index: AdHocIndex,
+        key_attrs,
+        attrs,
+        los,
+        his,
+        tss,
+        agg_attr: int,
+        cov,
+    ) -> BatchScanResult:
+        """Masked hybrid scans with the uncovered-page table suffix on
+        the kernel: packed coverage words ride the scalar-prefetch
+        channel so covered blocks skip their DMA (``pl.when``)."""
+        from repro.kernels import ops as _kops
+
+        pre = batched_masked_index_side(
+            table,
+            index,
+            key_attrs,
+            attrs,
+            los,
+            his,
+            tss,
+            agg_attr,
+            cov.mask[0],
+            cov.prefix_len,
+        )
+        tbl_sums, tbl_cnts = _kops.scan_table_batched_masked(
+            table, attrs, los, his, tss, agg_attr, cov.words
+        )
+        used = -(-int(table.n_rows) // table.page_size)
+        pages = int((~cov.built_host[:used]).sum())
+        B = los.shape[0]
+        return BatchScanResult(
+            pre.agg_sum + tbl_sums,
+            pre.count + tbl_cnts,
+            jnp.full((B,), pages, jnp.int32),
+            pre.entries_probed,
+            pre.start_page,
+        )
+
+    @staticmethod
+    def _kernel_sharded_hybrid_scan_masked(
+        table: ShardedTable,
+        index: ShardedIndex,
+        key_attrs,
+        attrs,
+        los,
+        his,
+        tss,
+        agg_attr: int,
+        cov,
+    ) -> BatchScanResult:
+        """Fused masked hybrid scans: the stacked index half plus ONE
+        (shard, page-block, query) kernel launch whose per-shard block
+        windows come from the packed coverage words."""
+        from repro.kernels import ops as _kops
+
+        stk = stacked_shards(table)
+        six = stacked_shard_indexes(index)
+        psum_, pcnt, ents = _stacked_batched_masked(
+            stk,
+            six,
+            key_attrs,
+            attrs,
+            los,
+            his,
+            tss,
+            agg_attr,
+            cov.mask,
+            table_side=False,
+        )
+        ksums, kcnts = _kops.scan_shards_batched_masked(
+            stk, attrs, los, his, tss, agg_attr, cov.words
+        )
+        pages, starts = _masked_batch_accounting(table, cov, los.shape[0])
+        return BatchScanResult(
+            psum_ + ksums, pcnt + kcnts, pages, ents, starts
         )
 
     @staticmethod
@@ -1594,6 +2044,7 @@ class ScanEngine:
         tss,
         agg_attr: int,
         kernel_ok: bool,
+        coverage=None,
     ) -> BatchScanResult:
         # Mesh placement takes precedence for EVERY family (the old
         # pmap fan-out only covered uniform full-table scans and fell
@@ -1634,6 +2085,20 @@ class ScanEngine:
                     his,
                     tss,
                     agg_attr,
+                    mesh,
+                    mesh_kernel,
+                )
+            if path == "hybrid_masked":
+                return mesh_batched_hybrid_scan_masked(
+                    table,
+                    index_state,
+                    key_attrs,
+                    attrs,
+                    los,
+                    his,
+                    tss,
+                    agg_attr,
+                    coverage,
                     mesh,
                     mesh_kernel,
                 )
@@ -1688,6 +2153,30 @@ class ScanEngine:
                 )
             return sharded_batched_hybrid_scan_pershard(
                 table, index_state, key_attrs, attrs, los, his, tss, agg_attr
+            )
+        if path == "hybrid_masked":
+            if kernel_ok:
+                return self._kernel_sharded_hybrid_scan_masked(
+                    table,
+                    index_state,
+                    key_attrs,
+                    attrs,
+                    los,
+                    his,
+                    tss,
+                    agg_attr,
+                    coverage,
+                )
+            return sharded_batched_hybrid_scan_masked(
+                table,
+                index_state,
+                key_attrs,
+                attrs,
+                los,
+                his,
+                tss,
+                agg_attr,
+                coverage,
             )
         return sharded_batched_pure_index_scan(
             table, index_state, key_attrs, attrs, los, his, tss, agg_attr

@@ -21,6 +21,7 @@ Pass ``num_shards > 1`` (or call ``reshard``) to partition every table
 round-robin by page; results and accounting are bit-identical across
 shard counts (tests/test_sharded_engine.py).
 """
+
 from __future__ import annotations
 
 import time
@@ -33,27 +34,48 @@ import numpy as np
 from repro.core import cost_model as cm
 from repro.core.cost_model import IndexDescriptor
 from repro.core.engine import ScanEngine, ShardScanResult
-from repro.core.index import (ShardedIndex, ShardedVbpState, advance_build,
-                              advance_build_shard, make_index,
-                              make_sharded_index, make_sharded_vbp, make_vbp,
-                              shard_full_pages,
-                              sharded_vbp_populate_subdomain,
-                              vbp_invalidate_coverage, vbp_n_entries,
-                              vbp_populate_subdomain)
+from repro.core.index import (
+    ShardedIndex,
+    ShardedVbpState,
+    advance_build,
+    advance_build_shard,
+    build_page_list,
+    coverage_from_state,
+    eligible_global_pages,
+    make_index,
+    make_sharded_index,
+    make_sharded_vbp,
+    make_vbp,
+    shard_full_pages,
+    sharded_vbp_populate_subdomain,
+    vbp_invalidate_coverage,
+    vbp_n_entries,
+    vbp_populate_subdomain,
+)
 from repro.core.layout import LayoutState, scan_width_factor
 from repro.core.monitor import QueryRecord, WorkloadMonitor
-from repro.core.planner import (HYBRID_SELECTIVITY_CUTOFF,  # noqa: F401
-                                BuiltIndex, IntervalUnion, QueryPlanner,
-                                scan_cost)
-from repro.core.table import (ShardedTable, insert_rows,
-                              round_robin_layout, shard_table,
-                              sharded_insert_rows, sharded_update_rows,
-                              unshard_table, update_rows)
+from repro.core.planner import (
+    HYBRID_SELECTIVITY_CUTOFF,  # noqa: F401
+    BuiltIndex,
+    IntervalUnion,
+    QueryPlanner,
+    scan_cost,
+)
+from repro.core.table import (
+    ShardedTable,
+    insert_rows,
+    round_robin_layout,
+    shard_table,
+    sharded_insert_rows,
+    sharded_update_rows,
+    unshard_table,
+    update_rows,
+)
 
 
 @dataclass
 class Query:
-    kind: str                      # 'scan' | 'update' | 'insert'
+    kind: str  # 'scan' | 'update' | 'insert'
     table: str
     attrs: Tuple[int, ...] = ()
     los: Tuple[int, ...] = ()
@@ -62,7 +84,7 @@ class Query:
     proj_attrs: Tuple[int, ...] = ()
     set_attrs: Tuple[int, ...] = ()
     set_vals: Tuple[int, ...] = ()
-    rows: Optional[np.ndarray] = None   # INSERT payload
+    rows: Optional[np.ndarray] = None  # INSERT payload
     # HIGH-S equi-join: R.join_attr == S.join_inner_attr
     join_table: Optional[str] = None
     join_attr: int = 0
@@ -71,46 +93,57 @@ class Query:
 
     @property
     def accessed_attrs(self) -> Tuple[int, ...]:
-        return tuple(sorted(set(self.attrs) | set(self.proj_attrs)
-                            | ({self.agg_attr} if self.kind == "scan" else set())
-                            | set(self.set_attrs)))
+        return tuple(
+            sorted(
+                set(self.attrs)
+                | set(self.proj_attrs)
+                | ({self.agg_attr} if self.kind == "scan" else set())
+                | set(self.set_attrs)
+            )
+        )
 
 
 @dataclass
 class ExecStats:
-    cost_units: float               # tuple-touch units (simulated work)
-    latency_ms: float               # simulated latency
-    wall_s: float                   # measured wall time of the jitted ops
+    cost_units: float  # tuple-touch units (simulated work)
+    latency_ms: float  # simulated latency
+    wall_s: float  # measured wall time of the jitted ops
     used_index: bool
     agg_sum: int = 0
     count: int = 0
     rows_modified: int = 0
-    populate_units: float = 0.0     # in-query VBP population work (spikes)
-    shard_pages: Tuple[int, ...] = ()  # per-shard pages the access path
-                                       # touched (shard-aware tuning only)
-    tier: str = ""                  # execution tier of the dispatch that
-                                    # served this query (ScanEngine.TIERS)
+    populate_units: float = 0.0  # in-query VBP population work (spikes)
+    # Per-shard pages the access path touched (shard-aware tuning only).
+    shard_pages: Tuple[int, ...] = ()
+    # Execution tier of the dispatch that served this query
+    # (ScanEngine.TIERS).
+    tier: str = ""
 
 
 class Database:
     """Tables + index configuration + layout + monitor + simulated clock."""
 
-    def __init__(self, tables: Dict[str, object],
-                 time_per_unit_ms: float = 1e-4,
-                 monitor_window: int = 256,
-                 monitor_max_age_ms: float | None = None,
-                 num_shards: int = 1):
+    def __init__(
+        self,
+        tables: Dict[str, object],
+        time_per_unit_ms: float = 1e-4,
+        monitor_window: int = 256,
+        monitor_max_age_ms: float | None = None,
+        num_shards: int = 1,
+    ):
         self.tables: Dict[str, object] = dict(tables)
         self.num_shards = 1
         self.indexes: Dict[str, BuiltIndex] = {}
         self.layouts: Dict[str, LayoutState] = {
             name: LayoutState(n_attrs=t.n_attrs, n_pages=t.n_pages)
-            for name, t in self.tables.items()}
-        self.monitor = WorkloadMonitor(window=monitor_window,
-                                       max_age_ms=monitor_max_age_ms)
+            for name, t in self.tables.items()
+        }
+        self.monitor = WorkloadMonitor(
+            window=monitor_window, max_age_ms=monitor_max_age_ms
+        )
         self.clock_ms: float = 0.0
         self.time_per_unit_ms = time_per_unit_ms
-        self.update_cap = 512       # max rows materialised per UPDATE
+        self.update_cap = 512  # max rows materialised per UPDATE
         # Shard-aware tuning (RunConfig.shard_aware_tuning): when set,
         # scans record per-shard page-access counters and build quanta
         # may target single shards.  ``pershard_built`` tracks indexes
@@ -119,11 +152,25 @@ class Database:
         # per-shard stitch (planner._needs_pershard_stitch).
         self.shard_aware_tuning: bool = False
         self.pershard_built: set = set()
+        # Coverage-bitmap tuning: ``crack_on_scan`` lets a scan adopt
+        # pages it just table-scanned into a matching building VAP
+        # index (bitmap coverage retires the page-order constraint);
+        # ``index_decay`` lets the tuner drop cold built pages under
+        # the storage cap.  Both default off -- flag-off runs never
+        # attach a PageCoverage, so every index keeps the legacy
+        # prefix paths bit-for-bit.
+        self.crack_on_scan: bool = False
+        self.crack_pages_per_scan: int = 8
+        self.index_decay: bool = False
         self._round_robin_cache: Dict[str, bool] = {}
+        self._zone_maps: Dict[tuple, tuple] = {}
         self.planner = QueryPlanner(self)
         self.engine = ScanEngine()
-        counts = {t.n_shards for t in self.tables.values()
-                  if isinstance(t, ShardedTable)}
+        counts = {
+            t.n_shards
+            for t in self.tables.values()
+            if isinstance(t, ShardedTable)
+        }
         if num_shards > 1:
             self.reshard(num_shards)
         elif counts:
@@ -131,8 +178,8 @@ class Database:
             # uniform; only rebuild to normalise a mixed layout.
             target = max(counts)
             if counts == {target} and all(
-                    isinstance(t, ShardedTable)
-                    for t in self.tables.values()):
+                isinstance(t, ShardedTable) for t in self.tables.values()
+            ):
                 self.num_shards = target
             else:
                 self.reshard(target)
@@ -152,10 +199,12 @@ class Database:
         for name, t in self.tables.items():
             if isinstance(t, ShardedTable):
                 t = unshard_table(t)
-            self.tables[name] = shard_table(t, num_shards) \
-                if num_shards > 1 else t
+            self.tables[name] = (
+                shard_table(t, num_shards) if num_shards > 1 else t
+            )
         self.num_shards = num_shards
         self._round_robin_cache.clear()
+        self._zone_maps.clear()
 
     def table_is_round_robin(self, name: str) -> bool:
         """Cached: does ``name``'s shard layout follow the round-robin
@@ -178,8 +227,10 @@ class Database:
         bi = BuiltIndex(desc=desc, scheme=scheme, created_ms=self.clock_ms)
         sharded = isinstance(t, ShardedTable)
         if scheme in ("vap", "full"):
-            bi.vap = make_sharded_index(t) if sharded else \
-                make_index(t.capacity)
+            bi.vap = (
+                make_sharded_index(t) if sharded else make_index(t.capacity)
+            )
+            self.ensure_coverage(bi)
         else:
             bi.vbp = make_sharded_vbp(t) if sharded else make_vbp(t.capacity)
             bi.cov_union = IntervalUnion()
@@ -195,6 +246,71 @@ class Database:
 
     def total_index_bytes(self) -> float:
         return sum(b.size_bytes() for b in self.indexes.values())
+
+    def ensure_coverage(self, bi: BuiltIndex) -> bool:
+        """Attach a built-page bitmap to a VAP index when coverage
+        tuning is enabled (crack_on_scan / index_decay) and the table
+        layout supports global page ids (round-robin).  Seeds from the
+        index's current built prefix, so attaching mid-build is safe;
+        once attached, ALL builds must route through ``vap_build_step``
+        (which switches to ``build_page_list``) -- replaying
+        ``advance_build`` over covered pages would duplicate entries.
+        """
+        if bi.coverage is not None:
+            return True
+        if (
+            bi.scheme != "vap"
+            or not (self.crack_on_scan or self.index_decay)
+            or not self.table_is_round_robin(bi.desc.table)
+        ):
+            return False
+        bi.coverage = coverage_from_state(bi.vap, self.tables[bi.desc.table])
+        return True
+
+    def coverage_pages_left(self, bi: BuiltIndex) -> int:
+        """Uncovered fully-populated pages of a bitmap-mode index --
+        the coverage analogue of ``index.build_pages_remaining``."""
+        t = self.tables[bi.desc.table]
+        eligible = eligible_global_pages(t)
+        return int((~bi.coverage.built[eligible]).sum())
+
+    def zone_map(self, table: str, attr: int):
+        """Per-GLOBAL-page (min, max) of ``attr`` over the fully
+        populated pages -- the hot-range build planner's page-pruning
+        metadata.  Advisory only (it sizes and orders build quanta,
+        never results), so dead row versions are included and the
+        ranges are conservative.  Cached per (table, attr); any
+        mutation of the table or a reshard invalidates.  Pages outside
+        the full watermark get an empty (max < min) range."""
+        key = (table, attr)
+        got = self._zone_maps.get(key)
+        if got is not None:
+            return got
+        t = self.tables[table]
+        psz = t.page_size
+        if isinstance(t, ShardedTable):
+            n_global = t.n_shards * max(x.n_pages for x in t.shards)
+            mins = np.full(n_global, np.iinfo(np.int32).max, np.int64)
+            maxs = np.full(n_global, np.iinfo(np.int32).min, np.int64)
+            for s, sh in enumerate(t.shards):
+                full = int(sh.n_rows) // psz
+                if full == 0:
+                    continue
+                vals = np.asarray(sh.data[:full, :, attr])
+                gids = s + t.n_shards * np.arange(full)
+                mins[gids] = vals.min(axis=1)
+                maxs[gids] = vals.max(axis=1)
+        else:
+            full = int(t.n_rows) // psz
+            mins = np.full(t.n_pages, np.iinfo(np.int32).max, np.int64)
+            maxs = np.full(t.n_pages, np.iinfo(np.int32).min, np.int64)
+            if full:
+                vals = np.asarray(t.data[:full, :, attr])
+                mins[:full] = vals.min(axis=1)
+                maxs[:full] = vals.max(axis=1)
+        got = (mins, maxs)
+        self._zone_maps[key] = got
+        return got
 
     # Planner delegation (kept as methods for tuner/baseline callers).
     def _estimate_selectivity(self, q: Query) -> float:
@@ -223,28 +339,43 @@ class Database:
         self.clock_ms += stats.latency_ms
         if observe:
             n_rows = int(self.tables[q.table].n_rows)
-            self.monitor.observe(QueryRecord(
-                kind=q.kind, table=q.table, pred_attrs=tuple(q.attrs),
-                accessed_attrs=q.accessed_attrs,
-                selectivity=(stats.count / max(n_rows, 1)) if q.kind == "scan"
-                            else (stats.rows_modified / max(n_rows, 1)),
-                tuples_scanned=int(stats.cost_units),
-                used_index=stats.used_index,
-                rows_modified=stats.rows_modified,
-                ts_ms=self.clock_ms, template=q.template,
-                shard_pages=stats.shard_pages))
+            self.monitor.observe(
+                QueryRecord(
+                    kind=q.kind,
+                    table=q.table,
+                    pred_attrs=tuple(q.attrs),
+                    accessed_attrs=q.accessed_attrs,
+                    selectivity=(
+                        stats.count / max(n_rows, 1)
+                        if q.kind == "scan"
+                        else stats.rows_modified / max(n_rows, 1)
+                    ),
+                    tuples_scanned=int(stats.cost_units),
+                    used_index=stats.used_index,
+                    rows_modified=stats.rows_modified,
+                    ts_ms=self.clock_ms,
+                    template=q.template,
+                    shard_pages=stats.shard_pages,
+                    pred_ranges=tuple(zip(q.attrs, q.los, q.his)),
+                )
+            )
             if q.join_table is not None:
                 # The inner side of an equi-join is an indexable access
                 # path too (HIGH-S benefits from join-attribute indexes).
                 n_inner = int(self.tables[q.join_table].n_rows)
-                self.monitor.observe(QueryRecord(
-                    kind="scan", table=q.join_table,
-                    pred_attrs=(q.join_inner_attr,),
-                    selectivity=min(stats.count / max(n_inner, 1), 1.0),
-                    tuples_scanned=n_inner,
-                    used_index=stats.used_index,
-                    rows_modified=0, ts_ms=self.clock_ms,
-                    template=q.template + ":join"))
+                self.monitor.observe(
+                    QueryRecord(
+                        kind="scan",
+                        table=q.join_table,
+                        pred_attrs=(q.join_inner_attr,),
+                        selectivity=min(stats.count / max(n_inner, 1), 1.0),
+                        tuples_scanned=n_inner,
+                        used_index=stats.used_index,
+                        rows_modified=0,
+                        ts_ms=self.clock_ms,
+                        template=q.template + ":join",
+                    )
+                )
         return stats
 
     def _exec_scan(self, q: Query) -> ExecStats:
@@ -256,20 +387,29 @@ class Database:
         bi = plan.index
 
         t0 = time.perf_counter()
-        r = self.engine.scan(t, plan, tuple(q.attrs), los, his,
-                             self.clock_ms_i32(), q.agg_attr)
+        r = self.engine.scan(
+            t, plan, tuple(q.attrs), los, his, self.clock_ms_i32(), q.agg_attr
+        )
         wall = time.perf_counter() - t0
 
         if plan.path == "table":
             start_page, entries = 0, 0.0
-        elif plan.path in ("hybrid", "hybrid_ps"):
+        elif plan.path in ("hybrid", "hybrid_ps", "hybrid_masked"):
             start_page = int(r.start_page)
             entries = float(int(r.entries_probed))
         else:  # pure index scan: no table pages touched
             start_page = t.n_pages
             entries = float(int(r.entries_probed))
-        cost = scan_cost(layout, q.accessed_attrs, t.page_size,
-                         int(r.pages_scanned), entries, start_page)
+        cost = scan_cost(
+            layout,
+            q.accessed_attrs,
+            t.page_size,
+            int(r.pages_scanned),
+            entries,
+            start_page,
+        )
+        populate = self._crack_adopt(q, plan, start_page)
+        cost += populate
         used = bi is not None
         if used:
             bi.last_used_ms = self.clock_ms
@@ -279,12 +419,70 @@ class Database:
             count, join_cost, join_used = self._exec_join(q, r)
             cost += join_cost
             used = used or join_used
-        return ExecStats(cost_units=cost,
-                         latency_ms=cost * self.time_per_unit_ms,
-                         wall_s=wall, used_index=used,
-                         agg_sum=int(r.agg_sum), count=count,
-                         shard_pages=self._shard_pages_of(t, plan),
-                         tier=self.engine.last_tier or "")
+        return ExecStats(
+            cost_units=cost,
+            latency_ms=cost * self.time_per_unit_ms,
+            wall_s=wall,
+            used_index=used,
+            agg_sum=int(r.agg_sum),
+            count=count,
+            populate_units=populate,
+            shard_pages=self._shard_pages_of(t, plan),
+            tier=self.engine.last_tier or "",
+        )
+
+    def _crack_adopt(self, q: Query, plan, start_page: int) -> float:
+        """Crack-on-scan: adopt up to ``crack_pages_per_scan`` of the
+        pages this scan just table-scanned into a matching building
+        VAP index (``build_page_list`` + coverage bit flips).  The
+        extraction+merge work piggybacks on the triggering query, so
+        the returned units are charged to its cost and reported as
+        ``populate_units`` -- the VAP twist on cracking's adaptive
+        population.  Only bitmap-mode indexes adopt: the legacy prefix
+        invariant forbids out-of-order entries."""
+        if not self.crack_on_scan or plan.path not in (
+            "table",
+            "hybrid",
+            "hybrid_ps",
+            "hybrid_masked",
+        ):
+            return 0.0
+        bi = plan.index
+        if bi is None:
+            # Full table scans still crack: any building bitmap index
+            # whose leading key the predicate constrains may adopt.
+            for cand in self.indexes_on(q.table):
+                if (
+                    cand.scheme == "vap"
+                    and cand.building
+                    and cand.coverage is not None
+                    and cm.index_matches(cand.desc, q.table, q.attrs)
+                ):
+                    bi = cand
+                    break
+        if (
+            bi is None
+            or bi.scheme != "vap"
+            or not bi.building
+            or bi.coverage is None
+        ):
+            return 0.0
+        t = self.tables[q.table]
+        cov = bi.coverage
+        eligible = eligible_global_pages(t)
+        # Pages the scan actually visited: the table-scan region starts
+        # at the stitch point (0 for full scans; for the masked stitch
+        # every uncovered page sits at or past the covered prefix).
+        open_pages = eligible[(eligible >= start_page) & ~cov.built[eligible]]
+        take = open_pages[: self.crack_pages_per_scan]
+        if take.size == 0:
+            return 0.0
+        bi.vap = build_page_list(bi.vap, t, bi.desc.key_attrs, take)
+        cov.set_pages(take)
+        if cov.built[eligible].all():
+            bi.complete = True
+            bi.building = False
+        return float(take.size * t.page_size)
 
     def _shard_pages_of(self, t, plan) -> Tuple[int, ...]:
         """Per-shard pages the planned access path table-scans -- the
@@ -297,18 +495,29 @@ class Database:
         lused = [(int(x.n_rows) + psz - 1) // psz for x in t.shards]
         if plan.path == "table":
             return tuple(lused)
+        if plan.path == "hybrid_masked" and plan.pinned_coverage is not None:
+            cov = plan.pinned_coverage
+            S = len(t.shards)
+            return tuple(
+                int(u - cov.built_host[s + S * np.arange(u)].sum())
+                for s, u in enumerate(lused)
+            )
         state = plan.index_state
-        if plan.path in ("hybrid", "hybrid_ps") \
-                and isinstance(state, ShardedIndex):
-            return tuple(max(u - int(ix.built_pages), 0)
-                         for u, ix in zip(lused, state.shards))
+        if plan.path in ("hybrid", "hybrid_ps") and isinstance(
+            state, ShardedIndex
+        ):
+            return tuple(
+                max(u - int(ix.built_pages), 0)
+                for u, ix in zip(lused, state.shards)
+            )
         return (0,) * len(t.shards)  # pure index scan
 
     # ------------------------------------------------------------------
     # Batched execution (read bursts)
     # ------------------------------------------------------------------
-    def execute_batch(self, queries, observe: bool = True,
-                      use_kernel: bool = False):
+    def execute_batch(
+        self, queries, observe: bool = True, use_kernel: bool = False
+    ):
         """Execute a burst of queries, batching compatible read scans.
 
         Scans that share (table, attrs, agg_attr) and access path are
@@ -335,7 +544,7 @@ class Database:
         Returns the list of per-query ``ExecStats`` in input order.
         """
         out: list = [None] * len(queries)
-        pending: list = []          # [(position, query)]
+        pending: list = []  # [(position, query)]
 
         def flush():
             if pending:
@@ -351,8 +560,9 @@ class Database:
         flush()
         return out
 
-    def _exec_scan_burst(self, pending, out, observe: bool,
-                         use_kernel: bool) -> None:
+    def _exec_scan_burst(
+        self, pending, out, observe: bool, use_kernel: bool
+    ) -> None:
         """Plan, group and execute one burst of batchable scans."""
         # Plan each query exactly like _exec_scan would, then group by
         # (table, attrs, agg_attr, access path, index).  Plans cannot
@@ -372,20 +582,30 @@ class Database:
             # Run each group in one dispatch (one fan-out per shard when
             # the table is sharded); gather per-position raw rows.
             ts = self.clock_ms_i32()
-            raw: Dict[int, tuple] = {}   # pos -> (sum, count, pages,
-                                         #  entries, start_page, wall_share)
-            for (table_name, attrs, agg_attr, _path, _idx), members in \
-                    groups.items():
+            # pos -> (sum, count, pages, entries, start_page,
+            # wall_share, tier)
+            raw: Dict[int, tuple] = {}
+            for group_key, members in groups.items():
+                table_name, attrs, agg_attr, _path, _idx = group_key
                 t = self.tables[table_name]
                 los = jnp.asarray([q.los for _, q, _ in members], jnp.int32)
                 his = jnp.asarray([q.his for _, q, _ in members], jnp.int32)
                 tss = jnp.full((len(members),), ts, jnp.int32)
                 plan = members[0][2]
                 t0 = time.perf_counter()
-                r = self.engine.scan_batch(t, plan.path, plan.index_state,
-                                           plan.key_attrs, attrs, los, his,
-                                           tss, agg_attr,
-                                           use_kernel=use_kernel)
+                r = self.engine.scan_batch(
+                    t,
+                    plan.path,
+                    plan.index_state,
+                    plan.key_attrs,
+                    attrs,
+                    los,
+                    his,
+                    tss,
+                    agg_attr,
+                    use_kernel=use_kernel,
+                    coverage=plan.pinned_coverage,
+                )
                 wall = time.perf_counter() - t0
                 tier = self.engine.last_tier or ""
                 # Drain point between this group's dispatch and the
@@ -398,45 +618,77 @@ class Database:
                 entries = np.asarray(r.entries_probed)
                 starts = np.asarray(r.start_page)
                 for k, (pos, _q, _plan) in enumerate(members):
-                    raw[pos] = (int(agg_sums[k]), int(counts[k]),
-                                int(pages[k]), int(entries[k]),
-                                int(starts[k]), wall / len(members), tier)
+                    raw[pos] = (
+                        int(agg_sums[k]),
+                        int(counts[k]),
+                        int(pages[k]),
+                        int(entries[k]),
+                        int(starts[k]),
+                        wall / len(members),
+                        tier,
+                    )
         finally:
             self.planner.end_snapshot()
 
         # Accounting replay in input order (host-side, same arithmetic
         # and clock/monitor trajectory as the per-query loop).
-        plan_by_pos = {pos: plan for ms in groups.values()
-                       for pos, _q, plan in ms}
+        plan_by_pos = {
+            pos: plan for ms in groups.values() for pos, _q, plan in ms
+        }
         for pos, q in pending:
-            (agg_sum, count, n_pages, n_entries, start_page, wall,
-             tier) = raw[pos]
+            rec = raw[pos]
+            agg_sum, count, n_pages, n_entries, start_page, wall, tier = rec
             t = self.tables[q.table]
             layout = self.layouts[q.table]
             plan_q = plan_by_pos[pos]
             bi_q = plan_q.index
-            cost = scan_cost(layout, q.accessed_attrs, t.page_size,
-                             n_pages, float(n_entries), start_page)
+            cost = scan_cost(
+                layout,
+                q.accessed_attrs,
+                t.page_size,
+                n_pages,
+                float(n_entries),
+                start_page,
+            )
+            # Crack adoption replays per query, in order, exactly like
+            # the sequential loop; results stay burst-consistent
+            # because every dispatch above ran against the pinned
+            # burst-start coverage views.
+            populate = self._crack_adopt(q, plan_q, start_page)
+            cost += populate
             used = bi_q is not None
             if used:
                 bi_q.last_used_ms = self.clock_ms
             stats = ExecStats(
-                cost_units=cost, latency_ms=cost * self.time_per_unit_ms,
-                wall_s=wall, used_index=used,
-                agg_sum=agg_sum, count=count,
-                shard_pages=self._shard_pages_of(t, plan_q), tier=tier)
+                cost_units=cost,
+                latency_ms=cost * self.time_per_unit_ms,
+                wall_s=wall,
+                used_index=used,
+                agg_sum=agg_sum,
+                count=count,
+                populate_units=populate,
+                shard_pages=self._shard_pages_of(t, plan_q),
+                tier=tier,
+            )
             self.clock_ms += stats.latency_ms
             if observe:
                 n_rows = int(t.n_rows)
-                self.monitor.observe(QueryRecord(
-                    kind="scan", table=q.table, pred_attrs=tuple(q.attrs),
-                    accessed_attrs=q.accessed_attrs,
-                    selectivity=stats.count / max(n_rows, 1),
-                    tuples_scanned=int(stats.cost_units),
-                    used_index=stats.used_index,
-                    rows_modified=0, ts_ms=self.clock_ms,
-                    template=q.template,
-                    shard_pages=stats.shard_pages))
+                self.monitor.observe(
+                    QueryRecord(
+                        kind="scan",
+                        table=q.table,
+                        pred_attrs=tuple(q.attrs),
+                        accessed_attrs=q.accessed_attrs,
+                        selectivity=stats.count / max(n_rows, 1),
+                        tuples_scanned=int(stats.cost_units),
+                        used_index=stats.used_index,
+                        rows_modified=0,
+                        ts_ms=self.clock_ms,
+                        template=q.template,
+                        shard_pages=stats.shard_pages,
+                        pred_ranges=tuple(zip(q.attrs, q.los, q.his)),
+                    )
+                )
             out[pos] = stats
 
     def _exec_join(self, q: Query, outer):
@@ -449,25 +701,34 @@ class Database:
         ts = int(self.clock_ms) + 1
         # exact pair count (host-side sorted merge; correctness path)
         if isinstance(outer, ShardScanResult):
-            outer_vals = np.concatenate([
-                np.asarray(t.data[:, :, q.join_attr])[np.asarray(c) > 0]
-                for t, c in zip(outer_t.shards, outer.contribs)])
+            outer_vals = np.concatenate(
+                [
+                    np.asarray(t.data[:, :, q.join_attr])[np.asarray(c) > 0]
+                    for t, c in zip(outer_t.shards, outer.contribs)
+                ]
+            )
         else:
             om = np.asarray(outer.contrib) > 0
             outer_vals = np.asarray(outer_t.data[:, :, q.join_attr])[om]
         if isinstance(inner_t, ShardedTable):
-            ib = np.concatenate([np.asarray(t.begin_ts).reshape(-1)
-                                 for t in inner_t.shards])
-            ie = np.concatenate([np.asarray(t.end_ts).reshape(-1)
-                                 for t in inner_t.shards])
-            ivals = np.concatenate([
-                np.asarray(t.data[:, :, q.join_inner_attr]).reshape(-1)
-                for t in inner_t.shards])
+            ib = np.concatenate(
+                [np.asarray(t.begin_ts).reshape(-1) for t in inner_t.shards]
+            )
+            ie = np.concatenate(
+                [np.asarray(t.end_ts).reshape(-1) for t in inner_t.shards]
+            )
+            ivals = np.concatenate(
+                [
+                    np.asarray(t.data[:, :, q.join_inner_attr]).reshape(-1)
+                    for t in inner_t.shards
+                ]
+            )
         else:
             ib = np.asarray(inner_t.begin_ts).reshape(-1)
             ie = np.asarray(inner_t.end_ts).reshape(-1)
-            ivals = np.asarray(
-                inner_t.data[:, :, q.join_inner_attr]).reshape(-1)
+            ivals = np.asarray(inner_t.data[:, :, q.join_inner_attr]).reshape(
+                -1
+            )
         ivis = (ib <= ts) & (ts < ie)
         inner_vals = np.sort(ivals[ivis])
         lo = np.searchsorted(inner_vals, outer_vals, side="left")
@@ -478,14 +739,16 @@ class Database:
         n_inner = int(inner_t.n_rows)
         inner_idx = None
         for bi in self.indexes_on(q.join_table):
-            if bi.desc.key_attrs and bi.desc.key_attrs[0] == q.join_inner_attr \
-                    and bi.scheme in ("vap", "full"):
+            if (
+                bi.desc.key_attrs
+                and bi.desc.key_attrs[0] == q.join_inner_attr
+                and bi.scheme in ("vap", "full")
+            ):
                 inner_idx = bi
                 break
         if inner_idx is not None:
             frac = inner_idx.built_fraction(inner_t)
-            probes = n_outer * (np.log2(max(n_inner, 2))
-                                * cm.INDEX_PROBE_COST)
+            probes = n_outer * (np.log2(max(n_inner, 2)) * cm.INDEX_PROBE_COST)
             cost = probes + (1.0 - frac) * n_inner
             inner_idx.last_used_ms = self.clock_ms
             return pairs, float(cost), True
@@ -496,13 +759,20 @@ class Database:
         layout = self.layouts[q.table]
         los = jnp.asarray(q.los, jnp.int32)
         his = jnp.asarray(q.his, jnp.int32)
-        mutate = sharded_update_rows if isinstance(t, ShardedTable) \
-            else update_rows
+        mutate = (
+            sharded_update_rows if isinstance(t, ShardedTable) else update_rows
+        )
         t0 = time.perf_counter()
-        new_t, n_upd = mutate(t, tuple(q.attrs), los, his,
-                              tuple(q.set_attrs),
-                              jnp.asarray(q.set_vals, jnp.int32),
-                              self.clock_ms_i32(), max_new=self.update_cap)
+        new_t, n_upd = mutate(
+            t,
+            tuple(q.attrs),
+            los,
+            his,
+            tuple(q.set_attrs),
+            jnp.asarray(q.set_vals, jnp.int32),
+            self.clock_ms_i32(),
+            max_new=self.update_cap,
+        )
         wall = time.perf_counter() - t0
         self.tables[q.table] = new_t
         n_upd = int(n_upd)
@@ -510,39 +780,60 @@ class Database:
         bi = self._choose_index(q)
         if bi is not None and bi.scheme in ("vap",):
             frac = bi.built_fraction(t)
-            lookup = (1.0 - frac) * float(int(t.n_rows)) + \
-                cm.INDEX_PROBE_COST * n_upd
+            lookup = (
+                1.0 - frac
+            ) * float(int(t.n_rows)) + cm.INDEX_PROBE_COST * n_upd
             bi.last_used_ms = self.clock_ms
         else:
             width = scan_width_factor(layout, tuple(q.attrs), 0)
             lookup = float(int(t.n_rows)) * (width / layout.n_attrs)
-        maint = cm.tau_maintenance(n_upd) * max(len(self.indexes_on(q.table)), 0)
+        maint = cm.tau_maintenance(n_upd) * max(
+            len(self.indexes_on(q.table)), 0
+        )
         cost = lookup + maint + float(n_upd)
         self._after_mutation(q.table)
-        return ExecStats(cost_units=cost, latency_ms=cost * self.time_per_unit_ms,
-                         wall_s=wall, used_index=bi is not None,
-                         rows_modified=n_upd)
+        return ExecStats(
+            cost_units=cost,
+            latency_ms=cost * self.time_per_unit_ms,
+            wall_s=wall,
+            used_index=bi is not None,
+            rows_modified=n_upd,
+        )
 
     def _exec_insert(self, q: Query) -> ExecStats:
         t = self.tables[q.table]
         rows = np.asarray(q.rows, np.int32)
-        mutate = sharded_insert_rows if isinstance(t, ShardedTable) \
-            else insert_rows
+        mutate = (
+            sharded_insert_rows if isinstance(t, ShardedTable) else insert_rows
+        )
         t0 = time.perf_counter()
-        new_t = mutate(t, jnp.asarray(rows), self.clock_ms_i32(),
-                       rows.shape[0], max_new=rows.shape[0])
+        new_t = mutate(
+            t,
+            jnp.asarray(rows),
+            self.clock_ms_i32(),
+            rows.shape[0],
+            max_new=rows.shape[0],
+        )
         wall = time.perf_counter() - t0
         self.tables[q.table] = new_t
         n = rows.shape[0]
         maint = cm.tau_maintenance(n) * max(len(self.indexes_on(q.table)), 0)
         cost = float(n) + maint
         self._after_mutation(q.table)
-        return ExecStats(cost_units=cost, latency_ms=cost * self.time_per_unit_ms,
-                         wall_s=wall, used_index=False, rows_modified=n)
+        return ExecStats(
+            cost_units=cost,
+            latency_ms=cost * self.time_per_unit_ms,
+            wall_s=wall,
+            used_index=False,
+            rows_modified=n,
+        )
 
     def _after_mutation(self, table: str) -> None:
         """Inserted rows are unknown to VBP covering intervals; drop
-        coverage claims (entries stay; scans re-check visibility)."""
+        coverage claims (entries stay; scans re-check visibility).
+        Zone maps summarise page contents, so they re-derive too."""
+        for key in [k for k in self._zone_maps if k[0] == table]:
+            del self._zone_maps[key]
         for bi in self.indexes_on(table):
             if bi.scheme == "vbp":
                 bi.vbp = vbp_invalidate_coverage(bi.vbp)
@@ -551,28 +842,75 @@ class Database:
     # ------------------------------------------------------------------
     # Tuner-side physical work, charged by the caller
     # ------------------------------------------------------------------
-    def vap_build_step(self, bi: BuiltIndex, pages: int,
-                       shard: Optional[int] = None) -> float:
+    def vap_build_step(
+        self,
+        bi: BuiltIndex,
+        pages: int,
+        shard: Optional[int] = None,
+        page_list=None,
+    ) -> float:
         """Advance a VAP/FULL index by one resumable build quantum of
         ``pages`` pages (``index.advance_build``); returns work units.
         On sharded storage the budget round-robins across shards in
         global page order (index.sharded_build_pages_vap) -- unless
         ``shard`` targets one shard's local prefix (shard-aware
         tuning), which relaxes the global prefix invariant and flips
-        the index's hybrid scans to the per-shard stitch."""
+        the index's hybrid scans to the per-shard stitch.
+
+        Bitmap-mode indexes (``bi.coverage`` attached) route every
+        quantum through ``_coverage_build_step`` instead: explicit
+        ``page_list`` quanta (hot-range-first scheduling) or the
+        lowest uncovered pages, order-free.  ``page_list`` is only
+        meaningful in bitmap mode (prefix builds cannot express it).
+        """
         t = self.tables[bi.desc.table]
+        if bi.coverage is not None:
+            return self._coverage_build_step(bi, t, pages, shard, page_list)
         if shard is None:
             bi.vap, done = advance_build(bi.vap, t, bi.desc.key_attrs, pages)
             full_pages = int(t.n_rows) // t.page_size
         else:
-            bi.vap, done = advance_build_shard(bi.vap, t, bi.desc.key_attrs,
-                                               shard, pages)
+            bi.vap, done = advance_build_shard(
+                bi.vap, t, bi.desc.key_attrs, shard, pages
+            )
             self.pershard_built.add(bi.desc.name)
             full_pages = sum(shard_full_pages(t))
         if int(bi.vap.built_pages) >= full_pages:
             bi.complete = True
             bi.building = False
         return float(done * t.page_size)
+
+    def _coverage_build_step(
+        self, bi: BuiltIndex, t, pages: int, shard: Optional[int], page_list
+    ) -> float:
+        """Bitmap-mode build quantum.  All entry emission routes
+        through ``build_page_list`` -- NEVER ``advance_build``, whose
+        prefix replay would re-emit entries for pages the bitmap
+        already covers (the bitmap is the dedup authority).  With no
+        ``page_list`` the lowest uncovered eligible pages build first,
+        which reproduces the legacy global page order exactly; a
+        ``shard`` target keeps only that shard's pages (p % S)."""
+        cov = bi.coverage
+        eligible = eligible_global_pages(t)
+        open_mask = ~cov.built[eligible]
+        if page_list is not None:
+            wanted = [int(p) for p in page_list]
+            open_set = set(eligible[open_mask].tolist())
+            take = np.asarray(
+                [p for p in wanted if p in open_set][: int(pages)], np.int64
+            )
+        else:
+            open_pages = eligible[open_mask]
+            if shard is not None and isinstance(t, ShardedTable):
+                open_pages = open_pages[open_pages % t.n_shards == shard]
+            take = open_pages[: int(pages)]
+        if take.size:
+            bi.vap = build_page_list(bi.vap, t, bi.desc.key_attrs, take)
+            cov.set_pages(take)
+        if cov.built[eligible].all():
+            bi.complete = True
+            bi.building = False
+        return float(take.size * t.page_size)
 
     def vbp_populate(self, bi: BuiltIndex, q: Query, max_add: int) -> float:
         """Populate the sub-domain touched by ``q``; returns work units
@@ -587,10 +925,20 @@ class Database:
         max_add = min(int(max_add), t.capacity)
         entries_before = int(vbp_n_entries(bi.vbp))
         lo, hi = self.planner.vbp_bounds(bi, q)
-        populate = sharded_vbp_populate_subdomain \
-            if isinstance(bi.vbp, ShardedVbpState) else vbp_populate_subdomain
-        bi.vbp, n_added = populate(bi.vbp, t, bi.desc.key_attrs, lo, hi,
-                                   self.clock_ms_i32(), max_add=max_add)
+        populate = (
+            sharded_vbp_populate_subdomain
+            if isinstance(bi.vbp, ShardedVbpState)
+            else vbp_populate_subdomain
+        )
+        bi.vbp, n_added = populate(
+            bi.vbp,
+            t,
+            bi.desc.key_attrs,
+            lo,
+            hi,
+            self.clock_ms_i32(),
+            max_add=max_add,
+        )
         n_added = int(n_added)
         if n_added < max_add:  # the whole sub-domain fit -> now covered
             hlo, hhi = self.planner.vbp_host_bounds(bi, q)

@@ -21,6 +21,21 @@ is covered by exactly one of the two sub-scans (modulo the dedup on
 the overlapping page).  Property tests (tests/test_hybrid_scan.py)
 verify completeness and exactly-once against a brute-force oracle,
 including mid-build states, updates, and inserts.
+
+Masked stitch (coverage-bitmap generalization)
+----------------------------------------------
+``*_masked`` variants take a per-page ``covered`` bool mask (from
+``index.PageCoverage``) instead of relying on the prefix watermark:
+the index side keeps matches on covered pages only
+(``idx_keep = idx_match & covered[pg]``), the table side scans exactly
+the uncovered pages (``~covered``), and the two page sets partition
+the table -- exactly-once holds for ANY bitmap as long as set bits
+mean fully-indexed pages (the PageCoverage hard invariant).  For a
+bitmap that is a pure prefix of length L, ``covered[pg]`` equals
+``pg < L`` and ``~covered`` equals ``page_ids >= L``, so every mask,
+sum, and accounting value is bit-identical to the legacy stitch at
+``start_page = L``.  ``prefix_len`` (host-computed) is reported as
+``start_page`` purely for accounting continuity.
 """
 
 from __future__ import annotations
@@ -281,6 +296,113 @@ def batched_hybrid_scan(
     return BatchScanResult(*jax.vmap(one)(los, his, tss))
 
 
+def _masked_scan_core(
+    table: Table,
+    index: AdHocIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    ts,
+    agg_attr: int,
+    covered,
+    prefix_len,
+):
+    """Shared masked-stitch body (see module docstring): ``covered`` is
+    a (n_pages,) bool mask of fully-indexed pages, ``prefix_len`` the
+    host-computed leading-run length reported as ``start_page``."""
+    psz = table.page_size
+    lo_key, hi_key = _predicate_key_bounds(key_attrs, attrs, los, his)
+
+    entry_mask, rids = index_range_scan(index, lo_key, hi_key)
+    pg = rids // psz
+    sl = rids % psz
+    rows_ok = conj_predicate_mask(table, attrs, los, his)[pg, sl]
+    rows_ok &= visible_mask(table, ts)[pg, sl]
+    idx_match = entry_mask & rows_ok
+
+    # Partition by the bitmap: covered pages answer from the index,
+    # uncovered pages are table scanned -- no rho, no dedup window.
+    idx_keep = idx_match & covered[pg]
+    tbl_mask = conj_predicate_mask(table, attrs, los, his)
+    tbl_mask &= visible_mask(table, ts)
+    tbl_mask &= ~covered[:, None]
+
+    vals = table.data[:, :, agg_attr]
+    idx_sum = jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32)
+    tbl_sum = jnp.sum(jnp.where(tbl_mask, vals, 0), dtype=jnp.int32)
+    count = jnp.sum(idx_keep, dtype=jnp.int32)
+    count = count + jnp.sum(tbl_mask, dtype=jnp.int32)
+
+    used_pages = (table.n_rows + psz - 1) // psz
+    page_ids = jnp.arange(table.n_pages, dtype=jnp.int32)
+    pages_scanned = jnp.sum(~covered & (page_ids < used_pages),
+                            dtype=jnp.int32)
+    entries_probed = jnp.sum(entry_mask, dtype=jnp.int32)
+    stats = (
+        idx_sum + tbl_sum,
+        count,
+        pages_scanned,
+        entries_probed,
+        jnp.asarray(prefix_len, jnp.int32),
+    )
+    return stats, idx_keep, tbl_mask, pg, sl
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def hybrid_scan_masked(
+    table: Table,
+    index: AdHocIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    ts,
+    agg_attr: int,
+    covered,
+    prefix_len,
+) -> ScanResult:
+    """Bitmap-stitched hybrid scan: index over covered pages, table
+    scan over exactly the uncovered ones."""
+    stats, idx_keep, tbl_mask, pg, sl = _masked_scan_core(
+        table, index, key_attrs, attrs, los, his, ts, agg_attr,
+        covered, prefix_len
+    )
+    agg_sum, count, pages_scanned, entries_probed, start_page = stats
+    contrib = jnp.zeros((table.n_pages, table.page_size), jnp.int32)
+    contrib = contrib.at[pg, sl].add(idx_keep.astype(jnp.int32))
+    contrib = contrib + tbl_mask.astype(jnp.int32)
+    return ScanResult(
+        agg_sum, count, contrib, pages_scanned, entries_probed, start_page
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def batched_hybrid_scan_masked(
+    table: Table,
+    index: AdHocIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+    covered,
+    prefix_len,
+) -> BatchScanResult:
+    """B bitmap-stitched hybrid scans in one dispatch (the coverage
+    mask is shared -- it is index state, not query state)."""
+
+    def one(lo, hi, ts):
+        stats, *_ = _masked_scan_core(
+            table, index, key_attrs, attrs, lo, hi, ts, agg_attr,
+            covered, prefix_len
+        )
+        return stats
+
+    return BatchScanResult(*jax.vmap(one)(los, his, tss))
+
+
 class HybridPrefixResult(NamedTuple):
     """Per-query index-prefix portion of a batched hybrid scan.
 
@@ -329,6 +451,47 @@ def batched_hybrid_index_prefix(
             c,
             jnp.sum(entry_mask, dtype=jnp.int32),
             start_page.astype(jnp.int32),
+        )
+
+    return HybridPrefixResult(*jax.vmap(one)(los, his, tss))
+
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "attrs", "agg_attr"))
+def batched_masked_index_side(
+    table: Table,
+    index: AdHocIndex,
+    key_attrs: tuple,
+    attrs: tuple,
+    los,
+    his,
+    tss,
+    agg_attr: int,
+    covered,
+    prefix_len,
+) -> HybridPrefixResult:
+    """Index side of B masked hybrid scans: the companion of the
+    masked Pallas table suffix (``ops.scan_table_batched_masked``),
+    exactly as ``batched_hybrid_index_prefix`` companions the
+    ``start_pages`` suffix.  Adding the kernel's uncovered-page
+    aggregates reconstructs ``batched_hybrid_scan_masked`` bit for
+    bit (int32 addition is associative)."""
+    psz = table.page_size
+    vals = table.data[:, :, agg_attr]
+
+    def one(lo, hi, ts):
+        lo_key, hi_key = _predicate_key_bounds(key_attrs, attrs, lo, hi)
+        entry_mask, rids = index_range_scan(index, lo_key, hi_key)
+        pg, sl = rids // psz, rids % psz
+        rows_ok = conj_predicate_mask(table, attrs, lo, hi)[pg, sl]
+        rows_ok &= visible_mask(table, ts)[pg, sl]
+        idx_keep = entry_mask & rows_ok & covered[pg]
+        s = jnp.sum(jnp.where(idx_keep, vals[pg, sl], 0), dtype=jnp.int32)
+        c = jnp.sum(idx_keep, dtype=jnp.int32)
+        return (
+            s,
+            c,
+            jnp.sum(entry_mask, dtype=jnp.int32),
+            jnp.asarray(prefix_len, jnp.int32),
         )
 
     return HybridPrefixResult(*jax.vmap(one)(los, his, tss))

@@ -29,6 +29,36 @@ VAP entries for page p are only inserted after pages < p are fully
 indexed, except for pages being built in the current cycle, hence
 rho_m <= rho_i + pages_per_cycle and every non-prefix page is table
 scanned.
+
+Coverage-bitmap contract (crack-on-scan generalization)
+-------------------------------------------------------
+``PageCoverage`` generalizes the built prefix to an arbitrary
+built-page *bitmap* over global page ids, which retires the global
+page-order constraint: hot-range-first builds, crack-on-scan adoption
+and cold-page decay all become bit flips plus ``build_pages_at``
+merges.  The exactness rules every consumer relies on:
+
+* Hard invariant: a set bit means the page is FULLY indexed (every
+  occupied slot of a fully-populated page has an entry).  The
+  partially-filled append-watermark page is never marked covered --
+  same rule as ``build_pages_vap``'s ``full_pages`` clamp.
+* Entries MAY exist for uncovered pages (decay clears bits without
+  compacting entries; an in-progress build has merged but not yet
+  flipped).  Masked scans drop them on the index side
+  (``idx_keep = idx_match & covered[pg]``) and re-discover the rows on
+  the table side, which scans exactly the uncovered pages -- so any
+  consistent (index, coverage) pair yields exactly-once results.
+* Prefix degeneracy: a bitmap that IS a prefix of length
+  ``built_pages`` (and has no stray entries beyond it,
+  ``legacy_prefix_ok``) must route through the legacy ``start_page``
+  paths and is bit-identical to them in results AND accounting; the
+  masked path reproduces the same bits for that shape (property-tested
+  in tests/test_coverage_bitmap.py), so routing is a pure fast-path
+  choice, never a semantics choice.
+* Coverage is host-managed (numpy) and versioned; device views
+  (bool masks, packed int32 words for the Pallas kernels) are cached
+  per version so a bitmap upload happens once per mutation, not once
+  per query.
 """
 from __future__ import annotations
 
@@ -38,6 +68,7 @@ from typing import NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.table import (INF_TS, ShardedTable, Table, global_rids,
                               identity_lru_lookup)
@@ -600,6 +631,303 @@ def split_build_pages(pages: int, quantum_pages: int | None):
         out.append(step)
         left -= step
     return out
+
+
+# ---------------------------------------------------------------------------
+# Page-coverage bitmap (crack-on-scan / hot-range builds / decay)
+# ---------------------------------------------------------------------------
+
+COVERAGE_WORD_BITS = 32
+
+
+class PageCoverage:
+    """Host-managed built-page bitmap over GLOBAL page ids.
+
+    See the module docstring for the exactness contract.  The bitmap
+    lives outside the jitted index pytrees on purpose: mutations
+    (crack adoption, hot-range quanta, decay) happen host-side between
+    dispatches, and keeping ``AdHocIndex`` unchanged preserves every
+    existing stacking cache, vmap axis spec and kernel operand layout.
+    Device views are derived on demand and cached by ``version``.
+    """
+
+    __slots__ = ("built", "version", "max_entry_page", "page_size", "_cache")
+
+    def __init__(self, n_pages: int, page_size: int = 0):
+        self.built = np.zeros(int(n_pages), bool)
+        self.version = 0
+        self.page_size = int(page_size)  # size accounting (decay cap)
+        # Highest page id entries were ever emitted for: the legacy
+        # prefix routes are only sound when no entries exist beyond
+        # the prefix (a stale entry would pull rho_m past unindexed
+        # pages).  -1 == no entries yet.
+        self.max_entry_page = -1
+        self._cache: dict = {}
+
+    # ---- constructors / shape queries --------------------------------
+    @classmethod
+    def from_prefix(cls, n_pages: int, prefix: int,
+                    page_size: int = 0) -> "PageCoverage":
+        cov = cls(n_pages, page_size)
+        prefix = int(prefix)
+        if prefix > 0:
+            cov.built[:prefix] = True
+            cov.max_entry_page = prefix - 1
+        return cov
+
+    @property
+    def n_pages(self) -> int:
+        return self.built.shape[0]
+
+    def count(self) -> int:
+        return int(self.built.sum())
+
+    def prefix_len(self) -> int:
+        """Length of the leading all-built run."""
+        unbuilt = np.flatnonzero(~self.built)
+        return int(unbuilt[0]) if unbuilt.size else self.n_pages
+
+    def is_prefix(self) -> bool:
+        """True iff the built pages are exactly [0, prefix_len)."""
+        return self.count() == self.prefix_len()
+
+    def legacy_prefix_ok(self, built_pages: int) -> bool:
+        """May scans route through the legacy ``start_page`` paths?
+        Requires the bitmap to be the exact prefix the index's
+        ``built_pages`` watermark claims AND no stray entries beyond
+        it (crack adoption ahead of the prefix, or decay that cleared
+        bits without compacting, both force the masked path)."""
+        built_pages = int(built_pages)
+        return (self.is_prefix()
+                and self.prefix_len() == built_pages
+                and self.max_entry_page < built_pages)
+
+    # ---- mutations (each bumps version; device views re-derive) -------
+    def set_pages(self, pages) -> None:
+        pages = np.asarray(pages, np.int64)
+        if pages.size:
+            self.built[pages] = True
+            self.max_entry_page = max(self.max_entry_page,
+                                      int(pages.max()))
+            self.version += 1
+
+    def clear_pages(self, pages) -> None:
+        pages = np.asarray(pages, np.int64)
+        if pages.size:
+            self.built[pages] = False
+            self.version += 1
+
+    def uncovered_pages(self, full_pages: int) -> np.ndarray:
+        """Unbuilt pages among the fully-populated [0, full_pages)
+        (the only pages eligible for a bit -- the watermark rule)."""
+        return np.flatnonzero(~self.built[: int(full_pages)])
+
+    # ---- cached device views -----------------------------------------
+    def _memo(self, key, build):
+        hit = self._cache.get(key)
+        if hit is not None and hit[0] == self.version:
+            return hit[1]
+        val = build()
+        self._cache[key] = (self.version, val)
+        return val
+
+    def global_mask(self) -> jax.Array:
+        """(n_pages,) bool device mask over global page ids."""
+        return self._memo(("global",),
+                          lambda: jnp.asarray(self.built))
+
+    def local_built(self, n_shards: int, max_pages: int) -> np.ndarray:
+        """(S, max_pages) bool host bitmap over round-robin LOCAL page
+        ids (global page p -> shard p % S, local page p // S), padded
+        with False (padding pages are never covered)."""
+        S = int(n_shards)
+        out = np.zeros((S, int(max_pages)), bool)
+        for s in range(S):
+            loc = self.built[s::S]
+            out[s, : loc.shape[0]] = loc
+        return out
+
+    def stacked_mask(self, n_shards: int, max_pages: int) -> jax.Array:
+        """(S, max_pages) bool device mask (stacked-shard layout)."""
+        return self._memo(
+            ("stacked", n_shards, max_pages),
+            lambda: jnp.asarray(self.local_built(n_shards, max_pages)))
+
+    def packed_words(self, n_shards: int, max_pages: int) -> jax.Array:
+        """(S, W) int32 packed little-endian coverage words over local
+        page ids -- the Pallas kernels' scalar-prefetch operand.  Bit
+        ``p & 31`` of word ``p >> 5`` is page p's built flag (int32:
+        the sign bit carries page 31 of each word; arithmetic shifts
+        still extract it exactly)."""
+
+        def build():
+            loc = self.local_built(n_shards, max_pages)
+            W = -(-loc.shape[1] // COVERAGE_WORD_BITS)
+            pad = W * COVERAGE_WORD_BITS - loc.shape[1]
+            bits = np.pad(loc, ((0, 0), (0, pad))).astype(np.uint32)
+            words = bits.reshape(loc.shape[0], W, COVERAGE_WORD_BITS)
+            weights = (np.uint32(1) << np.arange(COVERAGE_WORD_BITS,
+                                                 dtype=np.uint32))
+            packed = (words * weights[None, None, :]).sum(
+                axis=2, dtype=np.uint32)
+            return jnp.asarray(packed.astype(np.int32))
+
+        return self._memo(("words", n_shards, max_pages), build)
+
+    def view(self, n_shards: int, max_pages: int) -> "CoverageView":
+        """Freeze the bitmap into the immutable bundle plans pin.
+
+        ``built_host`` is a *copy* (``set_pages`` mutates the live
+        numpy array in place between bursts); the device arrays are
+        immutable so the memoized views are shared safely.
+        """
+        return self._memo(
+            ("view", n_shards, max_pages),
+            lambda: CoverageView(
+                prefix_len=self.prefix_len(),
+                count=self.count(),
+                built_host=self.built.copy(),
+                mask=self.stacked_mask(n_shards, max_pages),
+                words=self.packed_words(n_shards, max_pages)))
+
+
+class CoverageView(NamedTuple):
+    """Immutable coverage snapshot pinned into a ``ScanPlan``.
+
+    All burst plans are minted before any dispatch or drain runs, so a
+    view taken at plan time is consistent for the whole burst even
+    though crack adoption mutates the live bitmap during replay.
+    Accounting (pages_scanned / start_page / per-shard pages) is
+    computed host-side from ``built_host``; the device ``mask`` /
+    ``words`` feed the jitted stitches and the Pallas kernels.
+    """
+    prefix_len: int          # leading all-built run (start_page report)
+    count: int               # total built pages
+    built_host: "np.ndarray"  # (n_pages_global,) bool, host copy
+    mask: jax.Array          # (S, max_pages) bool, local page ids
+    words: jax.Array         # (S, W) int32 packed coverage words
+
+
+def eligible_global_pages(table) -> np.ndarray:
+    """Global ids of fully-populated pages -- the only pages eligible
+    for a coverage bit (the watermark page is always table-scanned).
+
+    Sharded storage: each shard's local full prefix maps to global ids
+    ``s + S*l`` under the round-robin layout.  Plain: ``[0, full)``.
+    """
+    psz = table.page_size
+    if isinstance(table, ShardedTable):
+        S = table.n_shards
+        parts = [s + S * np.arange(int(sh.n_rows) // psz, dtype=np.int64)
+                 for s, sh in enumerate(table.shards)]
+        out = np.concatenate(parts) if parts else np.zeros(0, np.int64)
+        out.sort()
+        return out
+    return np.arange(int(table.n_rows) // psz, dtype=np.int64)
+
+
+def coverage_from_state(state, table) -> PageCoverage:
+    """Seed a bitmap equivalent to an index state's built prefix.
+
+    Global prefixes map directly; per-shard prefixes (shard-targeted
+    quanta) map each shard's local run to global ids ``s + S*l``.  The
+    result satisfies ``legacy_prefix_ok`` iff the per-shard prefixes
+    happen to form a global prefix -- otherwise scans route masked,
+    which is exactly the semantics the per-shard stitch implemented.
+    """
+    if isinstance(state, ShardedIndex):
+        S = len(state.shards)
+        # The global grid spans S * max(local pages): gpg = pg*S + s
+        # can reach that bound on ragged layouts (padding bits simply
+        # stay unbuilt, exactly like padding pages stay invisible).
+        n_pages = S * max(t.n_pages for t in table.shards)
+        cov = PageCoverage(n_pages, table.page_size)
+        pages = []
+        for s, ix in enumerate(state.shards):
+            built = int(ix.built_pages)
+            if built > 0:
+                pages.append(s + S * np.arange(built, dtype=np.int64))
+        if pages:
+            cov.set_pages(np.concatenate(pages))
+        return cov
+    return PageCoverage.from_prefix(table.n_pages,
+                                    int(state.built_pages),
+                                    table.page_size)
+
+
+# ---------------------------------------------------------------------------
+# Explicit-page builds (crack adoption + hot-range quanta)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("key_attrs", "max_pages"))
+def build_pages_at(index: AdHocIndex, table: Table, key_attrs: tuple,
+                   page_ids, max_pages: int) -> AdHocIndex:
+    """Index an explicit page list (out of order), leaving the
+    ``built_pages`` prefix watermark untouched.
+
+    ``page_ids`` is (max_pages,) int32 with -1 padding.  Callers must
+    pass only fully-populated, not-yet-covered pages (the coverage
+    bitmap is the dedup authority -- double-building a page would
+    duplicate its entries).  Same extraction + lexsort merge as
+    ``build_pages_vap``, so per-page work costs are identical.
+    """
+    psz = table.page_size
+    pages = jnp.asarray(page_ids, jnp.int32)
+    valid_page = pages >= 0
+    pages_c = jnp.clip(pages, 0, table.n_pages - 1)
+
+    rows = table.data[pages_c]                      # (P, psz, n_attrs)
+    cols = [rows[:, :, a] for a in key_attrs]
+    kh, kl = make_keys(cols)
+    kh, kl = kh.reshape(-1), kl.reshape(-1)
+    slot = jnp.arange(psz, dtype=jnp.int32)[None, :]
+    new_rids = (pages_c[:, None] * psz + slot).reshape(-1)
+    occupied = (table.begin_ts[pages_c] < INF_TS).reshape(-1)
+    valid = occupied & jnp.repeat(valid_page, psz)
+    kh = jnp.where(valid, kh, I32_MAX)
+    kl = jnp.where(valid, kl, I32_MAX)
+
+    mh = jnp.concatenate([index.key_hi, kh])
+    ml = jnp.concatenate([index.key_lo, kl])
+    mr = jnp.concatenate([index.rids, new_rids.astype(jnp.int32)])
+    mh, ml, mr = _lexsort_merge(mh, ml, mr, index.capacity)
+    n_entries = index.n_entries + jnp.sum(valid, dtype=jnp.int32)
+    return AdHocIndex(mh, ml, mr, n_entries, index.built_pages)
+
+
+def _pad_page_list(pages: Sequence[int]) -> Tuple[np.ndarray, int]:
+    """Pad a host page list to the next power of two (bounds the jit
+    cache of ``build_pages_at`` to O(log max_pages) entries)."""
+    n = len(pages)
+    cap = 1
+    while cap < n:
+        cap *= 2
+    out = np.full((cap,), -1, np.int32)
+    out[:n] = np.asarray(pages, np.int32)
+    return out, cap
+
+
+def build_page_list(state, table, key_attrs: tuple, global_pages):
+    """Build entries for an explicit GLOBAL page list on either storage
+    layout; returns the new index state.  Sharded storage routes each
+    page to its round-robin owner (global page p -> shard p % S, local
+    page p // S).  The caller flips the coverage bits."""
+    global_pages = [int(p) for p in global_pages]
+    if not global_pages:
+        return state
+    if isinstance(state, ShardedIndex):
+        S = len(state.shards)
+        shards = list(state.shards)
+        for s in range(S):
+            local = [p // S for p in global_pages if p % S == s]
+            if not local:
+                continue
+            padded, cap = _pad_page_list(local)
+            shards[s] = build_pages_at(shards[s], table.shards[s],
+                                       key_attrs, padded, max_pages=cap)
+        return ShardedIndex(tuple(shards))
+    padded, cap = _pad_page_list(global_pages)
+    return build_pages_at(state, table, key_attrs, padded, max_pages=cap)
 
 
 # ---------------------------------------------------------------------------

@@ -36,6 +36,9 @@ class QueryRecord:
     shard_pages: Tuple[int, ...] = ()  # pages this statement scanned per
                                        # shard (shard-aware tuning only;
                                        # () on unsharded/legacy runs)
+    pred_ranges: Tuple = ()   # (attr, lo, hi) per range predicate --
+                              # the hot-range build scheduler's value
+                              # signal (zone maps map these to pages)
 
 
 @dataclass

@@ -82,7 +82,17 @@ def built_fraction_of(scheme: str, vap, vbp, table) -> float:
 
 @dataclass
 class BuiltIndex:
-    """Catalog entry for one built (or building) index."""
+    """Catalog entry for one built (or building) index.
+
+    ``coverage`` (a ``core.index.PageCoverage``) generalizes the VAP
+    built prefix to a built-page bitmap; it is None for every legacy
+    index (flag off) and only the crack-on-scan / decay machinery
+    attaches one.  When present it is the coverage authority: built
+    fraction and size accounting read the bitmap, the planner routes
+    non-prefix shapes to the masked path, and the build path routes
+    through explicit page lists (never ``advance_build``, which would
+    re-index adopted pages and duplicate their entries).
+    """
 
     desc: IndexDescriptor
     scheme: str                     # 'vap' | 'vbp' | 'full'
@@ -93,11 +103,21 @@ class BuiltIndex:
     building: bool = True           # under construction (VAP/FULL)
     created_ms: float = 0.0
     last_used_ms: float = 0.0
+    coverage: Optional[object] = None   # PageCoverage (bitmap mode)
 
     def built_fraction(self, table) -> float:
+        if self.coverage is not None and self.scheme in ("vap", "full"):
+            full_pages = max(int(table.n_rows) // table.page_size, 1)
+            return min(self.coverage.count() / full_pages, 1.0)
         return built_fraction_of(self.scheme, self.vap, self.vbp, table)
 
     def size_bytes(self) -> float:
+        if self.coverage is not None and self.scheme in ("vap", "full"):
+            # Coverage-aware: decay clears bits without compacting the
+            # entry array, so the bitmap (not n_entries) is what the
+            # memory cap governs.
+            return 12.0 * float(self.coverage.count()
+                                * self.coverage.page_size)
         if self.scheme in ("vap", "full"):
             return 12.0 * float(int(self.vap.n_entries))
         return 12.0 * float(int(vbp_n_entries(self.vbp)))
@@ -136,18 +156,24 @@ def _engine_state(path: str, vap, vbp):
 class ScanPlan:
     """One planned scan: the access path plus the index serving it.
 
-    ``path`` is 'table' | 'hybrid' | 'pure_vbp' | 'pure_vap'.  The
-    engine receives the raw index state via ``index_state`` so it
-    never touches catalog records.  ``pinned_state`` is the index
-    state the plan was minted against -- the planner pins it at plan
-    time so an in-flight burst keeps a stable view while build quanta
-    advance the live catalog underneath (double buffering); plans
-    constructed by hand without a pin fall back to the live record.
+    ``path`` is 'table' | 'hybrid' | 'hybrid_ps' | 'hybrid_masked' |
+    'pure_vbp' | 'pure_vap'.  The engine receives the raw index state
+    via ``index_state`` so it never touches catalog records.
+    ``pinned_state`` is the index state the plan was minted against --
+    the planner pins it at plan time so an in-flight burst keeps a
+    stable view while build quanta advance the live catalog
+    underneath (double buffering); plans constructed by hand without a
+    pin fall back to the live record.  ``pinned_coverage`` is the
+    frozen ``CoverageView`` for the masked path, pinned under the same
+    rule (all burst plans are minted before any dispatch or drain, so
+    the live bitmap reads at plan time are burst-consistent even
+    though crack adoption mutates it during replay).
     """
 
     path: str
     index: Optional[BuiltIndex] = None
     pinned_state: Optional[object] = None
+    pinned_coverage: Optional[object] = None
 
     @property
     def key_attrs(self) -> Tuple[int, ...]:
@@ -248,10 +274,32 @@ class QueryPlanner:
                             pinned_state=_engine_state("pure_vbp", vap, vbp))
         if bi.scheme == "full" and complete:
             return ScanPlan("pure_vap", bi, pinned_state=vap)
+        cov = bi.coverage
+        if cov is not None and not self._coverage_is_legacy(cov, vap):
+            return ScanPlan("hybrid_masked", bi, pinned_state=vap,
+                            pinned_coverage=self._pin_coverage(bi, cov))
         path = "hybrid"                  # VAP (or FULL still building)
         if self._needs_pershard_stitch(bi, vap):
             path = "hybrid_ps"
         return ScanPlan(path, bi, pinned_state=vap)
+
+    @staticmethod
+    def _coverage_is_legacy(cov, vap) -> bool:
+        """A bitmap that IS the prefix the index watermark claims (and
+        has no stray entries beyond it) takes the legacy start_page
+        paths bit for bit -- routing is a fast-path choice only."""
+        if isinstance(vap, ShardedIndex):
+            built = sum(int(ix.built_pages) for ix in vap.shards)
+        else:
+            built = int(vap.built_pages)
+        return cov.legacy_prefix_ok(built)
+
+    def _pin_coverage(self, bi: BuiltIndex, cov):
+        """Freeze the live bitmap into the view the burst pins."""
+        t = self.db.tables[bi.desc.table]
+        if isinstance(t, ShardedTable):
+            return cov.view(t.n_shards, max(x.n_pages for x in t.shards))
+        return cov.view(1, t.n_pages)
 
     def _needs_pershard_stitch(self, bi: BuiltIndex, vap) -> bool:
         """The global hybrid stitch is sound only while the shard-local

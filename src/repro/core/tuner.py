@@ -21,6 +21,17 @@ into per-shard quanta sized by forecast utility (predicted per-shard
 scan heat x remaining unbuilt pages), so cold or complete shards stop
 absorbing budget.  See ``cost_model.shard_build_utility`` and
 ``forecaster.ShardHeatForecaster``.
+
+Coverage-bitmap scheduling (``Database.crack_on_scan`` /
+``Database.index_decay``): bitmap-mode VAP indexes drop the global
+page-order constraint entirely.  Each building index's cycle slice
+becomes an explicit hot-range-first page list -- the monitor window's
+predicate ranges on the leading key attribute, mapped to pages through
+the zone map, hottest pages first -- and a decay pass clears the
+coldest covered pages' bits when the built footprint exceeds the
+storage budget (entries stay; the bitmap is the authority and masked
+scans re-scan cleared pages).  Scans themselves adopt pages as a third
+build channel (``executor._crack_adopt``).
 """
 
 from __future__ import annotations
@@ -46,6 +57,7 @@ from repro.core.executor import Database, ExecStats, Query
 from repro.core.index import (
     ShardedIndex,
     build_pages_remaining,
+    eligible_global_pages,
     shard_remaining_pages,
 )
 from repro.core.table import ShardedTable
@@ -259,6 +271,12 @@ class PredictiveTuner:
             if name not in db.indexes:
                 db.create_index(self.descs[name], scheme=self.scheme)
 
+        # Memory-cap decay (bitmap mode): runs host-side on the cycle
+        # boundary, before build quanta are planned, so this cycle's
+        # page lists already see the post-decay bitmap.
+        if getattr(db, "index_decay", False):
+            self._decay_cold_pages()
+
         # Lightweight build work, bounded per cycle (prevents spikes).
         # The cycle's page budget is rebalanced ACROSS building
         # indexes by forecast utility (cm.allocate_cycle_budget:
@@ -301,6 +319,18 @@ class PredictiveTuner:
                 and isinstance(b.vap, ShardedIndex)
             )
             u = float(util_by_name.get(b.desc.name, 0.0))
+            if b.coverage is not None:
+                pl = self._hot_range_pages(b, t, step)
+                if pl is not None:
+                    if pl:
+                        quanta.append(
+                            BuildQuantum(b.desc.name, len(pl), utility=u,
+                                         page_list=tuple(pl))
+                        )
+                    continue
+                # No range signal in the window: an empty-page-list
+                # quantum builds the lowest uncovered pages, which is
+                # the legacy global page order.
             if per_shard:
                 alloc = self._shard_step_allocation(b, t, step)
                 quanta.extend(
@@ -351,9 +381,84 @@ class PredictiveTuner:
         """Pages this building index still has to cover (caps its
         share of the cycle budget: complete indexes get nothing)."""
         t = self.db.tables[b.desc.table]
+        if b.coverage is not None:
+            return int(self.db.coverage_pages_left(b))
         if isinstance(b.vap, ShardedIndex):
             return int(sum(shard_remaining_pages(b.vap, t)))
         return int(build_pages_remaining(b.vap, t))
+
+    # ---- coverage-bitmap scheduling (hot ranges, decay) ---------------
+    def _range_heat(self, b, t, pages: np.ndarray):
+        """How many of the monitor window's range predicates on the
+        index's leading key attribute each global page's zone-map
+        range intersects; None when the window carries no range signal
+        for that attribute."""
+        lead = b.desc.key_attrs[0]
+        ranges = [
+            (int(lo), int(hi))
+            for r in self.db.monitor.scan_records(b.desc.table)
+            for attr, lo, hi in r.pred_ranges
+            if attr == lead
+        ]
+        if not ranges:
+            return None
+        mins, maxs = self.db.zone_map(b.desc.table, lead)
+        pmin, pmax = mins[pages], maxs[pages]
+        heat = np.zeros(pages.size, np.int64)
+        for lo, hi in ranges:
+            heat += (pmin <= hi) & (pmax >= lo)
+        return heat
+
+    def _hot_range_pages(self, b, t, step: int):
+        """Hot-range-first build order for a bitmap-mode index: the
+        uncovered pages most window predicates touch, hottest first
+        (descending heat, page id breaks ties -- fully deterministic).
+        Returns a global page-id list capped at ``step``, or None when
+        the window has no range signal (the caller falls back to the
+        lowest-uncovered order, i.e. the legacy global page order)."""
+        cov = b.coverage
+        eligible = eligible_global_pages(t)
+        open_pages = eligible[~cov.built[eligible]]
+        if open_pages.size == 0:
+            return []
+        heat = self._range_heat(b, t, open_pages)
+        if heat is None or not heat.any():
+            return None
+        order = np.lexsort((open_pages, -heat))
+        return [int(p) for p in open_pages[order][: int(step)]]
+
+    def _decay_cold_pages(self) -> None:
+        """Memory-cap decay: while the built footprint exceeds the
+        storage budget, clear the COLDEST covered pages' bits (fewest
+        window predicate intersections; page id breaks ties) until the
+        cap fits.  Entries are not compacted -- the bitmap is the
+        dedup and coverage authority, so masked scans simply re-scan
+        cleared pages -- which makes decay a host-side bit flip,
+        deterministic under replay.  A decayed index reopens
+        (building=True, complete=False) so later cycles or crack
+        adoption can re-cover pages that get hot again."""
+        db, cfg = self.db, self.cfg
+        over = db.total_index_bytes() - cfg.storage_budget_bytes
+        for b in db.indexes.values():
+            if over <= 0:
+                break
+            cov = b.coverage
+            if cov is None:
+                continue
+            covered = np.flatnonzero(cov.built)
+            if covered.size == 0:
+                continue
+            t = db.tables[b.desc.table]
+            page_bytes = 12.0 * t.page_size
+            heat = self._range_heat(b, t, covered)
+            if heat is None:
+                heat = np.zeros(covered.size, np.int64)
+            order = np.lexsort((covered, heat))
+            n_drop = min(int(np.ceil(over / page_bytes)), covered.size)
+            drop = covered[order[:n_drop]]
+            cov.clear_pages(drop)
+            b.building, b.complete = True, False
+            over -= n_drop * page_bytes
 
     def _shard_step_allocation(self, b, t: ShardedTable, step: int):
         """Split one index's cycle slice across shards by forecast

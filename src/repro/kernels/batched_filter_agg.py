@@ -385,3 +385,188 @@ def sharded_batched_filter_agg(
         jnp.sum(sums, axis=(0, 1), dtype=jnp.int32),
         jnp.sum(cnts, axis=(0, 1), dtype=jnp.int32),
     )
+
+
+# ---------------------------------------------------------------------------
+# Masked (coverage-bitmap) variant: uncovered-only page selection
+# ---------------------------------------------------------------------------
+#
+# The crack-on-scan table suffix.  Instead of a per-(shard, query)
+# ``start_pages`` stitch point, the scalar-prefetch channel carries one
+# per-shard row of PACKED COVERAGE WORDS (int32, little-endian bit
+# order: bit ``p & 31`` of word ``p >> 5`` is local page p's built
+# flag; ``core.index.PageCoverage.packed_words``).  Coverage is index
+# state, not query state, so the operand is (S, W) -- shared by every
+# query in the batch -- and the wrapper derives each shard's
+# [first, last] *live* block window (blocks holding at least one
+# uncovered real page) host^Wdevice-side before launch:
+#
+# * whole blocks outside the window skip pre-DMA exactly like the
+#   prefix blocks of the start_pages kernel (the index map clamps into
+#   the window, so skipped steps revisit a resident block);
+# * inside the window, a static per-page unrolled bit test masks
+#   covered pages off (block_pages is a compile-time constant, so the
+#   unroll is exact and the word loads are SMEM scalar reads);
+# * an all-covered shard encodes the empty window [1, 0]: no block
+#   satisfies first <= blk <= last, and the index-map clamp still
+#   lands in-bounds at block 0.
+#
+# Bit-exactness: a bitmap that is a prefix of length L yields the same
+# page partition as start_pages = L, and the same visibility masking
+# applies, so summed partials match the start_pages kernel bit for bit
+# (int32 adds associate; tests/test_kernels.py pins this).
+
+
+def _masked_sharded_kernel(
+    qparams_ref,
+    words_ref,
+    blocks_ref,
+    pred0_ref,
+    pred1_ref,
+    agg_ref,
+    begin_ref,
+    end_ref,
+    sum_ref,
+    cnt_ref,
+    *,
+    block_pages: int,
+):
+    """One grid step: reduce the UNCOVERED pages of one shard's
+    (block_pages, page_size) tile for one query.
+
+    Scalar-prefetch operands (SMEM):
+      qparams_ref (5, n_queries) -- [lo0, hi0, lo1, hi1, ts] rows
+      words_ref   (S, W)         -- packed little-endian coverage words
+      blocks_ref  (S, 2)         -- per-shard [first_live_block,
+                                    last_live_block] ([1, 0] = none)
+    """
+    s = pl.program_id(0)
+    blk = pl.program_id(1)
+    q = pl.program_id(2)
+    lo0, hi0 = qparams_ref[0, q], qparams_ref[1, q]
+    lo1, hi1 = qparams_ref[2, q], qparams_ref[3, q]
+    ts = qparams_ref[4, q]
+
+    first_page = blk * block_pages
+    live = (blk >= blocks_ref[s, 0]) & (blk <= blocks_ref[s, 1])
+
+    @pl.when(jnp.logical_not(live))
+    def _skip():
+        sum_ref[0, 0, 0] = jnp.int32(0)
+        cnt_ref[0, 0, 0] = jnp.int32(0)
+
+    @pl.when(live)
+    def _run():
+        p0 = pred0_ref[...]
+        p1 = pred1_ref[...]
+        ag = agg_ref[...]
+        bts = begin_ref[...]
+        ets = end_ref[...]
+        mask = (p0 >= lo0) & (p0 <= hi0) & (p1 >= lo1) & (p1 <= hi1)
+        mask &= (bts <= ts) & (ts < ets)
+        # Static unroll over the block's pages: page first_page+j's
+        # built bit via one SMEM word load + arithmetic shift (the
+        # sign bit carries page 31 of each word; ``>> 31 & 1`` still
+        # extracts it exactly).
+        bits = []
+        for j in range(block_pages):
+            p = first_page + j
+            w = words_ref[s, p // 32]
+            bits.append((w >> (p % 32)) & 1)
+        covered = jnp.stack(bits).reshape(1, block_pages, 1)
+        mask &= covered == 0
+        sum_ref[0, 0, 0] = jnp.sum(jnp.where(mask, ag, 0), dtype=jnp.int32)
+        cnt_ref[0, 0, 0] = jnp.sum(mask, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_pages", "interpret"))
+def sharded_batched_filter_agg_masked(
+    pred0,
+    pred1,
+    agg,
+    begin_ts,
+    end_ts,
+    los0,
+    his0,
+    los1,
+    his1,
+    tss,
+    words,
+    local_pages,
+    block_pages: int = 8,
+    interpret: bool = False,
+):
+    """Fused multi-shard multi-query scan of the UNCOVERED pages.
+
+    Same plane / query-operand layout as ``sharded_batched_filter_agg``
+    with the per-(shard, query) ``start_pages`` table replaced by the
+    per-shard packed coverage words (S, W) int32.  Returns
+    (sums, counts), each (n_queries,) int32 over uncovered pages only
+    -- the caller adds the index half (``batched_masked_index_side``).
+    A single-shard launch (S = 1) serves plain tables.
+    """
+    n_shards, n_pages, page_size = pred0.shape
+    n_queries = los0.shape[0]
+
+    planes, n_blocks = _pad_pages(
+        (pred0, pred1, agg, begin_ts, end_ts), n_pages, block_pages, 1
+    )
+    pred0, pred1, agg, begin_ts, end_ts = planes
+
+    qparams = jnp.stack(
+        [jnp.asarray(v, jnp.int32) for v in (los0, his0, los1, his1, tss)]
+    )
+    words = jnp.asarray(words, jnp.int32)
+    local_pages = jnp.asarray(local_pages, jnp.int32)
+
+    # Per-shard live-block window from the unpacked bits: blocks
+    # holding at least one uncovered REAL page.  All-covered shards
+    # get the empty window [1, 0] (no block passes the kernel's range
+    # test; the index-map clamp still lands in-bounds at block 0).
+    W = words.shape[1]
+    shifts = jnp.arange(32, dtype=jnp.int32)[None, None, :]
+    bits = ((words[:, :, None] >> shifts) & 1).reshape(n_shards, W * 32)
+    page_idx = jnp.arange(W * 32, dtype=jnp.int32)
+    live_page = (bits == 0) & (page_idx[None, :] < local_pages[:, None])
+    any_live = jnp.any(live_page, axis=1)
+    first_pg = jnp.argmax(live_page, axis=1).astype(jnp.int32)
+    last_pg = (W * 32 - 1 - jnp.argmax(live_page[:, ::-1], axis=1)).astype(
+        jnp.int32
+    )
+    first_blk = jnp.where(any_live, first_pg // block_pages, 1)
+    last_blk = jnp.where(
+        any_live, jnp.minimum(last_pg // block_pages, n_blocks - 1), 0
+    )
+    blocks = jnp.stack(
+        [first_blk.astype(jnp.int32), last_blk.astype(jnp.int32)], axis=1
+    )
+
+    def _imap(s, i, q, qp, wd, bi):
+        del qp, wd
+        return (s, jnp.clip(i, bi[s, 0], bi[s, 1]), 0)
+
+    block = pl.BlockSpec((1, block_pages, page_size), _imap)
+    out_spec = pl.BlockSpec(
+        (1, 1, 1), lambda s, i, q, qp, wd, bi: (s, i, q)
+    )
+    kernel = functools.partial(
+        _masked_sharded_kernel, block_pages=block_pages
+    )
+    sums, cnts = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(n_shards, n_blocks, n_queries),
+            in_specs=[block] * 5,
+            out_specs=[out_spec, out_spec],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((n_shards, n_blocks, n_queries), jnp.int32),
+            jax.ShapeDtypeStruct((n_shards, n_blocks, n_queries), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qparams, words, blocks, pred0, pred1, agg, begin_ts, end_ts)
+    return (
+        jnp.sum(sums, axis=(0, 1), dtype=jnp.int32),
+        jnp.sum(cnts, axis=(0, 1), dtype=jnp.int32),
+    )

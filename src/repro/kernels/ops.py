@@ -210,3 +210,78 @@ def scan_shards_batched(
         block_pages=_block_pages(t.data.shape[1], t.data.shape[2], interpret),
         interpret=interpret,
     )
+
+
+def scan_table_batched_masked(
+    table, attrs, los, his, tss, agg_attr, words, interpret=None
+):
+    """Masked-stitch table suffix over a plain Table: scans exactly
+    the UNCOVERED pages of the coverage bitmap, whose packed words
+    (1, W) int32 ride the scalar-prefetch channel
+    (``PageCoverage.packed_words``).  Returns (sums, counts), each
+    (n_queries,) int32 -- the caller adds the covered-page index half
+    (``hybrid_scan.batched_masked_index_side``).  Runs as a one-shard
+    launch of the sharded masked kernel."""
+    if len(attrs) not in (1, 2):
+        raise ValueError(
+            f"kernel scans support 1 or 2 predicate attributes, "
+            f"got {attrs!r}"
+        )
+    interpret = INTERPRET if interpret is None else interpret
+    pred0, pred1, los0, his0, los1, his1 = _batch_bounds(
+        table.data, attrs, los, his
+    )
+    agg = table.data[..., agg_attr]
+    return _bfa.sharded_batched_filter_agg_masked(
+        pred0[None],
+        pred1[None],
+        agg[None],
+        table.begin_ts[None],
+        table.end_ts[None],
+        los0,
+        his0,
+        los1,
+        his1,
+        jnp.asarray(tss, jnp.int32),
+        jnp.asarray(words, jnp.int32),
+        jnp.asarray([table.n_pages], jnp.int32),
+        block_pages=_block_pages(table.n_pages, table.page_size, interpret),
+        interpret=interpret,
+    )
+
+
+def scan_shards_batched_masked(
+    stacked, attrs, los, his, tss, agg_attr, words, interpret=None
+):
+    """Fused multi-shard masked-stitch table suffix: ONE launch scans
+    every shard's uncovered pages, selected pre-DMA from the per-shard
+    packed coverage words (S, W) int32.  Same plane layout and query
+    operands as ``scan_shards_batched`` with the ``start_pages`` table
+    replaced by the coverage words."""
+    if len(attrs) not in (1, 2):
+        raise ValueError(
+            f"kernel scans support 1 or 2 predicate attributes, "
+            f"got {attrs!r}"
+        )
+    interpret = INTERPRET if interpret is None else interpret
+    t = stacked.table
+    pred0, pred1, los0, his0, los1, his1 = _batch_bounds(
+        t.data, attrs, los, his
+    )
+    agg = t.data[..., agg_attr]
+    return _bfa.sharded_batched_filter_agg_masked(
+        pred0,
+        pred1,
+        agg,
+        t.begin_ts,
+        t.end_ts,
+        los0,
+        his0,
+        los1,
+        his1,
+        jnp.asarray(tss, jnp.int32),
+        jnp.asarray(words, jnp.int32),
+        jnp.asarray(stacked.local_pages, jnp.int32),
+        block_pages=_block_pages(t.data.shape[1], t.data.shape[2], interpret),
+        interpret=interpret,
+    )

@@ -1,0 +1,198 @@
+"""Coverage-bitmap exactness tests (core.index.PageCoverage).
+
+The contract under test (core/index.py module docstring):
+
+* Flag off (no ``crack_on_scan`` / ``index_decay``), no bitmap is ever
+  attached and every index keeps the legacy prefix paths.
+* A prefix-shaped bitmap routed through the masked stitch is
+  bit-identical to the legacy ``start_page`` path -- results AND
+  cost/clock/monitor accounting -- for any shard count (property test
+  over prefix lengths and predicate ranges, 1 and 4 shards).
+* Arbitrary (scattered) bitmaps -- page-list quanta, crack-on-scan
+  adoption, decay -- keep scan results identical to the no-index
+  oracle: exactly-once for any consistent (index, coverage) pair.
+"""
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.bench_db import make_tuner_db
+from repro.core import Database, IndexDescriptor
+from repro.core.executor import Query
+from repro.core.index import eligible_global_pages
+from repro.core.tuner import PredictiveTuner, TunerConfig
+
+SRC = make_tuner_db(n_rows=3_000, page_size=128)
+FULL_PAGES = 3_000 // 128  # fully populated pages of 'narrow' (23)
+
+
+def _stats_key(s):
+    return (s.agg_sum, s.count, s.cost_units, s.latency_ms, s.used_index,
+            s.rows_modified, s.populate_units)
+
+
+def _scan(lo, width, template="cov"):
+    return Query(kind="scan", table="narrow", attrs=(1,),
+                 los=(lo,), his=(lo + width,), agg_attr=2,
+                 template=template)
+
+
+def _legacy_db(num_shards, build_pages):
+    db = Database(dict(SRC.tables), num_shards=num_shards)
+    bi = db.create_index(IndexDescriptor("narrow", (1,)), "vap")
+    assert bi.coverage is None  # flags off: bitmap never attaches
+    if build_pages:
+        db.vap_build_step(bi, pages=build_pages)
+    return db
+
+
+def _bitmap_db(num_shards, build_pages):
+    """Same configuration, but the index carries a coverage bitmap and
+    builds route through ``build_page_list`` (lowest-uncovered order ==
+    the legacy global page order, so the bitmap stays a prefix)."""
+    db = Database(dict(SRC.tables), num_shards=num_shards)
+    db.crack_on_scan = True
+    db.crack_pages_per_scan = 0  # bitmap attaches; adoption no-ops
+    bi = db.create_index(IndexDescriptor("narrow", (1,)), "vap")
+    assert bi.coverage is not None
+    if build_pages:
+        db.vap_build_step(bi, pages=build_pages)
+        assert bi.coverage.is_prefix()
+        assert bi.coverage.count() == min(build_pages, FULL_PAGES)
+    return db
+
+
+def test_flag_off_keeps_legacy_paths():
+    for S in (1, 4):
+        db = _legacy_db(S, build_pages=5)
+        plan = db.planner.plan_scan(_scan(100_000, 30_000))
+        assert plan.path in ("hybrid", "hybrid_ps")
+        assert plan.pinned_coverage is None
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, FULL_PAGES), st.integers(1, 800_000),
+       st.integers(2_000, 120_000))
+def test_prefix_bitmap_bit_identical_to_legacy(build_pages, lo, width):
+    """Results AND cost/clock/monitor accounting match the legacy
+    start_page path for a prefix-shaped bitmap, 1 and 4 shards, through
+    both the per-query and the batched dispatch."""
+    queries = [_scan(lo, width), _scan(max(lo - width, 1), width),
+               _scan(lo + width // 2 + 1, width)]
+    for S in (1, 4):
+        ref = _legacy_db(S, build_pages)
+        got = _bitmap_db(S, build_pages)
+        plan = got.planner.plan_scan(queries[0])
+        if plan.index is not None:  # wide predicates plan table scans
+            assert plan.path == "hybrid_masked"
+        r = [ref.execute(q) for q in queries]
+        g = [got.execute(q) for q in queries]
+        for i, (a, b) in enumerate(zip(r, g)):
+            assert _stats_key(a) == _stats_key(b), (S, i, a, b)
+        assert got.clock_ms == ref.clock_ms
+        assert list(got.monitor.records) == list(ref.monitor.records)
+
+        got_b = _bitmap_db(S, build_pages)
+        gb = got_b.execute_batch(queries)
+        for i, (a, b) in enumerate(zip(r, gb)):
+            assert _stats_key(a) == _stats_key(b), ("batch", S, i, a, b)
+        assert got_b.clock_ms == ref.clock_ms
+        assert list(got_b.monitor.records) == list(ref.monitor.records)
+
+
+def test_page_list_quantum_scattered_coverage():
+    """Out-of-order page-list quanta yield a non-prefix bitmap whose
+    masked scans still match the no-index oracle exactly."""
+    for S in (1, 4):
+        oracle = Database(dict(SRC.tables), num_shards=S)
+        db = Database(dict(SRC.tables), num_shards=S)
+        db.index_decay = True  # attaches the bitmap
+        bi = db.create_index(IndexDescriptor("narrow", (1,)), "vap")
+        t = db.tables["narrow"]
+        picks = [int(p) for p in eligible_global_pages(t)[::3]]
+        db.vap_build_step(bi, pages=len(picks), page_list=picks)
+        assert not bi.coverage.is_prefix()
+        assert bi.coverage.count() == len(picks)
+        plan = db.planner.plan_scan(_scan(300_000, 50_000))
+        assert plan.path == "hybrid_masked"
+        queries = [_scan(300_000, 50_000), _scan(100_000, 30_000),
+                   _scan(600_000, 30_000)]
+        a = [oracle.execute(q) for q in queries]
+        b = db.execute_batch(queries)
+        for x, y in zip(a, b):
+            assert (x.agg_sum, x.count) == (y.agg_sum, y.count)
+        # Replaying the same page list is a no-op, never a duplicate.
+        before = bi.coverage.count()
+        work = db.vap_build_step(bi, pages=len(picks), page_list=picks)
+        assert work == 0.0 and bi.coverage.count() == before
+
+
+def test_crack_on_scan_adopts_and_stays_exact():
+    """Crack adoption grows coverage as scans run, charges its work as
+    populate_units, and never changes scan results."""
+    for S in (1, 4):
+        oracle = Database(dict(SRC.tables), num_shards=S)
+        db = Database(dict(SRC.tables), num_shards=S)
+        db.crack_on_scan = True
+        db.crack_pages_per_scan = 4
+        bi = db.create_index(IndexDescriptor("narrow", (1,)), "vap")
+        adopted = 0.0
+        for lo in (700_000, 50_000, 400_000, 700_000, 50_000, 400_000):
+            q = _scan(lo, 40_000)
+            a, b = oracle.execute(q), db.execute(q)
+            assert (a.agg_sum, a.count) == (b.agg_sum, b.count)
+            adopted += b.populate_units
+        assert bi.coverage.count() > 0
+        assert adopted > 0.0
+        # Adoption converges: once everything is covered the index
+        # closes and later scans stop paying populate work.
+        while bi.building:
+            db.execute(_scan(1, 999_999))
+        assert bi.complete
+        assert bi.coverage.count() == len(
+            eligible_global_pages(db.tables["narrow"]))
+
+
+def test_decay_clears_cold_pages_and_reopens():
+    """The decay pass drops the coldest covered pages under the
+    storage cap, reopens the index, and masked scans stay exact."""
+    db = Database(dict(SRC.tables), num_shards=4)
+    db.index_decay = True
+    bi = db.create_index(IndexDescriptor("narrow", (1,)), "vap")
+    db.vap_build_step(bi, pages=FULL_PAGES)
+    assert bi.complete and not bi.building
+    before = bi.coverage.count()
+    assert before == FULL_PAGES
+    # Budget for ~10 built pages: 12 bytes/entry * page_size rows.
+    cfg = TunerConfig(storage_budget_bytes=12.0 * 10 * 128)
+    tuner = PredictiveTuner(db, cfg)
+    # A hot range keeps its pages; everything else is eligible to decay.
+    db.execute(_scan(450_000, 30_000))
+    tuner._decay_cold_pages()
+    assert bi.coverage.count() < before
+    assert bi.building and not bi.complete
+    assert db.total_index_bytes() <= cfg.storage_budget_bytes + 1e-9
+    oracle = Database(dict(SRC.tables), num_shards=4)
+    for lo in (100_000, 450_000, 800_000):
+        q = _scan(lo, 30_000)
+        a, b = oracle.execute(q), db.execute(q)
+        assert (a.agg_sum, a.count) == (b.agg_sum, b.count)
+
+
+def test_shard_pages_accounting_masked():
+    """Shard-aware heat counters see only the uncovered pages under
+    the masked path (advisory accounting, per shard)."""
+    db = Database(dict(SRC.tables), num_shards=4)
+    db.shard_aware_tuning = True
+    db.index_decay = True
+    bi = db.create_index(IndexDescriptor("narrow", (1,)), "vap")
+    t = db.tables["narrow"]
+    picks = [int(p) for p in eligible_global_pages(t)[::2]]
+    db.vap_build_step(bi, pages=len(picks), page_list=picks)
+    stats = db.execute(_scan(300_000, 50_000))
+    assert stats.shard_pages and sum(stats.shard_pages) > 0
+    psz = t.page_size
+    lused = [(int(x.n_rows) + psz - 1) // psz for x in t.shards]
+    covered = np.asarray(picks)
+    for s, (u, got) in enumerate(zip(lused, stats.shard_pages)):
+        want = u - int((covered % 4 == s).sum())
+        assert got == want, (s, got, want)
