@@ -15,8 +15,7 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import emit
-from repro.bench_db import QueryGen, make_tuner_db
-from repro.core import Database, IndexDescriptor
+from repro.api import Database, IndexDescriptor, QueryGen, make_tuner_db
 
 
 def _mk_db(src, with_index: bool):

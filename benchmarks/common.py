@@ -15,8 +15,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.bench_db.workloads import Workload
-from repro.core import Database, IndexDescriptor
+from repro.api import Database, IndexDescriptor, Workload
 
 DEFAULT_ROWS = 20_000
 DEFAULT_PAGE = 256

@@ -19,10 +19,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit
-from repro.bench_db import RunConfig, run_workload
-from repro.bench_db.schema import TunerDB
-from repro.core import Database, PredictiveTuner, TunerConfig
-from repro.core.executor import Query
+from repro.api import (Database, PredictiveTuner, Query, RunConfig,
+                       TunerConfig, TunerDB, run_workload)
 from repro.core.table import load_table
 
 CONVERGED_FRACTION = 0.98

@@ -8,9 +8,9 @@ SLOW by 1.6x.
 from __future__ import annotations
 
 from benchmarks.common import DEFAULT_PAGE, emit
-from repro.bench_db import QueryGen, RunConfig, make_tuner_db, run_workload
-from repro.bench_db.workloads import hybrid_workload
-from repro.core import Database, PredictiveTuner, TunerConfig
+from repro.api import (Database, PredictiveTuner, QueryGen, RunConfig,
+                       TunerConfig, hybrid_workload, make_tuner_db,
+                       run_workload)
 from repro.core.baselines import DisabledTuner
 
 

@@ -13,8 +13,7 @@ import numpy as np
 
 from benchmarks.common import (DEFAULT_PAGE, DEFAULT_ROWS, emit,
                                scheme_experiment)
-from repro.bench_db import QueryGen, make_tuner_db
-from repro.bench_db.workloads import affinity_workload
+from repro.api import QueryGen, affinity_workload, make_tuner_db
 
 
 def run(n_rows: int = DEFAULT_ROWS, total: int = 1500, quiet: bool = False):

@@ -13,9 +13,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import DEFAULT_PAGE, emit
-from repro.bench_db import QueryGen, RunConfig, make_tuner_db, run_workload
-from repro.bench_db.workloads import affinity_workload
-from repro.core import Database, TunerConfig, make_dl_tuner
+from repro.api import (Database, QueryGen, RunConfig, TunerConfig,
+                       affinity_workload, make_dl_tuner, make_tuner_db,
+                       run_workload)
 
 
 def run(n_rows: int = 20_000, total: int = 3000, phase_len: int = 300,

@@ -13,9 +13,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import DEFAULT_PAGE, emit
-from repro.bench_db import QueryGen, RunConfig, make_tuner_db, run_workload
-from repro.bench_db.workloads import segments_workload
-from repro.core import Database, PredictiveTuner, TunerConfig
+from repro.api import (Database, PredictiveTuner, QueryGen, RunConfig,
+                       TunerConfig, make_tuner_db, run_workload,
+                       segments_workload)
 from repro.core.baselines import HolisticTuner
 
 

@@ -12,8 +12,7 @@ from __future__ import annotations
 
 
 from benchmarks.common import DEFAULT_PAGE, emit, scheme_experiment
-from repro.bench_db import QueryGen, make_tuner_db
-from repro.bench_db.workloads import affinity_workload
+from repro.api import QueryGen, affinity_workload, make_tuner_db
 
 
 def run(n_rows: int = 20_000, total: int = 1200, quiet: bool = False):

@@ -10,9 +10,9 @@ from __future__ import annotations
 
 
 from benchmarks.common import emit
-from repro.bench_db import QueryGen, RunConfig, make_tuner_db, run_workload
-from repro.bench_db.workloads import affinity_workload
-from repro.core import Database, PredictiveTuner, TunerConfig
+from repro.api import (Database, PredictiveTuner, QueryGen, RunConfig,
+                       TunerConfig, affinity_workload, make_tuner_db,
+                       run_workload)
 from repro.core.baselines import DisabledTuner
 from repro.core.layout import LayoutTuner
 

@@ -32,7 +32,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.bench_db import make_tuner_db
+from repro.api import make_tuner_db
 from repro.core import engine as eng
 from repro.core.index import make_sharded_index, sharded_build_pages_vap
 from repro.core.table import shard_table

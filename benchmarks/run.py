@@ -88,8 +88,8 @@ def main() -> None:
                             fig2_schemes, fig6_decision_logic,
                             fig7_holistic, fig8_affinity, fig9_layout,
                             fig10_adaptability, fused_shard_scan,
-                            mesh_scan, serving_slo, shard_tuning,
-                            sharded_scan)
+                            mesh_scan, replica_routing, serving_slo,
+                            shard_tuning, sharded_scan)
     from benchmarks import common
 
     quick = args.quick
@@ -129,6 +129,8 @@ def main() -> None:
         ("serving_slo", lambda: serving_slo.run(
             total=400 if quick else 1200,
             phase_len=100 if quick else 150, quiet=True)),
+        ("replica_routing", lambda: replica_routing.run(
+            total=120 if quick else 240, quiet=True)),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),
     ]

@@ -23,9 +23,9 @@ deadline-miss gap is attributable to the serving layer.
 from __future__ import annotations
 
 from benchmarks.common import DEFAULT_PAGE, emit
-from repro.bench_db import QueryGen, RunConfig, make_tuner_db, run_workload
-from repro.bench_db.workloads import hybrid_workload
-from repro.core import Database, PredictiveTuner, TunerConfig
+from repro.api import (Database, PredictiveTuner, QueryGen, RunConfig,
+                       TunerConfig, hybrid_workload, make_tuner_db,
+                       run_workload)
 
 
 def run(n_rows: int = 20_000, total: int = 1200, phase_len: int = 150,

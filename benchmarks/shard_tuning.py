@@ -18,10 +18,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit
-from repro.bench_db import QueryGen, RunConfig, run_workload
-from repro.bench_db.schema import TunerDB, zipf_attrs
-from repro.bench_db.workloads import hybrid_workload
-from repro.core import Database, PredictiveTuner, TunerConfig
+from repro.api import (Database, PredictiveTuner, QueryGen, RunConfig,
+                       TunerConfig, TunerDB, hybrid_workload, run_workload)
+from repro.bench_db.schema import zipf_attrs
 from repro.core.table import ShardedTable, load_table
 
 CONVERGED_FRACTION = 0.98

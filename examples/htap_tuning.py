@@ -7,9 +7,9 @@ predictive tuner learns to rebuild them AHEAD of the morning traffic
 """
 import numpy as np
 
-from repro.bench_db import QueryGen, RunConfig, make_tuner_db, run_workload
-from repro.bench_db.workloads import affinity_workload
-from repro.core import Database, TunerConfig, make_dl_tuner
+from repro.api import (Database, QueryGen, RunConfig, TunerConfig,
+                       affinity_workload, make_dl_tuner, make_tuner_db,
+                       run_workload)
 
 db_src = make_tuner_db(n_rows=20_000, page_size=256)
 gen = QueryGen(db_src, selectivity=0.01)

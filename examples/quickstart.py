@@ -8,8 +8,8 @@ index is complete.
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.bench_db import QueryGen, make_tuner_db
-from repro.core import Database, PredictiveTuner, TunerConfig
+from repro.api import (Database, PredictiveTuner, QueryGen, TunerConfig,
+                       make_tuner_db)
 
 # 1. a 20k-row table of Zipf-distributed integer attributes
 db_src = make_tuner_db(n_rows=20_000, page_size=256)

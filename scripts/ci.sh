@@ -18,6 +18,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # are kept `ruff format`-clean; legacy hand-aligned modules join this
 # list as they get reformatted.
 RUFF_FORMAT_PATHS=(
+    src/repro/api.py
     src/repro/bench_db/runner.py
     src/repro/core/build_service.py
     src/repro/core/cost_model.py
@@ -25,6 +26,8 @@ RUFF_FORMAT_PATHS=(
     src/repro/core/executor.py
     src/repro/core/forecaster.py
     src/repro/core/hybrid_scan.py
+    src/repro/core/planner.py
+    src/repro/core/replica.py
     src/repro/core/tuner.py
     src/repro/kernels
     src/repro/parallel

@@ -1,0 +1,66 @@
+"""Stable public facade for the Predictive Indexing reproduction.
+
+Import the supported surface from here::
+
+    from repro.api import Database, RunConfig, run_workload
+
+Everything in ``__all__`` is covered by the compatibility promise:
+internal module moves keep these names importable from ``repro.api``
+unchanged.  Anything imported from deeper module paths
+(``repro.core.*``, ``repro.bench_db.*``, ...) is internal and may move
+between releases.
+"""
+
+from __future__ import annotations
+
+from repro.bench_db.queries import QueryGen
+from repro.bench_db.runner import (
+    ExecOptions,
+    ReplicaOptions,
+    RunConfig,
+    RunResult,
+    ServingOptions,
+    TuningOptions,
+    run_workload,
+)
+from repro.bench_db.schema import TunerDB, make_tuner_db
+from repro.bench_db.workloads import (
+    Workload,
+    affinity_workload,
+    hybrid_workload,
+    segments_workload,
+    shifting_workload,
+)
+from repro.core.cost_model import IndexDescriptor
+from repro.core.executor import Database, ExecStats, Query
+from repro.core.replica import ReplicaSet, ReplicaSetTuner
+from repro.core.tuner import PredictiveTuner, TunerConfig, make_dl_tuner
+from repro.serving.slo import SloReport
+
+__all__ = [
+    "Database",
+    "ExecOptions",
+    "ExecStats",
+    "IndexDescriptor",
+    "PredictiveTuner",
+    "Query",
+    "QueryGen",
+    "ReplicaOptions",
+    "ReplicaSet",
+    "ReplicaSetTuner",
+    "RunConfig",
+    "RunResult",
+    "ServingOptions",
+    "SloReport",
+    "TunerConfig",
+    "TunerDB",
+    "TuningOptions",
+    "Workload",
+    "affinity_workload",
+    "hybrid_workload",
+    "make_dl_tuner",
+    "make_tuner_db",
+    "run_workload",
+    "segments_workload",
+    "shifting_workload",
+]

@@ -11,8 +11,11 @@ from repro.bench_db.schema import TunerDB, make_tuner_db
 from repro.bench_db.queries import QueryGen
 from repro.bench_db.workloads import (Workload, hybrid_workload,
                                       shifting_workload, affinity_workload)
-from repro.bench_db.runner import RunConfig, RunResult, run_workload
+from repro.bench_db.runner import (ExecOptions, ReplicaOptions, RunConfig,
+                                   RunResult, ServingOptions, TuningOptions,
+                                   run_workload)
 
-__all__ = ["QueryGen", "RunConfig", "RunResult", "TunerDB", "Workload",
-           "affinity_workload", "hybrid_workload", "make_tuner_db",
-           "run_workload", "shifting_workload"]
+__all__ = ["ExecOptions", "QueryGen", "ReplicaOptions", "RunConfig",
+           "RunResult", "ServingOptions", "TunerDB", "TuningOptions",
+           "Workload", "affinity_workload", "hybrid_workload",
+           "make_tuner_db", "run_workload", "shifting_workload"]

@@ -21,7 +21,8 @@ mode, Figure 6: indexes have to be rebuilt every morning) -- tuner
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass, field, fields
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -29,6 +30,7 @@ import numpy as np
 from repro.bench_db.workloads import Workload
 from repro.core.build_service import BuildService
 from repro.core.executor import Database
+from repro.core.replica import ReplicaSet, ReplicaSetTuner
 from repro.serving.admission import (
     backlog_depth,
     make_arrivals,
@@ -42,13 +44,9 @@ TUNING_FREQ_MS = {"fast": 100.0, "mod": 1000.0, "slow": 10000.0, "dis": None}
 
 
 @dataclass
-class RunConfig:
-    tuning_interval_ms: Optional[float] = 100.0   # None = disabled
-    idle_at_phase_start_ms: float = 0.0           # throttled client window
-    drop_indexes_at_phase_end: bool = False       # diurnal mode
-    time_per_unit_ms: float = 1e-4
-    max_cycles_per_gap: int = 50                  # clamp catch-up storms
-    arrival_ms: float = 0.0  # open-loop client cadence (0 = closed loop)
+class ExecOptions:
+    """How queries execute: storage partitioning + dispatch shape."""
+
     # >1: submit consecutive read scans through Database.execute_batch.
     read_batch_size: int = 1
     # >1: partition tables round-robin and fan scans out per shard
@@ -64,6 +62,20 @@ class RunConfig:
     # (claims n_shards x mesh_query_axis devices).
     mesh: Optional[bool] = None
     mesh_query_axis: int = 1
+    # Route batched scan dispatches through the Pallas kernel tier
+    # (Database.execute_batch use_kernel).  Off by default: the
+    # stacked vmap tier is the bit-exactness reference.
+    use_kernel: bool = False
+
+
+@dataclass
+class TuningOptions:
+    """When tuning cycles fire and how their build work is applied."""
+
+    tuning_interval_ms: Optional[float] = 100.0  # None = disabled
+    idle_at_phase_start_ms: float = 0.0          # throttled client window
+    drop_indexes_at_phase_end: bool = False      # diurnal mode
+    max_cycles_per_gap: int = 50                 # clamp catch-up storms
     # Async tuning pipeline (core.build_service).  None keeps the
     # legacy serialized schedule (tuning_cycle at burst boundaries).
     # "deterministic" routes every cycle through the decide/apply
@@ -75,7 +87,7 @@ class RunConfig:
     # as tuner_overlapped_ms), undrained quanta carry over to the
     # next burst.
     async_tuning: Optional[str] = None  # None | 'deterministic' | 'overlap'
-    build_quantum_pages: int = 8                  # overlap-mode slice size
+    build_quantum_pages: int = 8        # overlap-mode slice size
     # Overlap-mode backpressure: queue depth above which the build
     # lane escalates drains.
     build_queue_cap: int = 64
@@ -104,17 +116,25 @@ class RunConfig:
     # serialized/deterministic scheduling -- the budget would depend on
     # wall clock, which breaks the bit-exact replay contract.
     adaptive_build_budget: bool = False
-    # --- Open-loop serving front end (repro.serving) -----------------
-    # Setting ``arrival_stream`` (or a burst deadline) switches
-    # run_workload into the open-loop driver: requests arrive on a
-    # seeded schedule ("uniform" | "poisson" | "bursty", mean
-    # inter-arrival = arrival_ms), read bursts close on
-    # read_batch_size OR burst_deadline_ms past the burst head's
-    # arrival (whichever fires first), and recorded latency is
-    # completion minus ARRIVAL -- queueing delay included.  The
-    # closed-loop path is bit-identical to pre-serving builds when
-    # both stay unset.  idle_at_phase_start_ms (a closed-loop client
-    # throttle) is ignored open-loop: idleness comes from the stream.
+
+
+@dataclass
+class ServingOptions:
+    """Open-loop serving front end (repro.serving) + SLO machinery.
+
+    Setting ``arrival_stream`` (or a burst deadline) switches
+    run_workload into the open-loop driver: requests arrive on a
+    seeded schedule ("uniform" | "poisson" | "bursty", mean
+    inter-arrival = arrival_ms), read bursts close on
+    read_batch_size OR burst_deadline_ms past the burst head's
+    arrival (whichever fires first), and recorded latency is
+    completion minus ARRIVAL -- queueing delay included.  The
+    closed-loop path is bit-identical to pre-serving builds when
+    both stay unset.  idle_at_phase_start_ms (a closed-loop client
+    throttle) is ignored open-loop: idleness comes from the stream.
+    """
+
+    arrival_ms: float = 0.0  # open-loop client cadence (0 = closed loop)
     arrival_stream: Optional[str] = None
     arrival_seed: int = 0
     # Stream shape (bursty streams only; defaults reproduce the
@@ -151,6 +171,105 @@ class RunConfig:
 
 
 @dataclass
+class ReplicaOptions:
+    """Replica tier (core.replica): N data-identical replicas with
+    cost-routed queries.  ``divergent_tuning`` clusters the workload
+    window per cycle and points each replica's tuner at one cluster,
+    so aggregate index capacity scales with replica count;  off, the
+    replicas mirror (bit-identical to a single engine)."""
+
+    n_replicas: int = 1
+    divergent_tuning: bool = False
+
+
+class RunConfig:
+    """Run configuration, grouped by concern.
+
+    The supported surface is the four option groups::
+
+        RunConfig(
+            execution=ExecOptions(num_shards=4),
+            tuning=TuningOptions(async_tuning="overlap"),
+            serving=ServingOptions(arrival_stream="bursty"),
+            replica=ReplicaOptions(n_replicas=3),
+        )
+
+    plus the globally shared ``time_per_unit_ms``.  Every legacy flat
+    kwarg (``RunConfig(num_shards=4)``) still constructs the identical
+    configuration through a compatibility shim -- it lands on the
+    owning group and emits a ``DeprecationWarning`` -- and flat
+    ATTRIBUTE access (``cfg.num_shards``) keeps working silently in
+    both directions, so existing drivers and tests run unchanged.
+    """
+
+    def __init__(
+        self,
+        execution: Optional[ExecOptions] = None,
+        tuning: Optional[TuningOptions] = None,
+        serving: Optional[ServingOptions] = None,
+        replica: Optional[ReplicaOptions] = None,
+        time_per_unit_ms: float = 1e-4,
+        **flat,
+    ):
+        self.execution = execution if execution is not None else ExecOptions()
+        self.tuning = tuning if tuning is not None else TuningOptions()
+        self.serving = serving if serving is not None else ServingOptions()
+        self.replica = replica if replica is not None else ReplicaOptions()
+        self.time_per_unit_ms = time_per_unit_ms
+        for name, value in flat.items():
+            group = _FLAT_TO_GROUP.get(name)
+            if group is None:
+                raise TypeError(
+                    f"RunConfig got an unexpected keyword argument {name!r}"
+                )
+            warnings.warn(
+                f"flat RunConfig kwarg {name!r} is deprecated; use "
+                f"RunConfig({group}={type(getattr(self, group)).__name__}"
+                f"({name}=...))",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            setattr(getattr(self, group), name, value)
+
+    def __repr__(self) -> str:
+        return (
+            f"RunConfig(execution={self.execution!r}, "
+            f"tuning={self.tuning!r}, serving={self.serving!r}, "
+            f"replica={self.replica!r}, "
+            f"time_per_unit_ms={self.time_per_unit_ms!r})"
+        )
+
+
+# group field name -> owning RunConfig attribute, derived from the
+# dataclasses so the shim can never drift from the groups.
+_FLAT_TO_GROUP: Dict[str, str] = {
+    f.name: group
+    for group, cls in (
+        ("execution", ExecOptions),
+        ("tuning", TuningOptions),
+        ("serving", ServingOptions),
+        ("replica", ReplicaOptions),
+    )
+    for f in fields(cls)
+}
+
+
+def _flat_alias(group: str, name: str) -> property:
+    def get(self):
+        return getattr(getattr(self, group), name)
+
+    def set_(self, value):
+        setattr(getattr(self, group), name, value)
+
+    return property(get, set_)
+
+
+for _name, _group in _FLAT_TO_GROUP.items():
+    setattr(RunConfig, _name, _flat_alias(_group, _name))
+del _name, _group
+
+
+@dataclass
 class RunResult:
     latencies_ms: List[float] = field(default_factory=list)
     phases: List[int] = field(default_factory=list)
@@ -180,6 +299,10 @@ class RunResult:
     # / pmap / shard_map).  Benchmarks assert the tier they mean to
     # measure instead of trusting a silent fallback.
     execution_tiers: Dict[str, int] = field(default_factory=dict)
+    # Replica-tier telemetry (ReplicaOptions.n_replicas > 1): the
+    # replica id every scan / read burst was routed to, in dispatch
+    # order.  Empty when no replica tier was active.
+    replica_routing: List[int] = field(default_factory=list)
 
     def percentile(self, p: float) -> float:
         """Latency percentile, 0.0 on empty runs (np.percentile raises
@@ -233,7 +356,47 @@ class RunResult:
 def run_workload(
     db: Database, tuner, workload: Workload, cfg: RunConfig
 ) -> RunResult:
-    """Single-core timing model.
+    """Drive ``tuner`` over ``workload`` on the simulated clock.
+
+    Dispatches to the closed-loop replay driver or (when an arrival
+    stream / burst deadline is configured) the open-loop serving
+    driver.  With ``cfg.replica.n_replicas > 1`` the database and
+    tuner are first wrapped in the replica tier (core.replica): N
+    data-identical replicas, scans cost-routed to the cheapest one,
+    per-replica tuning lanes (divergent when
+    ``cfg.replica.divergent_tuning``).  ``n_replicas=1`` never wraps,
+    so the single-engine path is untouched.
+    """
+    rs: Optional[ReplicaSet] = None
+    if cfg.replica.n_replicas > 1:
+        # Reshard BEFORE cloning so every replica adopts the target
+        # layout (the drivers' own reshard check then no-ops).
+        if cfg.num_shards != getattr(db, "num_shards", 1):
+            db.reshard(cfg.num_shards)
+        rs = ReplicaSet(
+            db,
+            cfg.replica.n_replicas,
+            divergent=cfg.replica.divergent_tuning,
+        )
+        tuner = ReplicaSetTuner(rs, tuner)
+        db = rs
+    if cfg.arrival_stream is not None or cfg.burst_deadline_ms is not None:
+        # Open-loop serving front end: requests arrive on their own
+        # schedule, bursts close on size OR deadline, latency is
+        # completion minus arrival.  A separate driver so the
+        # closed-loop path stays bit-identical to pre-serving builds.
+        res = _run_open_loop(db, tuner, workload, cfg)
+    else:
+        res = _run_closed_loop(db, tuner, workload, cfg)
+    if rs is not None:
+        res.replica_routing = list(rs.routed_queries)
+    return res
+
+
+def _run_closed_loop(
+    db: Database, tuner, workload: Workload, cfg: RunConfig
+) -> RunResult:
+    """Single-core closed-loop timing model.
 
     Background cycle work first consumes accumulated *idle credit*
     (open-loop arrival gaps + explicit phase-start throttle windows);
@@ -241,14 +404,6 @@ def run_workload(
     is the latency-spike mechanism of unbounded (holistic/value-based)
     population, while bounded VAP cycles typically fit in the credit.
     """
-    if cfg.arrival_stream is not None or cfg.burst_deadline_ms is not None:
-        # Open-loop serving front end: requests arrive on their own
-        # schedule, bursts close on size OR deadline, latency is
-        # completion minus arrival.  A separate driver so the
-        # closed-loop path below stays bit-identical to pre-serving
-        # builds.
-        return _run_open_loop(db, tuner, workload, cfg)
-
     if cfg.num_shards != getattr(db, "num_shards", 1):
         db.reshard(cfg.num_shards)
     if cfg.async_tuning not in (None, "deterministic", "overlap"):
@@ -401,7 +556,9 @@ def run_workload(
         if not staged:
             return
         run_due_cycles()
-        stats_list = db.execute_batch([q for _, q in staged])
+        stats_list = db.execute_batch(
+            [q for _, q in staged], use_kernel=cfg.use_kernel
+        )
         for (ph, q), stats in zip(staged, stats_list):
             account(ph, q, stats)
         staged.clear()
@@ -730,7 +887,9 @@ def _run_open_loop(
             if len(burst) == 1 and not batchable[start]:
                 stats_list = [db.execute(burst[0][1])]
             else:
-                stats_list = db.execute_batch([q for _, q in burst])
+                stats_list = db.execute_batch(
+                    [q for _, q in burst], use_kernel=cfg.use_kernel
+                )
             cum = 0.0
             for k, ((bph, q), stats) in enumerate(zip(burst, stats_list)):
                 extra_units = tuner.on_query(q, stats)

@@ -36,6 +36,8 @@ from repro.core.index import (AdHocIndex, ShardedIndex, ShardedVbpState,
                               sharded_build_pages_vap)
 from repro.core.planner import (BuiltIndex, QueryPlanner, ScanPlan,
                                 scan_cost)
+from repro.core.replica import (ReplicaSet, ReplicaSetTuner,
+                                cluster_assignments)
 from repro.core.table import (ShardedTable, Table, load_table, make_table,
                               shard_table, unshard_table)
 from repro.core.tuner import PredictiveTuner, TunerConfig, make_dl_tuner
@@ -44,7 +46,8 @@ __all__ = [
     "AdHocIndex", "BatchScanResult", "BuildQuantum", "BuildService",
     "BuiltIndex", "CyclePlan", "Database", "ExecStats", "apply_quantum",
     "HybridPrefixResult", "IndexDescriptor", "PredictiveTuner", "Query",
-    "QueryPlanner", "ScanEngine", "ScanPlan", "ScanResult", "ShardScanResult",
+    "QueryPlanner", "ReplicaSet", "ReplicaSetTuner", "ScanEngine", "ScanPlan",
+    "ScanResult", "ShardScanResult", "cluster_assignments",
     "ShardedIndex", "ShardedTable", "ShardedVbpState", "Table", "TunerConfig",
     "VbpState", "batched_full_table_scan", "batched_hybrid_index_prefix",
     "batched_hybrid_scan", "batched_pure_index_scan", "build_full",

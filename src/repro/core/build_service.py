@@ -117,6 +117,13 @@ class BuildQuantum:
     # pages (coverage) or advance the prefix (legacy).  ``pages`` is
     # the slice budget either way (== len(page_list) when present).
     page_list: tuple = ()
+    # Build lane (core.replica): ``None`` applies to every replica --
+    # on a plain Database that is just "this database", so every
+    # legacy quantum is unchanged; on a ReplicaSet the mirrored fan-out
+    # applies the identical slice to each replica and charges the work
+    # ONCE (parallel machines).  An explicit replica id targets that
+    # replica's catalog alone (divergent tuning).
+    replica: Optional[int] = None
 
 
 @dataclass
@@ -133,12 +140,25 @@ def apply_quantum(db, quantum: BuildQuantum) -> float:
     """Apply one build quantum against the live catalog; returns work
     units.  Skips (0.0) when the index was dropped or finished since
     the quantum was planned -- later decide steps may reshape the
-    configuration while quanta are still queued."""
-    bi = db.indexes.get(quantum.index_name)
-    if bi is None or not bi.building or bi.scheme not in ("vap", "full"):
-        return 0.0
-    return db.vap_build_step(bi, quantum.pages, shard=quantum.shard,
+    configuration while quanta are still queued.
+
+    On a ReplicaSet the quantum's ``replica`` tag resolves the target
+    catalog(s) BEFORE the lookup: ``None`` fans the identical slice out
+    to every replica and charges the max (mirrored replicas advance in
+    lockstep for the cost of one build -- they are parallel machines);
+    an explicit id builds on that replica alone.  A plain Database has
+    no ``build_targets`` hook and behaves exactly as before."""
+    targets = getattr(db, "build_targets", None)
+    dbs = targets(quantum.replica) if targets is not None else (db,)
+    work = 0.0
+    for d in dbs:
+        bi = d.indexes.get(quantum.index_name)
+        if bi is None or not bi.building or bi.scheme not in ("vap", "full"):
+            continue
+        w = d.vap_build_step(bi, quantum.pages, shard=quantum.shard,
                              page_list=quantum.page_list or None)
+        work = max(work, w)
+    return work
 
 
 class BuildService:
@@ -204,12 +224,13 @@ class BuildService:
                     chunk = tuple(pl[i:i + step])
                     self.queue.append(
                         BuildQuantum(q.index_name, len(chunk), q.shard,
-                                     q.utility, chunk)
+                                     q.utility, chunk, q.replica)
                     )
                 continue
             for pages in split_build_pages(q.pages, self.quantum_pages):
                 self.queue.append(
-                    BuildQuantum(q.index_name, pages, q.shard, q.utility)
+                    BuildQuantum(q.index_name, pages, q.shard, q.utility,
+                                 replica=q.replica)
                 )
         return plan.decide_work
 
@@ -312,11 +333,19 @@ class BuildService:
 
     def drain(self) -> float:
         """Apply every queued quantum (the deterministic-interleave
-        boundary drain); returns total work units."""
-        work = 0.0
+        boundary drain); returns the charged work units.
+
+        Quanta are grouped by build lane (``BuildQuantum.replica``) and
+        the charge is the MAX over per-lane totals: replicas are
+        parallel machines, so divergent lanes overlap in time and the
+        boundary pays only for the slowest one.  Every legacy quantum
+        sits on the single ``None`` lane, where max == sum -- the
+        deterministic-interleave bit-identity contract is untouched."""
+        lane_work: dict = {}
         while self.queue:
-            work += self.apply_next()
-        return work
+            lane = self.queue[0].replica
+            lane_work[lane] = lane_work.get(lane, 0.0) + self.apply_next()
+        return max(lane_work.values(), default=0.0)
 
     def drain_urgent(self, frac: float = URGENT_UTILITY_FRAC) -> float:
         """Pressure-time partial drain: apply only the quanta whose

@@ -16,7 +16,14 @@ and pick a hybrid scan for selective queries -- falling back to a
 table scan when the predicate is not selective or no index matches.
 FULL-scheme indexes are usable only when complete; VBP indexes only
 when the query sub-domain is covered.
+
+``estimate_scan_cost`` is the planner's what-if export: the cost this
+database would charge for a scan, in the same tuple-touch units the
+engine's measured ``scan_cost`` accounting produces, without
+dispatching anything.  The replica router (``core.replica``) compares
+it across replicas to send each query to the cheapest physical design.
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -24,12 +31,16 @@ from typing import Optional, Tuple
 
 from repro.core import cost_model as cm
 from repro.core.cost_model import IndexDescriptor
-from repro.core.index import (ShardedIndex, ShardedVbpState, key_range,
-                              vbp_n_entries)
+from repro.core.index import (
+    ShardedIndex,
+    ShardedVbpState,
+    key_range,
+    vbp_n_entries,
+)
 from repro.core.layout import LayoutState, scan_width_factor
 from repro.core.table import ShardedTable
 
-HYBRID_SELECTIVITY_CUTOFF = 0.20  # optimizer switches to table scan above this
+HYBRID_SELECTIVITY_CUTOFF = 0.20  # optimizer switches to table scan above
 
 
 class IntervalUnion:
@@ -43,7 +54,7 @@ class IntervalUnion:
     """
 
     def __init__(self):
-        self.ivs: list = []   # sorted disjoint [(lo, hi)] of key tuples
+        self.ivs: list = []  # sorted disjoint [(lo, hi)] of key tuples
 
     def add(self, lo, hi) -> None:
         ivs = self.ivs + [(lo, hi)]
@@ -51,7 +62,7 @@ class IntervalUnion:
         merged = [ivs[0]]
         for a, b in ivs[1:]:
             la, lb = merged[-1]
-            if a <= lb or a == lb:   # touching/overlapping (tuple compare)
+            if a <= lb or a == lb:  # touching/overlapping (tuple compare)
                 if b > lb:
                     merged[-1] = (la, b)
             else:
@@ -95,15 +106,15 @@ class BuiltIndex:
     """
 
     desc: IndexDescriptor
-    scheme: str                     # 'vap' | 'vbp' | 'full'
-    vap: Optional[object] = None    # AdHocIndex | ShardedIndex
-    vbp: Optional[object] = None    # VbpState | ShardedVbpState
-    cov_union: Optional[IntervalUnion] = None   # VBP merged coverage
-    complete: bool = False          # FULL usable flag
-    building: bool = True           # under construction (VAP/FULL)
+    scheme: str  # 'vap' | 'vbp' | 'full'
+    vap: Optional[object] = None  # AdHocIndex | ShardedIndex
+    vbp: Optional[object] = None  # VbpState | ShardedVbpState
+    cov_union: Optional[IntervalUnion] = None  # VBP merged coverage
+    complete: bool = False  # FULL usable flag
+    building: bool = True  # under construction (VAP/FULL)
     created_ms: float = 0.0
     last_used_ms: float = 0.0
-    coverage: Optional[object] = None   # PageCoverage (bitmap mode)
+    coverage: Optional[object] = None  # PageCoverage (bitmap mode)
 
     def built_fraction(self, table) -> float:
         if self.coverage is not None and self.scheme in ("vap", "full"):
@@ -116,8 +127,9 @@ class BuiltIndex:
             # Coverage-aware: decay clears bits without compacting the
             # entry array, so the bitmap (not n_entries) is what the
             # memory cap governs.
-            return 12.0 * float(self.coverage.count()
-                                * self.coverage.page_size)
+            return 12.0 * float(
+                self.coverage.count() * self.coverage.page_size
+            )
         if self.scheme in ("vap", "full"):
             return 12.0 * float(int(self.vap.n_entries))
         return 12.0 * float(int(vbp_n_entries(self.vbp)))
@@ -205,7 +217,7 @@ class QueryPlanner:
 
     def __init__(self, db):
         self.db = db
-        self._snap: Optional[dict] = None   # name -> IndexSnapshot
+        self._snap: Optional[dict] = None  # name -> IndexSnapshot
 
     # -- catalog double buffering ----------------------------------------
     def begin_snapshot(self) -> None:
@@ -213,8 +225,10 @@ class QueryPlanner:
         ``end_snapshot`` resolves index state, built fraction and
         completeness against the states captured here, while build
         quanta keep advancing the live (back-buffer) records."""
-        self._snap = {name: IndexSnapshot(bi.vap, bi.vbp, bi.complete)
-                      for name, bi in self.db.indexes.items()}
+        self._snap = {
+            name: IndexSnapshot(bi.vap, bi.vbp, bi.complete)
+            for name, bi in self.db.indexes.items()
+        }
 
     def end_snapshot(self) -> None:
         """Swap the buffers: the next burst plans against whatever the
@@ -251,8 +265,9 @@ class QueryPlanner:
             if bi.scheme == "full" and not complete:
                 continue
             covered = len(set(bi.desc.key_attrs) & set(q.attrs))
-            frac = built_fraction_of(bi.scheme, vap, vbp,
-                                     self.db.tables[q.table])
+            frac = built_fraction_of(
+                bi.scheme, vap, vbp, self.db.tables[q.table]
+            )
             if bi.scheme == "vbp":
                 lo, hi = self.vbp_host_bounds(bi, q)
                 if not bi.cov_union.covers(lo, hi):
@@ -270,18 +285,81 @@ class QueryPlanner:
             return ScanPlan("table")
         vap, vbp, complete = self._states(bi)
         if bi.scheme == "vbp":
-            return ScanPlan("pure_vbp", bi,
-                            pinned_state=_engine_state("pure_vbp", vap, vbp))
+            return ScanPlan(
+                "pure_vbp",
+                bi,
+                pinned_state=_engine_state("pure_vbp", vap, vbp),
+            )
         if bi.scheme == "full" and complete:
             return ScanPlan("pure_vap", bi, pinned_state=vap)
         cov = bi.coverage
         if cov is not None and not self._coverage_is_legacy(cov, vap):
-            return ScanPlan("hybrid_masked", bi, pinned_state=vap,
-                            pinned_coverage=self._pin_coverage(bi, cov))
-        path = "hybrid"                  # VAP (or FULL still building)
+            return ScanPlan(
+                "hybrid_masked",
+                bi,
+                pinned_state=vap,
+                pinned_coverage=self._pin_coverage(bi, cov),
+            )
+        path = "hybrid"  # VAP (or FULL still building)
         if self._needs_pershard_stitch(bi, vap):
             path = "hybrid_ps"
         return ScanPlan(path, bi, pinned_state=vap)
+
+    # -- what-if cost (replica routing) ----------------------------------
+    def estimate_scan_cost(self, q) -> float:
+        """What-if cost of serving ``q`` under the CURRENT catalog, in
+        the engine's tuple-touch units -- ``scan_cost`` arithmetic fed
+        with estimated (not measured) pages and probes.  Pure host-side
+        and side-effect free: no dispatch, no ``last_used_ms`` touch,
+        no monitor observation.  The replica router compares this
+        number across replicas (``core.replica.ReplicaSet``), so it
+        must be deterministic for a given catalog state -- it reads
+        only the catalog and the query, never wall time or hashes.
+        """
+        t = self.db.tables[q.table]
+        layout = self.db.layouts[q.table]
+        psz = t.page_size
+        n_rows = int(t.n_rows)
+        if isinstance(t, ShardedTable):
+            used_pages = sum(
+                -(-int(s.n_rows) // psz) for s in t.shards
+            )
+        else:
+            used_pages = -(-n_rows // psz)
+        plan = self.plan_scan(q)
+        sel = self.estimate_selectivity(q)
+        if plan.path == "table":
+            cost = scan_cost(layout, q.accessed_attrs, psz, used_pages, 0.0, 0)
+        elif plan.path in ("pure_vbp", "pure_vap"):
+            cost = scan_cost(
+                layout, q.accessed_attrs, psz, 0, sel * n_rows, t.n_pages
+            )
+        else:  # hybrid flavours: indexed prefix probes + table suffix
+            frac = plan.index.built_fraction(t)
+            start = int(frac * used_pages)
+            cost = scan_cost(
+                layout,
+                q.accessed_attrs,
+                psz,
+                used_pages - start,
+                sel * frac * n_rows,
+                start,
+            )
+        if q.join_table is not None:
+            inner = self.db.tables[q.join_table]
+            n_inner = int(inner.n_rows)
+            has_idx = any(
+                bi.scheme in ("vap", "full")
+                and not bi.building
+                and cm.index_matches(
+                    bi.desc, q.join_table, (q.join_inner_attr,)
+                )
+                for bi in self.db.indexes.values()
+            )
+            cost += (
+                n_inner * cm.INDEX_PROBE_COST if has_idx else float(n_inner)
+            )
+        return cost
 
     @staticmethod
     def _coverage_is_legacy(cov, vap) -> bool:
@@ -312,8 +390,9 @@ class QueryPlanner:
         if bi.desc.name in getattr(self.db, "pershard_built", ()):
             return True
         t = self.db.tables.get(bi.desc.table)
-        return isinstance(t, ShardedTable) and \
-            not self.db.table_is_round_robin(bi.desc.table)
+        return isinstance(t, ShardedTable) and not self.db.table_is_round_robin(
+            bi.desc.table
+        )
 
     # -- VBP key bounds --------------------------------------------------
     @staticmethod
@@ -342,9 +421,14 @@ class QueryPlanner:
         return key_range(lo0, hi0)
 
 
-def scan_cost(layout: LayoutState, accessed_attrs, page_size: int,
-              pages_scanned: int, entries_probed: float,
-              start_page: int) -> float:
+def scan_cost(
+    layout: LayoutState,
+    accessed_attrs,
+    page_size: int,
+    pages_scanned: int,
+    entries_probed: float,
+    start_page: int,
+) -> float:
     """Tuple-touch cost of one executed scan.
 
     Table-scan units scale with the layout's effective width
