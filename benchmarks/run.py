@@ -85,8 +85,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (async_tuning, batched_scan, crack_on_scan,
-                            fig2_schemes, fig6_decision_logic,
-                            fig7_holistic, fig8_affinity, fig9_layout,
+                            fault_recovery, fig2_schemes,
+                            fig6_decision_logic, fig7_holistic,
+                            fig8_affinity, fig9_layout,
                             fig10_adaptability, fused_shard_scan,
                             mesh_scan, replica_routing, serving_slo,
                             shard_tuning, sharded_scan)
@@ -130,6 +131,8 @@ def main() -> None:
             total=400 if quick else 1200,
             phase_len=100 if quick else 150, quiet=True)),
         ("replica_routing", lambda: replica_routing.run(
+            total=120 if quick else 240, quiet=True)),
+        ("fault_recovery", lambda: fault_recovery.run(
             total=120 if quick else 240, quiet=True)),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),

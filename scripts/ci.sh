@@ -26,9 +26,11 @@ RUFF_FORMAT_PATHS=(
     src/repro/core/executor.py
     src/repro/core/forecaster.py
     src/repro/core/hybrid_scan.py
+    src/repro/core/monitor.py
     src/repro/core/planner.py
     src/repro/core/replica.py
     src/repro/core/tuner.py
+    src/repro/faults
     src/repro/kernels
     src/repro/parallel
     src/repro/serving

@@ -16,6 +16,7 @@ from __future__ import annotations
 from repro.bench_db.queries import QueryGen
 from repro.bench_db.runner import (
     ExecOptions,
+    FaultOptions,
     ReplicaOptions,
     RunConfig,
     RunResult,
@@ -35,17 +36,32 @@ from repro.core.cost_model import IndexDescriptor
 from repro.core.executor import Database, ExecStats, Query
 from repro.core.replica import ReplicaSet, ReplicaSetTuner
 from repro.core.tuner import PredictiveTuner, TunerConfig, make_dl_tuner
+from repro.faults import (
+    ClusterUnavailable,
+    FaultError,
+    FaultInjector,
+    FaultSchedule,
+    ReplicaOutage,
+    chaos_schedule,
+    staggered_outages,
+)
 from repro.serving.slo import SloReport
 
 __all__ = [
+    "ClusterUnavailable",
     "Database",
     "ExecOptions",
     "ExecStats",
+    "FaultError",
+    "FaultInjector",
+    "FaultOptions",
+    "FaultSchedule",
     "IndexDescriptor",
     "PredictiveTuner",
     "Query",
     "QueryGen",
     "ReplicaOptions",
+    "ReplicaOutage",
     "ReplicaSet",
     "ReplicaSetTuner",
     "RunConfig",
@@ -57,10 +73,12 @@ __all__ = [
     "TuningOptions",
     "Workload",
     "affinity_workload",
+    "chaos_schedule",
     "hybrid_workload",
     "make_dl_tuner",
     "make_tuner_db",
     "run_workload",
     "segments_workload",
     "shifting_workload",
+    "staggered_outages",
 ]

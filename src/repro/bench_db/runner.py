@@ -22,7 +22,7 @@ mode, Figure 6: indexes have to be rebuilt every morning) -- tuner
 from __future__ import annotations
 
 import warnings
-from dataclasses import dataclass, field, fields
+from dataclasses import dataclass, field, fields, replace
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -31,6 +31,7 @@ from repro.bench_db.workloads import Workload
 from repro.core.build_service import BuildService
 from repro.core.executor import Database
 from repro.core.replica import ReplicaSet, ReplicaSetTuner
+from repro.faults import FaultInjector, FaultSchedule
 from repro.serving.admission import (
     backlog_depth,
     make_arrivals,
@@ -182,16 +183,41 @@ class ReplicaOptions:
     divergent_tuning: bool = False
 
 
+@dataclass
+class FaultOptions:
+    """Deterministic fault injection (repro.faults) + recovery.
+
+    ``fault_schedule`` attaches a seeded ``FaultSchedule`` to the run:
+    transient scan errors, straggler dispatch latency, build-quantum
+    failures, and (replica tier only -- single-engine runs reject
+    outage schedules) replica crash/rejoin epochs.  ``fault_recovery``
+    selects the machinery under test: on (default), routing fails
+    over DOWN replicas, rejoin replays the catch-up log, and failed
+    build quanta retry with exponential backoff
+    (``fault_build_backoff_ms * 2**attempt``, quarantine after
+    ``fault_build_max_attempts`` failures); off is the no-recovery
+    baseline -- crashes are permanent, statements routed to a dead
+    replica drop, failed quanta are discarded.  ``None`` (the
+    default) injects nothing and keeps every path bit-identical to
+    the fault-free engine."""
+
+    fault_schedule: Optional[FaultSchedule] = None
+    fault_recovery: bool = True
+    fault_build_max_attempts: int = 4
+    fault_build_backoff_ms: float = 4.0
+
+
 class RunConfig:
     """Run configuration, grouped by concern.
 
-    The supported surface is the four option groups::
+    The supported surface is the five option groups::
 
         RunConfig(
             execution=ExecOptions(num_shards=4),
             tuning=TuningOptions(async_tuning="overlap"),
             serving=ServingOptions(arrival_stream="bursty"),
             replica=ReplicaOptions(n_replicas=3),
+            faults=FaultOptions(fault_schedule=schedule),
         )
 
     plus the globally shared ``time_per_unit_ms``.  Every legacy flat
@@ -208,6 +234,7 @@ class RunConfig:
         tuning: Optional[TuningOptions] = None,
         serving: Optional[ServingOptions] = None,
         replica: Optional[ReplicaOptions] = None,
+        faults: Optional[FaultOptions] = None,
         time_per_unit_ms: float = 1e-4,
         **flat,
     ):
@@ -215,6 +242,7 @@ class RunConfig:
         self.tuning = tuning if tuning is not None else TuningOptions()
         self.serving = serving if serving is not None else ServingOptions()
         self.replica = replica if replica is not None else ReplicaOptions()
+        self.faults = faults if faults is not None else FaultOptions()
         self.time_per_unit_ms = time_per_unit_ms
         for name, value in flat.items():
             group = _FLAT_TO_GROUP.get(name)
@@ -235,7 +263,7 @@ class RunConfig:
         return (
             f"RunConfig(execution={self.execution!r}, "
             f"tuning={self.tuning!r}, serving={self.serving!r}, "
-            f"replica={self.replica!r}, "
+            f"replica={self.replica!r}, faults={self.faults!r}, "
             f"time_per_unit_ms={self.time_per_unit_ms!r})"
         )
 
@@ -249,6 +277,7 @@ _FLAT_TO_GROUP: Dict[str, str] = {
         ("tuning", TuningOptions),
         ("serving", ServingOptions),
         ("replica", ReplicaOptions),
+        ("faults", FaultOptions),
     )
     for f in fields(cls)
 }
@@ -303,6 +332,22 @@ class RunResult:
     # replica id every scan / read burst was routed to, in dispatch
     # order.  Empty when no replica tier was active.
     replica_routing: List[int] = field(default_factory=list)
+    # Per-statement result triples (agg_sum, count, rows_modified) in
+    # served order -- the chaos harness's correctness fingerprint: a
+    # fault schedule with recovery on must reproduce the fault-free
+    # run's list bit for bit (latency may shift, results never).
+    results: List[Tuple[int, int, int]] = field(default_factory=list)
+    # Fault-injection telemetry (FaultOptions.fault_schedule): served
+    # fraction of offered statements, summed replica outage time on
+    # the simulated clock, and injector event counters.  Healthy
+    # defaults, so fault-free runs are unchanged.
+    dropped_queries: int = 0
+    availability: float = 1.0
+    fault_downtime_ms: float = 0.0
+    fault_scan_retries: int = 0
+    fault_stragglers: int = 0
+    fault_build_failures: int = 0
+    fault_quarantined_builds: int = 0
 
     def percentile(self, p: float) -> float:
         """Latency percentile, 0.0 on empty runs (np.percentile raises
@@ -380,6 +425,19 @@ def run_workload(
         )
         tuner = ReplicaSetTuner(rs, tuner)
         db = rs
+    injector: Optional[FaultInjector] = None
+    schedule = cfg.faults.fault_schedule
+    if schedule is not None:
+        if schedule.outages and rs is None:
+            raise ValueError(
+                "FaultSchedule.outages require a replica tier "
+                "(ReplicaOptions.n_replicas > 1): a single engine has "
+                "nothing to fail over to"
+            )
+        injector = FaultInjector(
+            schedule, recovery=cfg.faults.fault_recovery
+        )
+        db.fault_injector = injector  # fans out across replicas
     if cfg.arrival_stream is not None or cfg.burst_deadline_ms is not None:
         # Open-loop serving front end: requests arrive on their own
         # schedule, bursts close on size OR deadline, latency is
@@ -390,6 +448,23 @@ def run_workload(
         res = _run_closed_loop(db, tuner, workload, cfg)
     if rs is not None:
         res.replica_routing = list(rs.routed_queries)
+    if injector is not None:
+        res.fault_scan_retries = injector.scan_retries
+        res.fault_stragglers = injector.straggler_events
+        res.fault_build_failures = injector.build_failures
+        if rs is not None:
+            res.fault_downtime_ms = float(sum(rs.downtime_ms))
+        offered = len(res.latencies_ms) + res.dropped_queries
+        res.availability = (
+            len(res.latencies_ms) / offered if offered else 1.0
+        )
+        if res.slo_report is not None:
+            res.slo_report = replace(
+                res.slo_report,
+                availability=res.availability,
+                downtime_ms=res.fault_downtime_ms,
+                dropped=res.dropped_queries,
+            )
     return res
 
 
@@ -427,6 +502,9 @@ def _run_closed_loop(
             tuner,
             quantum_pages=cfg.build_quantum_pages if overlap else None,
             max_queue_depth=cfg.build_queue_cap if overlap else None,
+            injector=getattr(db, "fault_injector", None),
+            max_attempts=cfg.fault_build_max_attempts,
+            backoff_ms=cfg.fault_build_backoff_ms,
         )
 
     res = RunResult()
@@ -520,6 +598,12 @@ def _run_closed_loop(
     def account(phase, q, stats):
         """Per-query bookkeeping shared by the single and batch paths."""
         nonlocal blocking_ms, idle_credit_ms
+        if stats is None:
+            # Fault-dropped statement (recovery-off routing hit a dead
+            # replica): nothing was served, so only the drop counts;
+            # pending blocking work carries to the next served query.
+            res.dropped_queries += 1
+            return
         extra_units = tuner.on_query(q, stats)
         extra_ms = extra_units * cfg.time_per_unit_ms
         db.clock_ms += extra_ms
@@ -528,6 +612,7 @@ def _run_closed_loop(
         res.latencies_ms.append(lat)
         res.phases.append(phase)
         res.cumulative_ms += lat
+        res.results.append((stats.agg_sum, stats.count, stats.rows_modified))
         if stats.tier:
             res.execution_tiers[stats.tier] = (
                 res.execution_tiers.get(stats.tier, 0) + 1
@@ -605,6 +690,7 @@ def _run_closed_loop(
     if service is not None:
         res.build_pages_per_ms = service.pages_per_ms
         res.build_escalations = service.escalations
+        res.fault_quarantined_builds = len(service.quarantined)
     res.wall_s = _time.perf_counter() - t_start
     return res
 
@@ -656,6 +742,9 @@ def _run_open_loop(
             tuner,
             quantum_pages=cfg.build_quantum_pages if overlap else None,
             max_queue_depth=cfg.build_queue_cap if overlap else None,
+            injector=getattr(db, "fault_injector", None),
+            max_attempts=cfg.fault_build_max_attempts,
+            backoff_ms=cfg.fault_build_backoff_ms,
         )
 
     items = list(workload)
@@ -699,8 +788,17 @@ def _run_open_loop(
         # the build lane for the whole run (one batch in flight is
         # the steady state, not a backlog).
         depth = backlog_depth(arrivals, max(served, staged_end), db.clock_ms)
+        # Degraded mode: a lost replica shrinks serving capacity, so
+        # the same backlog trips the throttle ladder earlier
+        # (ReplicaSet.frac_up scales the SLO headroom; 1.0 -- plain
+        # engines, healthy sets -- is the bit-identical no-op).
+        frac_up = getattr(db, "frac_up", None)
         return slo_pressure(
-            depth, ewma_service_ms, cfg.slo_ms, cfg.slo_headroom
+            depth,
+            ewma_service_ms,
+            cfg.slo_ms,
+            cfg.slo_headroom,
+            capacity_frac=frac_up() if frac_up is not None else 1.0,
         )
 
     def defer_ok() -> bool:
@@ -821,6 +919,7 @@ def _run_open_loop(
         res.latencies_ms.append(lat)
         res.phases.append(ph)
         res.cumulative_ms += lat
+        res.results.append((stats.agg_sum, stats.count, stats.rows_modified))
         if stats.tier:
             res.execution_tiers[stats.tier] = (
                 res.execution_tiers.get(stats.tier, 0) + 1
@@ -892,6 +991,12 @@ def _run_open_loop(
                 )
             cum = 0.0
             for k, ((bph, q), stats) in enumerate(zip(burst, stats_list)):
+                if stats is None:
+                    # Fault-dropped statement (recovery-off routing hit
+                    # a dead replica): no service time, no latency
+                    # sample -- only the availability hit.
+                    res.dropped_queries += 1
+                    continue
                 extra_units = tuner.on_query(q, stats)
                 extra_ms = extra_units * cfg.time_per_unit_ms
                 db.clock_ms += extra_ms
@@ -914,6 +1019,7 @@ def _run_open_loop(
         res.build_pages_per_ms = service.pages_per_ms
         res.build_escalations = service.escalations
         res.build_shed_quanta = service.shed_quanta
+        res.fault_quarantined_builds = len(service.quarantined)
     res.slo_report = compute_slo(res.latencies_ms, res.phases, cfg.slo_ms)
     res.deadline_miss_rate = res.slo_report.overall.miss_rate
     res.wall_s = _time.perf_counter() - t_start

@@ -71,8 +71,8 @@ from __future__ import annotations
 import itertools
 import time
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Deque, List, Optional
+from dataclasses import dataclass, field, replace
+from typing import Deque, List, Optional, Tuple
 
 from repro.core.index import split_build_pages
 
@@ -124,6 +124,10 @@ class BuildQuantum:
     # ONCE (parallel machines).  An explicit replica id targets that
     # replica's catalog alone (divergent tuning).
     replica: Optional[int] = None
+    # Fault-injection retry counter: how many apply attempts of this
+    # quantum have already failed.  Always 0 on freshly planned
+    # quanta; the build lane bumps it when re-queueing a failed apply.
+    attempt: int = 0
 
 
 @dataclass
@@ -186,6 +190,9 @@ class BuildService:
         tuner,
         quantum_pages: Optional[int] = None,
         max_queue_depth: Optional[int] = None,
+        injector=None,
+        max_attempts: int = 4,
+        backoff_ms: float = 4.0,
     ):
         self.db = db
         self.tuner = tuner
@@ -201,6 +208,28 @@ class BuildService:
         # window instead of competing with a backlogged read path.
         self.paused: bool = False
         self.shed_quanta: int = 0
+        # Fault-injected apply retry (repro.faults.FaultInjector):
+        # each apply attempt consults ``injector.build_fault()``
+        # BEFORE touching the catalog, so a failed attempt applies
+        # nothing and the re-queued quantum is idempotent by
+        # construction.  Failed quanta wait out an exponential backoff
+        # (``backoff_ms * 2**attempt`` on the simulated clock) in
+        # ``retry_queue`` -- a separate queue, so ``drain``'s
+        # whole-queue loop terminates -- and quanta that fail
+        # ``max_attempts`` times are quarantined: their index's
+        # ``building`` flag is cleared, which releases its budget
+        # share through the next decide's ``allocate_cycle_budget``.
+        # With ``injector.recovery`` off a failed quantum is simply
+        # dropped (the no-retry baseline).
+        self.injector = injector
+        self.max_attempts = max_attempts
+        self.backoff_ms = backoff_ms
+        self.retry_queue: List[Tuple[float, int, BuildQuantum]] = []
+        self._retry_seq = 0
+        self.failed_applies: int = 0
+        self.retried_quanta: int = 0
+        self.dropped_quanta: int = 0
+        self.quarantined: List[BuildQuantum] = []
 
     # -- decide: enqueue the cycle's build work --------------------------
     def decide(self, idle: bool = False) -> float:
@@ -236,16 +265,72 @@ class BuildService:
 
     # -- apply: drain quanta ---------------------------------------------
     def pending(self) -> int:
+        """Applicable quanta right now: due retries are admitted to
+        the main queue first, but not-yet-due retries are NOT counted
+        -- callers loop on ``pending()`` (idle-credit drains, throttle
+        ladders) and a count that includes work which cannot start
+        before a future backoff deadline would spin them forever."""
+        self._admit_due_retries()
         return len(self.queue)
+
+    def _admit_due_retries(self) -> None:
+        """Move retry quanta whose backoff deadline has passed (on the
+        simulated clock) back onto the main queue, oldest deadline
+        first (ties by re-queue sequence: deterministic)."""
+        if not self.retry_queue:
+            return
+        now = getattr(self.db, "clock_ms", 0.0)
+        due = [e for e in self.retry_queue if e[0] <= now]
+        if not due:
+            return
+        self.retry_queue = [e for e in self.retry_queue if e[0] > now]
+        for _, _, quantum in sorted(due, key=lambda e: (e[0], e[1])):
+            self.queue.append(quantum)
+
+    def _on_build_failure(self, quantum: BuildQuantum) -> None:
+        """A fault-injected apply attempt failed (nothing was applied).
+        Recovery on: re-queue with exponential backoff, quarantining
+        after ``max_attempts`` total failures; recovery off: drop."""
+        self.failed_applies += 1
+        if self.injector is None or not self.injector.recovery:
+            self.dropped_quanta += 1
+            return
+        nxt = replace(quantum, attempt=quantum.attempt + 1)
+        if nxt.attempt >= self.max_attempts:
+            self.quarantined.append(nxt)
+            self._quarantine_index(nxt)
+            return
+        self.retried_quanta += 1
+        delay = self.backoff_ms * (2.0 ** quantum.attempt)
+        now = getattr(self.db, "clock_ms", 0.0)
+        self.retry_queue.append((now + delay, self._retry_seq, nxt))
+        self._retry_seq += 1
+
+    def _quarantine_index(self, quantum: BuildQuantum) -> None:
+        """Permanently-failing quantum: stop building its index.
+        Clearing ``building`` releases the index's budget share via
+        the tuner's next ``allocate_cycle_budget`` pass and makes any
+        still-queued sibling quanta stale no-ops at apply time."""
+        targets = getattr(self.db, "build_targets", None)
+        dbs = targets(quantum.replica) if targets is not None else (self.db,)
+        for d in dbs:
+            bi = d.indexes.get(quantum.index_name)
+            if bi is not None and bi.building:
+                bi.building = False
 
     def apply_next(self) -> float:
         """Apply the oldest queued quantum; returns its work units
-        (0.0 on an empty queue or a stale quantum).  Every applied
-        quantum feeds the throughput model with its measured wall
-        time (pure telemetry: simulated accounting never reads it)."""
+        (0.0 on an empty queue, a stale quantum, or a fault-injected
+        failed attempt).  Every applied quantum feeds the throughput
+        model with its measured wall time (pure telemetry: simulated
+        accounting never reads it)."""
+        self._admit_due_retries()
         if not self.queue:
             return 0.0
         quantum = self.queue.popleft()
+        if self.injector is not None and self.injector.build_fault():
+            self._on_build_failure(quantum)
+            return 0.0
         t0 = time.perf_counter()
         work = apply_quantum(self.db, quantum)
         if work > 0.0:
@@ -311,9 +396,11 @@ class BuildService:
         return max(int(self.pages_per_ms * target_ms), 1)
 
     def shed_lowest_utility(self, max_keep: int) -> int:
-        """Load shedding: drop queued quanta, lowest decide-time
-        utility first (newest first on ties), until at most
-        ``max_keep`` remain.  Under overload the serving layer sheds
+        """Load shedding: drop queued quanta until at most ``max_keep``
+        remain.  Deterministic victim order: utility ascending, then
+        FIFO queue sequence (oldest first) on ties -- equal-utility
+        quanta shed in arrival order, PYTHONHASHSEED-stable like the
+        prefix-cache knapsack.  Under overload the serving layer sheds
         *tuning work*, never queries -- a dropped quantum is only a
         deferred improvement, and the next decide step re-plans any
         build that still matters.  Returns the number dropped."""
@@ -322,7 +409,7 @@ class BuildService:
             return 0
         order = sorted(
             range(len(self.queue)),
-            key=lambda i: (self.queue[i].utility, -i),
+            key=lambda i: (self.queue[i].utility, i),
         )
         victims = set(order[:drop])
         self.queue = deque(
@@ -340,7 +427,12 @@ class BuildService:
         parallel machines, so divergent lanes overlap in time and the
         boundary pays only for the slowest one.  Every legacy quantum
         sits on the single ``None`` lane, where max == sum -- the
-        deterministic-interleave bit-identity contract is untouched."""
+        deterministic-interleave bit-identity contract is untouched.
+
+        Only due retries participate (``_admit_due_retries``); a
+        quantum still waiting out its backoff stays parked, so this
+        loop terminates even when every apply attempt is failing."""
+        self._admit_due_retries()
         lane_work: dict = {}
         while self.queue:
             lane = self.queue[0].replica

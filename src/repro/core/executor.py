@@ -162,6 +162,13 @@ class Database:
         self.crack_on_scan: bool = False
         self.crack_pages_per_scan: int = 8
         self.index_decay: bool = False
+        # Fault injection (repro.faults.FaultInjector): consulted once
+        # per scan dispatch for transient-error retries and straggler
+        # latency.  Faults perturb latency ONLY -- results, costs and
+        # visibility are computed before the perturbation, so a seeded
+        # schedule degrades responsiveness without ever changing what
+        # a query returns.  None (the default) skips every consult.
+        self.fault_injector = None
         self._round_robin_cache: Dict[str, bool] = {}
         self._zone_maps: Dict[tuple, tuple] = {}
         self.planner = QueryPlanner(self)
@@ -419,9 +426,18 @@ class Database:
             count, join_cost, join_used = self._exec_join(q, r)
             cost += join_cost
             used = used or join_used
+        lat_ms = cost * self.time_per_unit_ms
+        if self.fault_injector is not None:
+            # Transient errors re-issue the dispatch (its latency is
+            # paid again per retry); stragglers add flat extra time.
+            # Guarded so a fault-free draw leaves lat_ms untouched
+            # bit for bit.
+            retries, extra_ms = self.fault_injector.scan_fault()
+            if retries or extra_ms:
+                lat_ms += retries * lat_ms + extra_ms
         return ExecStats(
             cost_units=cost,
-            latency_ms=cost * self.time_per_unit_ms,
+            latency_ms=lat_ms,
             wall_s=wall,
             used_index=used,
             agg_sum=int(r.agg_sum),
@@ -585,6 +601,10 @@ class Database:
             # pos -> (sum, count, pages, entries, start_page,
             # wall_share, tier)
             raw: Dict[int, tuple] = {}
+            # pos -> (retries, straggler-share ms).  One fault draw
+            # per GROUP dispatch (the dispatch is the fault domain);
+            # its straggler latency is shared evenly across members.
+            fault_by_pos: Dict[int, tuple] = {}
             for group_key, members in groups.items():
                 table_name, attrs, agg_attr, _path, _idx = group_key
                 t = self.tables[table_name]
@@ -612,6 +632,12 @@ class Database:
                 # next (outside the timed region: quantum work must
                 # not be charged to the burst's measured wall time).
                 self.engine.dispatch_complete()
+                if self.fault_injector is not None:
+                    retries, extra_ms = self.fault_injector.scan_fault()
+                    if retries or extra_ms:
+                        share = extra_ms / len(members)
+                        for pos, _q, _plan in members:
+                            fault_by_pos[pos] = (retries, share)
                 agg_sums = np.asarray(r.agg_sum)
                 counts = np.asarray(r.count)
                 pages = np.asarray(r.pages_scanned)
@@ -659,9 +685,13 @@ class Database:
             used = bi_q is not None
             if used:
                 bi_q.last_used_ms = self.clock_ms
+            lat_ms = cost * self.time_per_unit_ms
+            if pos in fault_by_pos:
+                retries, share = fault_by_pos[pos]
+                lat_ms += retries * lat_ms + share
             stats = ExecStats(
                 cost_units=cost,
-                latency_ms=cost * self.time_per_unit_ms,
+                latency_ms=lat_ms,
                 wall_s=wall,
                 used_index=used,
                 agg_sum=agg_sum,

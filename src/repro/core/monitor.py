@@ -8,6 +8,7 @@ whether an index served the access path.  Snapshots over the last
 (b) the per-attribute-set access statistics that drive candidate
 index enumeration.
 """
+
 from __future__ import annotations
 
 from collections import Counter, deque
@@ -23,22 +24,22 @@ AttrSet = Tuple[int, ...]
 class QueryRecord:
     """One executed statement, as seen by the monitor."""
 
-    kind: str                 # 'scan' | 'update' | 'insert'
+    kind: str  # 'scan' | 'update' | 'insert'
     table: str
-    pred_attrs: AttrSet       # attributes in WHERE predicates (ordered)
+    pred_attrs: AttrSet  # attributes in WHERE predicates (ordered)
     accessed_attrs: AttrSet = ()  # predicates + projection + aggregate
     selectivity: float = 0.0  # measured match fraction (scans/updates)
-    tuples_scanned: int = 0   # measured rows touched by the access path
+    tuples_scanned: int = 0  # measured rows touched by the access path
     used_index: bool = False  # True if an index served the access path
-    rows_modified: int = 0    # for mutators
-    ts_ms: float = 0.0        # simulated wall clock
-    template: str = ""        # benchmark template id (diagnostics only)
-    shard_pages: Tuple[int, ...] = ()  # pages this statement scanned per
-                                       # shard (shard-aware tuning only;
-                                       # () on unsharded/legacy runs)
-    pred_ranges: Tuple = ()   # (attr, lo, hi) per range predicate --
-                              # the hot-range build scheduler's value
-                              # signal (zone maps map these to pages)
+    rows_modified: int = 0  # for mutators
+    ts_ms: float = 0.0  # simulated wall clock
+    template: str = ""  # benchmark template id (diagnostics only)
+    # Pages this statement scanned per shard (shard-aware tuning only;
+    # () on unsharded/legacy runs).
+    shard_pages: Tuple[int, ...] = ()
+    # (attr, lo, hi) per range predicate -- the hot-range build
+    # scheduler's value signal (zone maps map these to pages).
+    pred_ranges: Tuple = ()
 
 
 @dataclass
@@ -100,12 +101,16 @@ class WorkloadMonitor:
         return c
 
     def scan_records(self, table: str) -> Iterable[QueryRecord]:
-        return [r for r in self.records
-                if r.table == table and r.kind == "scan"]
+        return [
+            r for r in self.records if r.table == table and r.kind == "scan"
+        ]
 
     def mutator_records(self, table: str) -> Iterable[QueryRecord]:
-        return [r for r in self.records
-                if r.table == table and r.kind in ("update", "insert")]
+        return [
+            r
+            for r in self.records
+            if r.table == table and r.kind in ("update", "insert")
+        ]
 
     def tables(self) -> Iterable[str]:
         return sorted({r.table for r in self.records})

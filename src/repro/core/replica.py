@@ -37,6 +37,23 @@ the window) and how the cycle's page budget is shared across lanes
 (``cost_model.allocate_cycle_budget`` over per-lane demand), never the
 data plane: results stay exact because every replica holds identical
 tables, and routing only picks who serves.
+
+Failover (repro.faults)
+-----------------------
+With a ``fault_injector`` attached, every set-level operation first
+polls the outage schedule.  While a replica is DOWN (recovery on):
+routing skips it; mutations fan out to the up replicas and append
+``("mut", base_clock, query)`` entries to the down replica's catch-up
+log; mirrored monitor records buffer as ``("rec", record)`` entries.
+Rejoin replays the log in order -- each mutation at its ORIGINAL base
+clock, with the replica's drain hook disabled exactly like a live
+secondary application -- so the rejoined replica's MVCC timestamps,
+table pytrees and monitor window are bit-identical to a replica that
+never crashed.  All replicas down at once raises the typed
+``ClusterUnavailable``.  With recovery OFF a crash is permanent and
+the router stays blind: statements routed to a dead replica drop
+(``dropped_statements``) -- the no-failover baseline the chaos
+benchmark compares against.
 """
 
 from __future__ import annotations
@@ -50,6 +67,7 @@ from repro.core import cost_model as cm
 from repro.core.build_service import BuildQuantum, CyclePlan, apply_quantum
 from repro.core.executor import Database
 from repro.core.tuner import PredictiveTuner
+from repro.faults import ClusterUnavailable
 
 
 def candidate_signature(rec) -> Optional[frozenset]:
@@ -186,12 +204,23 @@ class ReplicaSet:
             d.crack_on_scan = db.crack_on_scan
             d.crack_pages_per_scan = db.crack_pages_per_scan
             d.index_decay = db.index_decay
+            d.fault_injector = db.fault_injector
             for rec in db.monitor.records:
                 d.monitor.observe(rec)
             self.dbs.append(d)
         self.engine = _EngineProxy(self.dbs)
         # One routed replica id per scan / read burst, in order.
         self.routed_queries: List[int] = []
+        # Failover state: DOWN flags, per-replica catch-up logs
+        # (("mut", base_clock_ms, query) | ("rec", monitor_record)
+        # entries, in arrival order), and availability telemetry.
+        self._down: List[bool] = [False] * n_replicas
+        self._down_since: List[float] = [0.0] * n_replicas
+        self._catchup: List[list] = [[] for _ in range(n_replicas)]
+        self.downtime_ms: List[float] = [0.0] * n_replicas
+        self.dropped_statements = 0
+        self.failover_routes = 0
+        self.rejoins = 0
 
     # -- replica plumbing ------------------------------------------------
     @property
@@ -217,30 +246,120 @@ class ReplicaSet:
         """Copy the last ``k`` monitor records of replica ``src`` into
         every other replica's monitor: the workload window is GLOBAL
         (every tuner sees the whole workload; clustering -- not
-        visibility -- is what diverges the lanes)."""
+        visibility -- is what diverges the lanes).  Records for a DOWN
+        replica buffer in its catch-up log (recovery on) so the window
+        replays in order at rejoin."""
         if k <= 0:
             return
+        inj = self.fault_injector
         recs = list(self.dbs[src].monitor.records)[-k:]
         for i, d in enumerate(self.dbs):
             if i == src:
                 continue
+            if self._down[i]:
+                if inj is not None and inj.recovery:
+                    self._catchup[i].extend(("rec", rec) for rec in recs)
+                continue
             for rec in recs:
                 d.monitor.observe(rec)
 
+    # -- fault injection: outage polling + rejoin replay -----------------
+    def frac_up(self) -> float:
+        """Fraction of replicas currently serving -- the capacity
+        signal degraded-mode admission scales SLO headroom by."""
+        n = len(self.dbs)
+        return (n - sum(self._down)) / n
+
+    def _poll_faults(self) -> None:
+        """Advance outage state to the current simulated clock: mark
+        replicas entering an outage DOWN, replay catch-up logs for
+        replicas whose outage has ended.  No injector (or no outages)
+        is a no-op, so the fault-free engine never pays for this."""
+        inj = self.fault_injector
+        if inj is None or not inj.schedule.outages:
+            return
+        now = self.dbs[0].clock_ms
+        for r in range(len(self.dbs)):
+            down = inj.replica_down(r, now)
+            if down and not self._down[r]:
+                self._down[r] = True
+                self._down_since[r] = now
+            elif self._down[r] and not down:
+                self._rejoin(r, now)
+
+    def _rejoin(self, r: int, now_ms: float) -> None:
+        """Replay replica ``r``'s catch-up log and mark it UP.
+
+        Each logged mutation re-executes at its ORIGINAL base clock
+        with the drain hook disabled -- exactly how a live secondary
+        applied it -- so MVCC begin/end timestamps, and therefore the
+        stored pytrees, come out bit-identical to never having
+        crashed.  Buffered monitor records then replay in order, which
+        reproduces the same bounded window a live replica would hold.
+        ``now_ms`` is the set-level clock at poll time; the replica
+        rejoins at it (replay clock motion is scratch state)."""
+        d = self.dbs[r]
+        hook = d.engine.after_dispatch
+        d.engine.after_dispatch = None
+        try:
+            for entry in self._catchup[r]:
+                if entry[0] == "mut":
+                    _, base_ms, q = entry
+                    d.clock_ms = base_ms
+                    d.execute(q, observe=False)
+                else:
+                    d.monitor.observe(entry[1])
+        finally:
+            d.engine.after_dispatch = hook
+        self._catchup[r] = []
+        d.clock_ms = now_ms
+        self._down[r] = False
+        self.downtime_ms[r] += now_ms - self._down_since[r]
+        self.rejoins += 1
+
+    def _eligible(self) -> List[int]:
+        """Replica ids routing may pick.  Failover (recovery on) skips
+        DOWN replicas and raises the typed ``ClusterUnavailable`` when
+        none is left; recovery off keeps the router blind -- a dead
+        replica stays routable and statements sent to it drop."""
+        inj = self.fault_injector
+        if inj is None or not inj.recovery or not any(self._down):
+            return list(range(len(self.dbs)))
+        up = [r for r in range(len(self.dbs)) if not self._down[r]]
+        if not up:
+            raise ClusterUnavailable(
+                f"all {len(self.dbs)} replicas down at clock "
+                f"{self.dbs[0].clock_ms:.3f} ms"
+            )
+        self.failover_routes += 1
+        return up
+
     # -- routing ---------------------------------------------------------
     def route_scan(self, q) -> int:
-        """Cheapest replica for one scan under the current catalogs
-        (what-if planner cost; deterministic tie-break by id)."""
+        """Cheapest eligible replica for one scan under the current
+        catalogs (what-if planner cost; deterministic tie-break by
+        id).  A single candidate -- one-replica set, or one survivor
+        under failover -- short-circuits without consulting any
+        planner: the cost loop cannot change a one-horse race."""
+        elig = self._eligible()
+        if len(elig) == 1:
+            return elig[0]
         return min(
-            range(len(self.dbs)),
+            elig,
             key=lambda r: (self.dbs[r].planner.estimate_scan_cost(q), r),
         )
 
     def route_burst(self, queries) -> int:
-        """Cheapest replica for a whole read burst (summed what-if
-        cost -- the burst is one dispatch unit and is not split)."""
+        """Cheapest eligible replica for a whole read burst (summed
+        what-if cost -- the burst is one dispatch unit and is not
+        split).  Short-circuits deterministically on a single eligible
+        replica or an empty query list (nothing to cost: the lowest
+        eligible id serves)."""
+        elig = self._eligible()
+        if len(elig) == 1 or not queries:
+            return elig[0]
         return min(
-            range(len(self.dbs)),
+            elig,
             key=lambda r: (
                 sum(
                     self.dbs[r].planner.estimate_scan_cost(q)
@@ -252,28 +371,53 @@ class ReplicaSet:
 
     # -- execution (Database surface) ------------------------------------
     def execute(self, q, observe: bool = True):
+        self._poll_faults()
         if q.kind == "scan":
             r = self.route_scan(q)
             self.routed_queries.append(r)
+            if self._down[r]:
+                # Recovery off: the router is blind to the crash and
+                # the dead replica serves nothing -- the scan drops
+                # (None stats; drivers count it against availability).
+                self.dropped_statements += 1
+                return None
             stats = self.dbs[r].execute(q, observe=observe)
             if observe:
                 self._mirror_records(r, 2 if q.join_table is not None else 1)
             self._sync_clock(self.dbs[r].clock_ms)
             return stats
-        # Mutation: fan out to every replica at the same base clock so
-        # MVCC timestamps (and therefore the stored data) stay
-        # bit-identical; the set's clock advances by replica 0's
-        # latency -- replicas apply the write in parallel.
+        # Mutation: fan out to every UP replica at the same base clock
+        # so MVCC timestamps (and therefore the stored data) stay
+        # bit-identical; a DOWN replica logs the mutation for rejoin
+        # replay at this exact base clock (recovery on) or misses it
+        # forever (recovery off).  The set's clock advances by the
+        # primary's latency -- replicas apply the write in parallel.
+        inj = self.fault_injector
+        ups = [i for i in range(len(self.dbs)) if not self._down[i]]
+        if not ups:
+            if inj is not None and inj.recovery:
+                raise ClusterUnavailable(
+                    f"all {len(self.dbs)} replicas down at clock "
+                    f"{self.dbs[0].clock_ms:.3f} ms"
+                )
+            self.dropped_statements += 1
+            return None
         base = self.dbs[0].clock_ms
         stats0 = None
+        primary = ups[0]
         for i, d in enumerate(self.dbs):
+            if self._down[i]:
+                if inj is not None and inj.recovery:
+                    self._catchup[i].append(("mut", base, q))
+                continue
             d.clock_ms = base
-            if i == 0:
+            if i == primary:
                 stats0 = d.execute(q, observe=observe)
                 continue
             # Secondary applications are replays: no observation (the
             # record is mirrored below) and no extra drain opportunity
-            # (the set-level dispatch already fired one on replica 0).
+            # (the set-level dispatch already fired one on the
+            # primary).
             hook = d.engine.after_dispatch
             d.engine.after_dispatch = None
             try:
@@ -281,7 +425,7 @@ class ReplicaSet:
             finally:
                 d.engine.after_dispatch = hook
         if observe:
-            self._mirror_records(0, 1)
+            self._mirror_records(primary, 1)
         self._sync_clock(base + stats0.latency_ms)
         return stats0
 
@@ -297,8 +441,15 @@ class ReplicaSet:
         def flush():
             if not pending:
                 return
+            self._poll_faults()
             r = self.route_burst([q for _, q in pending])
             self.routed_queries.append(r)
+            if self._down[r]:
+                # Recovery off: the whole burst was routed to a dead
+                # replica and drops (positions keep their None stats).
+                self.dropped_statements += len(pending)
+                pending.clear()
+                return
             d = self.dbs[r]
             res = d.execute_batch(
                 [q for _, q in pending],
@@ -380,6 +531,7 @@ class ReplicaSet:
     crack_on_scan = _fan_flag("crack_on_scan")
     crack_pages_per_scan = _fan_flag("crack_pages_per_scan")
     index_decay = _fan_flag("index_decay")
+    fault_injector = _fan_flag("fault_injector")
     del _fan_flag
 
 

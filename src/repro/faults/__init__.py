@@ -1,0 +1,67 @@
+"""Deterministic fault injection for the simulated-clock engine.
+
+The paper's promise is that continuous physical-design change keeps a
+DBMS fast *through* disruption -- which is only testable if the
+reproduction can be disrupted.  This package is the failure model:
+
+* ``schedule.py`` -- ``FaultSchedule``, a frozen, seeded description
+  of every fault a run will experience (replica crash/rejoin epochs,
+  transient scan errors, straggler dispatch latency, build-quantum
+  failures), plus deterministic generators for building one.
+* ``injector.py`` -- ``FaultInjector``, the runtime oracle the engine
+  consults: "is replica r down at clock t", "does this scan dispatch
+  hit a transient error / a straggler", "does this build attempt
+  fail".  Every answer is a counter-based hash of (seed, category,
+  sequence number): no wall time, no ``random`` module, no
+  PYTHONHASHSEED dependence -- the same schedule replays the same
+  faults bit for bit.
+
+The hard invariant the chaos harness (tests/test_faults.py) enforces:
+faults perturb *latency and availability only*.  MVCC visibility
+depends on execution order, never on clock values, so a fault-delayed
+clock cannot change what any scan sees; replica failover replays the
+catch-up log at the original base clocks, so rejoined replicas hold
+bit-identical tables.  With recovery enabled, ANY schedule yields
+query results bit-identical to the fault-free run; a zero-fault
+schedule is bit-identical to the pre-fault engine in results AND
+cost/clock/monitor accounting.
+"""
+
+from __future__ import annotations
+
+from repro.faults.injector import FaultInjector
+from repro.faults.schedule import (
+    FaultSchedule,
+    ReplicaOutage,
+    chaos_schedule,
+    staggered_outages,
+    unit_hash,
+)
+
+
+class FaultError(RuntimeError):
+    """Base class for typed fault-path errors."""
+
+
+class ClusterUnavailable(FaultError):
+    """Routing found zero eligible replicas: every replica is DOWN at
+    once.  Raised instead of an opaque crash so serving layers can
+    catch the condition by type."""
+
+
+class ReplicaUnavailable(FaultError):
+    """A statement was routed to a DOWN replica with recovery
+    disabled (the no-failover baseline drops such statements)."""
+
+
+__all__ = [
+    "ClusterUnavailable",
+    "FaultError",
+    "FaultInjector",
+    "FaultSchedule",
+    "ReplicaOutage",
+    "ReplicaUnavailable",
+    "chaos_schedule",
+    "staggered_outages",
+    "unit_hash",
+]

@@ -251,12 +251,21 @@ def slo_pressure(
     service_ms: float,
     slo_ms: Optional[float],
     headroom: float = 0.5,
+    capacity_frac: float = 1.0,
 ) -> bool:
     """Load-aware throttle predicate: True when the estimated wait to
     drain the backlog (``depth`` requests at the measured per-query
     ``service_ms``) eats more than ``headroom`` of the SLO.  With no
     SLO, or before any service-time measurement, there is no pressure
-    signal and the build lane runs free."""
+    signal and the build lane runs free.
+
+    ``capacity_frac`` is the degraded-mode hook: the fraction of
+    serving capacity still up (``ReplicaSet.frac_up`` under replica
+    outages).  Lost capacity shrinks the effective headroom
+    proportionally, so the same backlog trips the urgent-drain
+    throttle EARLIER while a replica is down -- the serving ladder
+    reacts to the outage before the tail does.  At the default 1.0
+    the predicate is bit-identical to the healthy one."""
     if slo_ms is None or service_ms <= 0.0:
         return False
-    return depth * service_ms > headroom * slo_ms
+    return depth * service_ms > headroom * capacity_frac * slo_ms

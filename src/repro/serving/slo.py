@@ -68,11 +68,22 @@ def digest(
 
 @dataclass(frozen=True)
 class SloReport:
-    """Per-phase + overall open-loop latency/SLO report."""
+    """Per-phase + overall open-loop latency/SLO report.
+
+    The fault-injection fields default to the healthy run (full
+    availability, zero downtime, nothing dropped), so fault-free
+    reports are unchanged: ``availability`` is the fraction of offered
+    statements that were served (dropped statements -- scans routed to
+    a crashed replica with recovery off -- are the complement),
+    ``downtime_ms`` the summed per-replica outage time on the
+    simulated clock."""
 
     slo_ms: Optional[float]
     overall: SloSlice
     phases: Tuple[Tuple[int, SloSlice], ...]  # (phase_id, digest), sorted
+    availability: float = 1.0
+    downtime_ms: float = 0.0
+    dropped: int = 0
 
     def phase(self, phase_id: int) -> SloSlice:
         for pid, s in self.phases:
@@ -83,6 +94,9 @@ class SloReport:
     def summary(self) -> Dict[str, object]:
         out: Dict[str, object] = {"slo_ms": self.slo_ms}
         out.update(self.overall.summary())
+        out["availability"] = round(self.availability, 6)
+        out["downtime_ms"] = round(self.downtime_ms, 5)
+        out["dropped"] = self.dropped
         out["phases"] = {pid: s.summary() for pid, s in self.phases}
         return out
 
@@ -91,9 +105,13 @@ def compute_slo(
     latencies_ms: Sequence[float],
     phases: Sequence[int],
     slo_ms: Optional[float] = None,
+    availability: float = 1.0,
+    downtime_ms: float = 0.0,
+    dropped: int = 0,
 ) -> SloReport:
     """Build the per-phase SLO report from parallel latency/phase
-    sequences (the runner's ``latencies_ms`` / ``phases``)."""
+    sequences (the runner's ``latencies_ms`` / ``phases``); the
+    optional fault fields flow through verbatim."""
     lat = np.asarray(latencies_ms, np.float64)
     ph = np.asarray(phases, np.int64)
     if lat.shape != ph.shape:
@@ -104,4 +122,11 @@ def compute_slo(
         (int(p), digest(lat[ph == p], slo_ms))
         for p in sorted(set(ph.tolist()))
     )
-    return SloReport(slo_ms, digest(lat, slo_ms), per_phase)
+    return SloReport(
+        slo_ms,
+        digest(lat, slo_ms),
+        per_phase,
+        availability=availability,
+        downtime_ms=downtime_ms,
+        dropped=dropped,
+    )

@@ -334,7 +334,8 @@ def _queued_service(utilities):
 def test_shed_lowest_utility_ranking():
     svc = _queued_service([5.0, 1.0, 3.0, 1.0, 4.0])
     assert svc.shed_lowest_utility(3) == 2
-    # both 1.0-utility quanta go, newest tie first; order preserved
+    # both 1.0-utility quanta go (FIFO on ties: oldest first); the
+    # survivors keep their queue order
     assert [q.utility for q in svc.queue] == [5.0, 3.0, 4.0]
     assert svc.shed_quanta == 2
     assert svc.shed_lowest_utility(5) == 0  # under cap: no-op
